@@ -1,0 +1,74 @@
+"""Paper Fig. 4 / App. I: wall-clock timings of the condensed representation.
+
+Compares, on the paper's own benchmark layer (ViT-B/16 final MLP linear,
+3072 -> 768) at several sparsities:
+
+  dense        x @ W                       (jit, XLA CPU)
+  unstructured x @ (mask * W)  masked-dense (the CSR stand-in available in XLA)
+  structured   ablated-neuron column drop (Fig. 4 'structured')
+  condensed    Pallas constant fan-in kernel (interpret mode on CPU)
+
+interpret-mode Pallas timings are NOT meaningful wall-clock — on this CPU
+container the kernel runs as a python interpreter loop. We therefore ALSO
+report the analytic byte ratio (weight bytes touched vs dense), which is the
+quantity that transfers to the TPU target (decode is bandwidth-bound).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2] * 1e6  # median us
+
+
+def run(batch: int = 1):
+    d_in, n_out = 3072, 768  # the paper's ViT-B/16 benchmark layer
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (batch, d_in))
+    w_dense = jax.random.normal(jax.random.fold_in(key, 1), (d_in, n_out))
+
+    dense_fn = jax.jit(lambda x, w: x @ w)
+    t_dense = _time(dense_fn, x, w_dense)
+    rows = [(f"condensed/dense/b{batch}", t_dense, "bytes_ratio=1.00")]
+
+    for s in (0.8, 0.9, 0.95, 0.99):
+        k = max(1, round((1 - s) * d_in))
+        mask = topology.random_constant_fan_in_mask(
+            jax.random.fold_in(key, 2), d_in, n_out, k)
+        w = w_dense * mask
+        vals, idx = topology.dense_to_condensed(w, mask, k)
+        # ~30% of neurons ablated at high sparsity (paper Fig. 3b shape)
+        active = (jnp.arange(n_out) % 10) < (7 if s >= 0.95 else 9)
+
+        masked_fn = jax.jit(lambda x, w, m: x @ (w * m))
+        t_unstruct = _time(masked_fn, x, w_dense, mask)
+        struct_fn = jax.jit(ops.structured_dense)
+        t_struct = _time(struct_fn, x, w, active)
+        cond_fn = jax.jit(lambda x, v, i: ref.condensed_matmul_ref(x, v, i))
+        t_cond_ref = _time(cond_fn, x, vals, idx)
+
+        dense_bytes = d_in * n_out * 4
+        cond_bytes = n_out * k * (4 + 4)  # values + indices
+        rows += [
+            (f"condensed/unstructured@{int(s*100)}/b{batch}", t_unstruct,
+             f"bytes_ratio={1.0 + 0.25:.2f}"),  # mask bytes on top of dense
+            (f"condensed/structured@{int(s*100)}/b{batch}", t_struct,
+             f"bytes_ratio={float(jnp.mean(active)):.2f}"),
+            (f"condensed/condensed@{int(s*100)}/b{batch}", t_cond_ref,
+             f"bytes_ratio={cond_bytes/dense_bytes:.3f} "
+             f"speedup_vs_dense={t_dense/t_cond_ref:.2f}x"),
+        ]
+    return rows

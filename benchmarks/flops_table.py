@@ -1,0 +1,51 @@
+"""Paper Table 5: training / inference FLOPs of the sparse model vs dense.
+
+Computed with the paper's methodology (core/flops.py) over the qwen3-1.7b
+linear layers under the ERK distribution actually solved by the registry.
+"""
+import time
+
+import dataclasses
+
+from repro import configs
+from repro.core import flops as F
+from repro.sparse import registry as REG
+
+
+def _layers(cfg):
+    reg = REG.build_registry(cfg)
+    out = []
+    for s in reg:
+        out.append(F.LinearCost(s.name, s.d_in, s.d_out, density=s.density,
+                                n_replicas=s.n_replicas))
+    # dense (never-sparsified) layers: QKV + embeddings head
+    out.append(F.LinearCost("qkv", cfg.d_model,
+                            cfg.q_dim + 2 * cfg.kv_dim, 1.0,
+                            n_replicas=cfg.n_layers))
+    out.append(F.LinearCost("lm_head", cfg.d_model, cfg.vocab_size, 1.0))
+    return out
+
+
+def run():
+    rows = []
+    base = configs.get_config("qwen3-1.7b")
+    tokens = 4096 * 256          # one train_4k step
+    steps = 10_000
+    dense_cfg = base.replace(sparsity=dataclasses.replace(base.sparsity,
+                                                          sparsity=0.0))
+    dense_layers = [dataclasses.replace(l, density=1.0) for l in _layers(dense_cfg)]
+    dense_inf = F.inference_flops(dense_layers, 1)
+    dense_train = F.training_flops(dense_layers, tokens, steps)
+    rows.append(("flops/dense", 0.0,
+                 f"train={dense_train:.3e} inference_per_token={dense_inf:.3e}"))
+    for s in (0.8, 0.9, 0.95, 0.99):
+        t0 = time.perf_counter()
+        cfg = base.replace(sparsity=dataclasses.replace(base.sparsity, sparsity=s))
+        layers = _layers(cfg)
+        inf = F.inference_flops(layers, 1)
+        train = F.training_flops(layers, tokens, steps)
+        rows.append((f"flops/sparsity{int(s*100)}",
+                     (time.perf_counter() - t0) * 1e6,
+                     f"train={train:.3e} inf_per_tok={inf:.3e} "
+                     f"ratio_vs_dense={inf/dense_inf:.3f}"))
+    return rows

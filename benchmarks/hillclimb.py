@@ -1,0 +1,74 @@
+"""§Perf per-pair hillclimb driver.
+
+Selected pairs (from the baseline roofline table):
+  1. qwen3-1.7b  x decode_32k — most representative of the paper (serving
+     with sparse weights): masked-dense vs condensed representation, and the
+     batch-size crossover the paper's Fig. 4 predicts.
+  2. mamba2-130m x prefill_32k — worst compute/roofline fraction.
+  3. mistral-large-123b x train_4k — most collective-bound cell.
+
+Each entry re-measures under the v2 HLO meter (dus-rooted fusion fix) so
+before/after are comparable. Run:  python -m benchmarks.hillclimb [--pair N]
+"""
+import argparse
+import json
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", type=int, default=0, help="0 = all")
+    ap.add_argument("--out", default="results_hillclimb.jsonl")
+    args = ap.parse_args(argv)
+
+    from repro import configs
+    from repro.configs.base import ShapeConfig
+    from repro.launch import dryrun as DR
+
+    # custom online-ish decode shape for the pair-1 crossover experiment
+    configs.SHAPES["decode_32k_b16"] = ShapeConfig("decode_32k_b16", 32_768, 16,
+                                                   "decode")
+
+    runs = []
+    if args.pair in (0, 1):
+        runs += [
+            ("p1.base", "qwen3-1.7b", "decode_32k", "serve", {}),
+            ("p1.condensed", "qwen3-1.7b", "decode_32k", "serve_cond", {}),
+            ("p1.b16.base", "qwen3-1.7b", "decode_32k_b16", "serve", {}),
+            ("p1.b16.condensed", "qwen3-1.7b", "decode_32k_b16", "serve_cond", {}),
+        ]
+    if args.pair in (0, 2):
+        runs += [
+            ("p2.base", "mamba2-130m", "prefill_32k", "serve", {}),
+            ("p2.chunk512", "mamba2-130m", "prefill_32k", "serve",
+             {"ssd_chunk": 512}),
+            ("p2.chunk1024", "mamba2-130m", "prefill_32k", "serve",
+             {"ssd_chunk": 1024}),
+        ]
+    if args.pair in (0, 3):
+        runs += [
+            ("p3.base", "mistral-large-123b", "train_4k", "train", {}),
+            ("p3.bigchunks", "mistral-large-123b", "train_4k", "train",
+             {"ce_chunk": 2048, "attn_q_chunk": 2048, "attn_kv_chunk": 2048}),
+        ]
+
+    for label, arch, shape, prog, over in runs:
+        cfg = configs.get_config(arch)
+        if over:
+            cfg = cfg.replace(**over)
+        try:
+            r = DR.run_cell(arch, shape, False, program=prog, cfg=cfg)
+            r["label"] = label
+            with open(args.out, "a") as f:
+                f.write(json.dumps(r) + "\n")
+            t = r["roofline"]
+            print(f"[hillclimb] {label}: comp={t['compute_s']*1e3:.1f}ms "
+                  f"mem={t['memory_s']*1e3:.1f}ms coll={t['collective_s']*1e3:.1f}ms "
+                  f"peak={r['peak_bytes']/2**30:.1f}GB", flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"[hillclimb] {label} FAILED: {e}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+  variance        — Fig. 1b  output-norm variance theory vs simulation
+  flops_table     — Table 5  sparse vs dense training/inference FLOPs
+  condensed_bench — Fig. 4   condensed vs dense/unstructured/structured layer
+  ablation_bench  — Fig. 3b  active-neuron fraction, RigL vs SRigL
+  accuracy        — Tables 1-3 proxy: method ordering on a small LM
+  gamma_sweep     — Fig. 8   gamma_sal sensitivity
+  roofline        — §Roofline aggregation of dry-run results (if present)
+
+Use --quick to cut the training-based benchmarks' budgets; --only <name>.
+"""
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (accuracy, ablation_bench, condensed_bench,
+                            flops_table, gamma_sweep, roofline, variance)
+
+    steps = 30 if args.quick else 80
+    suites = [
+        ("variance", lambda: variance.run(n_samples=500 if args.quick else 2000)),
+        ("flops_table", flops_table.run),
+        ("condensed_bench", lambda: condensed_bench.run(batch=1)
+                                    + condensed_bench.run(batch=256)),
+        ("ablation_bench", lambda: ablation_bench.run(steps=min(steps, 40))),
+        ("accuracy", lambda: accuracy.run(steps=steps)),
+        ("gamma_sweep", lambda: gamma_sweep.run(steps=min(steps, 60))),
+        ("roofline", roofline.run),
+    ]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        if args.only and args.only != name:
+            continue
+        try:
+            for row_name, us, derived in fn():
+                print(f"{row_name},{us:.1f},{derived}")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0.0,FAILED")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,51 @@
+"""Batched serving example: prefill a batch of prompts, stream greedy decode,
+and show the sliding-window ring-buffer cache in action (gemma3-style).
+
+  PYTHONPATH=src python examples/serve_batched.py [--arch gemma3-1b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch.serve import generate
+from repro.models import model as M
+from repro.sparse import registry as REG
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b", choices=configs.ALL_ARCHS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_smoke_config(args.arch)
+    if not cfg.causal:
+        raise SystemExit("encoder-only arch has no decode path")
+    key = jax.random.PRNGKey(0)
+    reg = REG.build_registry(cfg)
+    params = M.init_params(cfg, key, REG.k_fan_map(cfg, reg))
+    masks = REG.init_sparsity_state(cfg, key, reg)["masks"] if reg else {}
+
+    cache = M.init_cache(cfg, args.batch, max_len=args.prompt_len + args.gen)
+    total = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+    print(f"[serve] cache bytes: {total/1e6:.2f} MB "
+          f"(ring buffers cap local-attention layers at window="
+          f"{cfg.sliding_window or 'n/a'})")
+
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    t0 = time.perf_counter()
+    out = generate(cfg, params, masks, prompts, args.gen)
+    dt = time.perf_counter() - t0
+    print(f"[serve] {args.batch} streams x {args.gen} tokens in {dt:.2f}s")
+    for b in range(min(args.batch, 2)):
+        print(f"  stream {b}: ...{out[b, -args.gen:].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""End-to-end driver: train a ~100M-parameter sparse LM for a few hundred steps.
+
+  PYTHONPATH=src python examples/train_lm.py                  # ~20M (CPU-sized)
+  PYTHONPATH=src python examples/train_lm.py --full           # ~110M params
+  PYTHONPATH=src python examples/train_lm.py --steps 300 --ckpt /tmp/ck
+
+Uses the production Trainer (prefetch, checkpoints, straggler watchdog) with
+SRigL at 90% sparsity and the ERK distribution — the paper's recipe end to end.
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.optim.schedules import warmup_cosine
+from repro.sparse import registry as REG
+from repro.train.trainer import Trainer
+
+
+def lm_100m() -> "configs.ArchConfig":
+    """~110M-parameter qwen3-style dense transformer, SRigL @ 90%."""
+    return configs.get_config("qwen3-1.7b").replace(
+        n_layers=8, d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+        d_ff=2048, vocab_size=32_000, dtype="float32",
+        attn_q_chunk=128, attn_kv_chunk=128, ce_chunk=128,
+        sparsity=dataclasses.replace(
+            configs.get_config("qwen3-1.7b").sparsity, delta_t=25))
+
+
+def lm_20m() -> "configs.ArchConfig":
+    return lm_100m().replace(n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+                             head_dim=32, d_ff=1024, vocab_size=8_000)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="~110M params")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args(argv)
+
+    cfg = lm_100m() if args.full else lm_20m()
+    reg = REG.build_registry(cfg)
+    n_params = sum(
+        s.d_in * s.d_out * s.n_replicas for s in reg) + cfg.vocab_padded * cfg.d_model
+    print(f"[train_lm] ~{n_params/1e6:.0f}M params in sparse stacks + embeddings, "
+          f"sparsity {cfg.sparsity.sparsity:.0%} ({cfg.sparsity.method})")
+
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                       batch_size=args.batch, seed=0)
+    batches = Prefetcher((jax.tree.map(jnp.asarray, b) for b in data.iterate()),
+                         depth=2)
+    trainer = Trainer(cfg=cfg,
+                      lr_fn=warmup_cosine(3e-3, args.steps // 10, args.steps),
+                      ckpt_dir=args.ckpt or None, ckpt_every=50, log_every=10)
+    state = trainer.init_or_restore(jax.random.PRNGKey(0))
+    state = trainer.fit(state, batches, args.steps)
+    batches.close()
+
+    summary = REG.sparsity_summary(trainer.registry,
+                                   {"masks": state.masks,
+                                    "neuron_active": state.neuron_active})
+    print("[train_lm] learned structure:")
+    for name, row in summary.items():
+        print(f"  {name:20s} density={row['density']:.3f} "
+              f"active={row['active_neurons']:.2%}")
+
+
+if __name__ == "__main__":
+    main()

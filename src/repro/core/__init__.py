@@ -1,0 +1,18 @@
+"""Core of the paper's contribution: SRigL structured DST, baselines, theory."""
+from repro.core.distributions import (  # noqa: F401
+    LayerShape,
+    erk_densities,
+    fan_in_from_density,
+    realized_sparsity,
+    uniform_densities,
+)
+from repro.core.rigl import RigLSpec, RigLState, rigl_update  # noqa: F401
+from repro.core.schedule import DSTSchedule  # noqa: F401
+from repro.core.srigl import (  # noqa: F401
+    LayerState,
+    SRigLSpec,
+    UpdateStats,
+    apply_mask_for_forward,
+    init_layer_state,
+    srigl_update,
+)

@@ -1,0 +1,70 @@
+"""RigL baseline (Evci et al. 2021) — unstructured sparse-to-sparse DST.
+
+Prunes the K smallest-magnitude active weights per layer and regrows the K
+largest-|gradient| inactive positions. No structural constraint. Implemented
+with the same rank machinery as SRigL so the two are directly comparable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import saliency
+
+
+@dataclasses.dataclass(frozen=True)
+class RigLSpec:
+    name: str
+    d_in: int
+    d_out: int
+    density: float
+
+    @property
+    def target_nnz(self) -> int:
+        return max(1, round(self.density * self.d_in * self.d_out))
+
+
+class RigLState(NamedTuple):
+    mask: jax.Array  # bool (d_in, d_out)
+
+
+def init_layer_state(key: jax.Array, spec: RigLSpec) -> RigLState:
+    from repro.core import topology
+
+    return RigLState(
+        mask=topology.random_unstructured_mask(key, spec.d_in, spec.d_out, spec.target_nnz)
+    )
+
+
+def rigl_update(
+    spec: RigLSpec,
+    weight: jax.Array,
+    dense_grad: jax.Array,
+    state: RigLState,
+    drop_fraction: jax.Array,
+) -> tuple[RigLState, dict]:
+    if weight.ndim == 3:  # stacked experts
+        fn = jax.vmap(lambda w, g, m: rigl_update(spec, w, g, RigLState(m), drop_fraction))
+        st, stats = fn(weight, dense_grad, state.mask)
+        return st, stats
+
+    mask = state.mask
+    nnz = jnp.sum(mask)
+    n_prune = jnp.floor(drop_fraction * nnz).astype(jnp.int32)
+
+    survive = saliency.prune_survivors(weight, mask, n_prune)
+    grown = saliency.top_k_candidates(jnp.abs(dense_grad), ~mask, n_prune)
+    new_mask = survive | grown
+
+    stats = dict(
+        n_pruned=jnp.sum(mask & ~new_mask),
+        n_grown=jnp.sum(grown),
+        nnz=jnp.sum(new_mask),
+        # neurons RigL implicitly ablated (all incoming weights pruned) — the
+        # empirical observation motivating SRigL's explicit ablation (Fig. 3b):
+        n_ablated=jnp.sum(jnp.sum(new_mask, axis=0) == 0),
+    )
+    return RigLState(mask=new_mask), stats

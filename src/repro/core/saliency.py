@@ -1,0 +1,92 @@
+"""Shared saliency helpers for DST updates.
+
+All helpers are shape-static and traceable: counts like "top K" with a *traced*
+K are realized via rank comparisons (double argsort) instead of ``lax.top_k``,
+which requires a static k. Ranks are exact, so selected-set sizes are exact even
+with ties.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = jnp.float32(-jnp.inf)
+
+
+def descending_ranks(x: jax.Array, axis: int | None = None) -> jax.Array:
+    """Rank of each element in descending order along ``axis`` (0 = largest).
+
+    axis=None ranks over the flattened array (returned in original shape).
+    """
+    if axis is None:
+        flat = x.ravel()
+        order = jnp.argsort(-flat, stable=True)
+        ranks = jnp.empty_like(order).at[order].set(jnp.arange(flat.shape[0]))
+        return ranks.reshape(x.shape)
+    order = jnp.argsort(-x, axis=axis, stable=True)
+    ar = jnp.arange(x.shape[axis])
+    ar = ar.reshape([-1 if i == axis % x.ndim else 1 for i in range(x.ndim)])
+    ranks = jnp.empty_like(order)
+    ranks = jnp.put_along_axis(
+        ranks, order, jnp.broadcast_to(ar, x.shape), axis=axis, inplace=False
+    )
+    return ranks
+
+
+def prune_survivors(weight: jax.Array, mask: jax.Array, n_prune) -> jax.Array:
+    """Layer-wise magnitude prune: drop the ``n_prune`` smallest-|w| active weights.
+
+    Returns the survivor mask (bool, same shape). ``n_prune`` may be traced.
+    """
+    mag = jnp.where(mask, jnp.abs(weight), NEG)
+    ranks = descending_ranks(mag)  # active weights occupy ranks [0, A)
+    n_active = jnp.sum(mask)
+    return mask & (ranks < (n_active - n_prune))
+
+
+def top_k_candidates(score: jax.Array, candidates: jax.Array, n_grow) -> jax.Array:
+    """Layer-wise top-``n_grow`` of ``score`` restricted to ``candidates`` (bool)."""
+    s = jnp.where(candidates, score, NEG)
+    ranks = descending_ranks(s)
+    return candidates & (ranks < n_grow)
+
+
+def topk_threshold(values: jax.Array, candidates: jax.Array, k,
+                   iters: int = 30) -> jax.Array:
+    """Scalar threshold t with count(values > t & candidates) ~= k.
+
+    Sharding-friendly replacement for a global flattened top-k: a bisection
+    over the value range using only compare+reduce (no sort, no gather, O(1)
+    temp memory, fully SPMD-partitionable). Realized counts match k up to
+    floating-point quantile resolution (2^-iters of the value range); the
+    per-column exact selection in srigl_update restores exact counts.
+    """
+    vmax = jnp.max(jnp.where(candidates, values, 0.0))
+    lo = jnp.zeros((), values.dtype)
+    hi = vmax + 1e-6
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        c = jnp.sum((values > mid) & candidates)
+        return jnp.where(c > k, mid, lo), jnp.where(c > k, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return lo
+
+
+def select_topk_threshold(values: jax.Array, candidates: jax.Array, k,
+                          iters: int = 30) -> jax.Array:
+    """Bool mask of ~k largest ``values`` among ``candidates`` (thresholded)."""
+    t = topk_threshold(values, candidates, k, iters)
+    return candidates & (values > t)
+
+
+def normalized(x: jax.Array, where: jax.Array | None = None) -> jax.Array:
+    """|x| scaled into [0, 1] (by the max over ``where`` if given)."""
+    a = jnp.abs(x)
+    if where is not None:
+        m = jnp.max(jnp.where(where, a, 0.0))
+    else:
+        m = jnp.max(a)
+    return a / (m + 1e-12)

@@ -1,0 +1,42 @@
+"""DST connectivity-update schedules.
+
+RigL / SRigL update the sparse topology every ``delta_t`` optimizer steps. The
+fraction of active weights pruned (and regrown) at update time follows a cosine
+annealing schedule (Dettmers & Zettlemoyer 2019):
+
+    alpha_t = alpha/2 * (1 + cos(pi * t / t_end))   for t < t_end, else 0
+
+with alpha = 0.3 and t_end = 75% of total training steps by default (paper D.1).
+All functions are traceable (usable inside jit).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DSTSchedule:
+    delta_t: int = 100          # steps between topology updates
+    alpha: float = 0.3          # initial drop fraction
+    t_end_fraction: float = 0.75
+    total_steps: int = 100_000
+    grad_accum_steps: int = 1   # dense-grad averaging window before an update
+
+    @property
+    def t_end(self) -> int:
+        return int(self.t_end_fraction * self.total_steps)
+
+    def drop_fraction(self, step) -> jnp.ndarray:
+        """Cosine-annealed drop fraction at ``step`` (0 after t_end)."""
+        t = jnp.asarray(step, jnp.float32)
+        t_end = jnp.float32(max(self.t_end, 1))
+        frac = 0.5 * self.alpha * (1.0 + jnp.cos(jnp.pi * jnp.minimum(t, t_end) / t_end))
+        return jnp.where(t < t_end, frac, 0.0)
+
+    def is_update_step(self, step) -> jnp.ndarray:
+        """True on steps where the topology is updated (and before t_end)."""
+        step = jnp.asarray(step)
+        due = (step % self.delta_t == 0) & (step > 0)
+        return due & (step < self.t_end)

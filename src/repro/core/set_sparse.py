@@ -1,0 +1,38 @@
+"""SET baseline (Mocanu et al. 2018) — prune by magnitude, regrow *randomly*.
+
+Included because the paper's Table 3 compares against it; shares the rank
+machinery with RigL/SRigL.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import saliency
+from repro.core.rigl import RigLSpec, RigLState, init_layer_state  # noqa: F401 (re-export)
+
+
+def set_update(
+    spec: RigLSpec,
+    weight: jax.Array,
+    key: jax.Array,
+    state: RigLState,
+    drop_fraction: jax.Array,
+) -> tuple[RigLState, dict]:
+    if weight.ndim == 3:
+        keys = jax.random.split(key, weight.shape[0])
+        fn = jax.vmap(lambda w, k, m: set_update(spec, w, k, RigLState(m), drop_fraction))
+        st, stats = fn(weight, keys, state.mask)
+        return st, stats
+
+    mask = state.mask
+    nnz = jnp.sum(mask)
+    n_prune = jnp.floor(drop_fraction * nnz).astype(jnp.int32)
+
+    survive = saliency.prune_survivors(weight, mask, n_prune)
+    rand = jax.random.uniform(key, weight.shape)
+    grown = saliency.top_k_candidates(rand, ~mask, n_prune)
+    new_mask = survive | grown
+
+    stats = dict(n_pruned=jnp.sum(mask & ~new_mask), n_grown=jnp.sum(grown), nnz=jnp.sum(new_mask))
+    return RigLState(mask=new_mask), stats

@@ -1,0 +1,166 @@
+"""SRigL — Structured RigL (Lasby et al., ICLR 2024), Section 3.1.
+
+A sparse-to-sparse DST update that maintains a **constant fan-in** topology
+(every active output neuron has exactly ``k`` non-zero incoming weights) and
+performs **dynamic neuron ablation** controlled by ``gamma_sal``.
+
+The update is a pure, jit-able function over fixed-shape arrays. The seven
+steps of the paper map to the code as follows:
+
+  1. prune criterion |W| (active), grow criterion |G| (inactive)   -> saliency.py
+  2. K = drop_fraction * nnz (per layer, cosine-annealed)          -> schedule.py
+  3. per-neuron salient count: survivors-of-prune + top-K-gradients
+  4. ablate neurons with fewer than max(1, ceil(gamma_sal * k)) salient weights
+  5. new fan-in k' = round(target_nnz / n_active')
+  6. layer-wise prune of the K smallest-magnitude active weights
+  7. per-neuron regrow by decreasing |G| until fan-in k'
+
+Steps 6+7 (and the constant fan-in invariant) are realized in one shot by a
+per-column priority ranking: survivors of the layer-wise prune always outrank
+grow candidates (ranked by |G|), which outrank freshly-pruned weights (backup
+tier so a column can always fill to k' exactly). Taking the top-k' of each
+active column reproduces the sequential procedure with exact counts.
+
+Ablation is re-evaluated from saliency at every update, so a previously-ablated
+neuron *can* revive if enough of its (gradient-)salient weights reappear —
+matching the "dynamically learns to ablate" framing of the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import saliency
+
+
+@dataclasses.dataclass(frozen=True)
+class SRigLSpec:
+    """Static per-layer configuration for SRigL."""
+
+    name: str
+    d_in: int
+    d_out: int
+    density: float              # from the ERK / uniform distribution
+    gamma_sal: float = 0.3      # min fraction of salient weights per neuron
+    ablation: bool = True       # neuron ablation enabled (SRigL w/ ablation)
+    min_active_neurons: int = 1  # never ablate the whole layer
+
+    @property
+    def k0(self) -> int:
+        """Initial constant fan-in."""
+        return max(1, round(self.density * self.d_in))
+
+    @property
+    def target_nnz(self) -> int:
+        """Per-neuron-matrix non-zero budget, constant through training."""
+        return self.k0 * self.d_out
+
+
+class LayerState(NamedTuple):
+    """Dynamic per-layer DST state (a pytree; shards with the weight)."""
+
+    mask: jax.Array           # bool (d_in, d_out)
+    neuron_active: jax.Array  # bool (d_out,)
+
+
+class UpdateStats(NamedTuple):
+    n_pruned: jax.Array
+    n_grown: jax.Array
+    n_ablated: jax.Array
+    fan_in: jax.Array
+    nnz: jax.Array
+
+
+def init_layer_state(key: jax.Array, spec: SRigLSpec) -> LayerState:
+    from repro.core import topology
+
+    mask = topology.random_constant_fan_in_mask(key, spec.d_in, spec.d_out, spec.k0)
+    return LayerState(mask=mask, neuron_active=jnp.ones((spec.d_out,), bool))
+
+
+def srigl_update(
+    spec: SRigLSpec,
+    weight: jax.Array,
+    dense_grad: jax.Array,
+    state: LayerState,
+    drop_fraction: jax.Array,
+) -> tuple[LayerState, UpdateStats]:
+    """One SRigL topology update for a single (d_in, d_out) layer.
+
+    For stacked layers (e.g. MoE experts with weight (E, d_in, d_out)), vmap
+    this function over the leading axis — each expert then runs its own
+    layer-wise prune/grow/ablate, the natural per-replica analog.
+    """
+    if weight.ndim == 3:  # stacked replicas (experts)
+        fn = jax.vmap(lambda w, g, m, a: srigl_update(
+            spec, w, g, LayerState(m, a), drop_fraction))
+        st, stats = fn(weight, dense_grad, state.mask, state.neuron_active)
+        return st, stats
+
+    mask, active_old = state.mask, state.neuron_active
+    w_mag = jnp.abs(weight)
+    g_mag = jnp.abs(dense_grad)
+
+    # -- step 2: number of weights to prune & grow this update -------------
+    nnz = jnp.sum(mask)
+    n_prune = jnp.floor(drop_fraction * nnz).astype(jnp.int32)
+
+    # -- step 6 (criterion side): survivors of the layer-wise prune --------
+    # layer-wise top-(A-K) by |w| via sharded bisection thresholding (exact
+    # up to fp-quantile resolution; see saliency.topk_threshold)
+    survive = saliency.select_topk_threshold(w_mag, mask, nnz - n_prune)
+
+    # -- step 1+3: per-neuron salient counts -------------------------------
+    grow_salient = saliency.select_topk_threshold(g_mag, ~mask, n_prune)
+    sal_per_neuron = jnp.sum(survive, axis=0) + jnp.sum(grow_salient, axis=0)
+
+    # -- step 4: ablation ---------------------------------------------------
+    n_active_old = jnp.maximum(jnp.sum(active_old), 1)
+    k_cur = jnp.maximum(nnz // n_active_old, 1)
+    tau = jnp.maximum(jnp.ceil(spec.gamma_sal * k_cur), 1.0)
+    if spec.ablation:
+        active_new = sal_per_neuron >= tau
+        # Never ablate below min_active_neurons: force-keep the most salient.
+        neuron_rank = saliency.descending_ranks(sal_per_neuron.astype(jnp.float32))
+        active_new = active_new | (neuron_rank < spec.min_active_neurons)
+    else:
+        active_new = jnp.ones_like(active_old)
+
+    # -- step 5: new constant fan-in ----------------------------------------
+    n_active_new = jnp.maximum(jnp.sum(active_new), 1)
+    k_new = jnp.clip(jnp.round(spec.target_nnz / n_active_new), 1, spec.d_in)
+    k_new = k_new.astype(jnp.int32)
+
+    # -- steps 6+7: build the new mask by per-column priority ---------------
+    w_norm = saliency.normalized(weight, mask)       # in [0, 1]
+    g_norm = saliency.normalized(dense_grad, ~mask)  # in [0, 1]
+    priority = jnp.where(
+        survive, 2.0 + w_norm,                        # tier 3: prune survivors
+        jnp.where(~mask, g_norm,                      # tier 2: grow by |G|
+                  -2.0 + w_norm))                     # tier 1: freshly pruned (backup)
+    col_rank = saliency.descending_ranks(priority, axis=0)
+    new_mask = (col_rank < k_new) & active_new[None, :]
+
+    new_nnz = jnp.sum(new_mask)
+    stats = UpdateStats(
+        n_pruned=jnp.sum(mask & ~new_mask),
+        n_grown=jnp.sum(~mask & new_mask),
+        n_ablated=jnp.sum(active_old & ~active_new),
+        fan_in=k_new,
+        nnz=new_nnz,
+    )
+    return LayerState(mask=new_mask, neuron_active=active_new), stats
+
+
+def apply_mask_for_forward(weight: jax.Array, mask: jax.Array) -> jax.Array:
+    """Masked weight whose *gradient is dense* (straight-through on the mask).
+
+    forward:  w * mask
+    backward: dL/dw = dL/d(w*mask) (un-masked) — exactly the dense gradient
+              RigL/SRigL need for the grow criterion. The optimizer re-masks.
+    """
+    m = mask.astype(weight.dtype)
+    return weight - jax.lax.stop_gradient(weight * (1 - m))

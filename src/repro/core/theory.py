@@ -1,0 +1,84 @@
+"""Output-norm variance theory (paper Appendix A/B, Eqs. 1-3) + Monte-Carlo check.
+
+For a ReLU layer z = sqrt(2/k) (W ⊙ I)(ξ ⊙ u) with n neurons and mean fan-in k,
+E[||z||^2 / ||u||^2] = 1 and the variance depends on the sparsity *structure*:
+
+  Bernoulli            Var = (5n - 8 + 18 n/k) / (n (n+2))                 (1)
+  Constant-per-layer   Var = ((n^2+7n-8) C_{n,k} + 18 n/k - n^2 - 2n)
+                             / (n (n+2)),  C_{n,k} = (n - 1/k)/(n - 1/n)   (2)
+  Constant fan-in      Var = Bernoulli - 3 (n-k) / (k n (n+2))             (3)
+
+NOTE: the paper's *main-text* Eqs. (1)-(2) print the third term as ``18 k/n``,
+but the Appendix B derivations (Props. B.4-B.6) and our Monte-Carlo simulation
+both give ``18 n/k`` — we implement the appendix (correct) version; the
+simulation test in tests/test_theory.py pins this down.
+
+Constant fan-in always has the *smallest* variance — the paper's theoretical
+motivation for SRigL. The simulator draws the three index-matrix ensembles and
+estimates Var(||z||^2) empirically (Fig. 1b).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def var_bernoulli(n: int, k: int) -> float:
+    return (5 * n - 8 + 18 * n / k) / (n * (n + 2))
+
+
+def c_nk(n: int, k: int) -> float:
+    return (n - 1 / k) / (n - 1 / n)
+
+
+def var_const_per_layer(n: int, k: int) -> float:
+    return ((n**2 + 7 * n - 8) * c_nk(n, k) + 18 * n / k - n**2 - 2 * n) / (n * (n + 2))
+
+
+def var_const_fan_in(n: int, k: int) -> float:
+    return var_bernoulli(n, k) - 3 * (n - k) / (k * n * (n + 2))
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo simulation
+# ---------------------------------------------------------------------------
+
+def _sample_index_matrix(key: jax.Array, n: int, k: int, kind: str) -> jax.Array:
+    if kind == "bernoulli":
+        return jax.random.bernoulli(key, k / n, (n, n))
+    if kind == "const_per_layer":
+        flat = jnp.zeros((n * n,), bool).at[: k * n].set(True)
+        return jax.random.permutation(key, flat).reshape(n, n)
+    if kind == "const_fan_in":
+        # exactly k ones per row, rows independent
+        scores = jax.random.uniform(key, (n, n))
+        ranks = jnp.argsort(jnp.argsort(-scores, axis=1), axis=1)
+        return ranks < k
+    raise ValueError(kind)
+
+
+def simulate_output_norm_var(
+    key: jax.Array, n: int, k: int, kind: str, n_samples: int = 2000
+) -> float:
+    """Empirical Var(||z||^2) for the given sparsity ensemble."""
+
+    def one(key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        u = jax.random.normal(k1, (n,))
+        u = u / jnp.linalg.norm(u)               # uniform on the unit sphere
+        xi = jax.random.bernoulli(k2, 0.5, (n,))  # ReLU-style half-activity
+        ind = _sample_index_matrix(k3, n, k, kind)
+        w = jax.random.normal(k4, (n, n))
+        z = jnp.sqrt(2.0 / k) * (w * ind) @ (xi * u)
+        return jnp.sum(z * z)
+
+    norms = jax.vmap(one)(jax.random.split(key, n_samples))
+    return float(jnp.var(norms))
+
+
+def theory_table(n: int, ks: list[int]) -> "np.ndarray":
+    """Rows: k; cols: [bernoulli, const_per_layer, const_fan_in] variances."""
+    return np.array(
+        [[var_bernoulli(n, k), var_const_per_layer(n, k), var_const_fan_in(n, k)] for k in ks]
+    )

@@ -1,0 +1,119 @@
+"""Sparse-topology utilities: mask initialization, condensed<->dense conversion.
+
+Conventions
+-----------
+A sparse linear layer computes ``y = x @ W`` with ``W`` of shape ``(d_in, d_out)``.
+The **constant fan-in** constraint requires every *column* of ``W`` (one output
+neuron) to have exactly ``k`` non-zeros.
+
+The **condensed representation** stores such a matrix as two dense arrays:
+
+  values  : (d_out, k)  — the non-zero weights of each neuron
+  indices : (d_out, k)  — the input-feature index of each non-zero (int32)
+
+Ablated neurons are represented with ``indices`` row 0..k-1 and ``values`` row 0
+(a zero row contributes nothing); a separate ``neuron_active`` bool vector tracks
+ablation for the structured (row-removal) execution path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Mask initialization
+# ---------------------------------------------------------------------------
+
+def random_constant_fan_in_mask(key: jax.Array, d_in: int, d_out: int, k: int) -> jax.Array:
+    """Boolean mask (d_in, d_out) with exactly k True per column, uniform at random."""
+    if not 1 <= k <= d_in:
+        raise ValueError(f"fan-in k={k} must be in [1, {d_in}]")
+    # Per-column random priorities; take top-k positions per column.
+    scores = jax.random.uniform(key, (d_in, d_out))
+    ranks = jnp.argsort(jnp.argsort(-scores, axis=0), axis=0)  # rank 0 = largest
+    return ranks < k
+
+
+def random_unstructured_mask(key: jax.Array, d_in: int, d_out: int, nnz: int) -> jax.Array:
+    """Boolean mask (d_in, d_out) with exactly nnz True, uniform over the matrix."""
+    total = d_in * d_out
+    if not 0 <= nnz <= total:
+        raise ValueError(f"nnz={nnz} out of range [0, {total}]")
+    scores = jax.random.uniform(key, (total,))
+    ranks = jnp.argsort(jnp.argsort(-scores))
+    return (ranks < nnz).reshape(d_in, d_out)
+
+
+def random_nm_mask(key: jax.Array, d_in: int, d_out: int, n: int, m: int) -> jax.Array:
+    """Classic N:M mask (N non-zeros per M *contiguous* fan-in weights).
+
+    Constant fan-in (the paper's structure) is the special case M = d_in;
+    this utility covers the hardware-2:4 style patterns the paper relates to
+    (Sec. 2, Mishra et al. 2021) for comparison studies.
+    """
+    if d_in % m:
+        raise ValueError(f"d_in={d_in} not divisible by M={m}")
+    if not 1 <= n <= m:
+        raise ValueError(f"need 1 <= N <= M, got {n}:{m}")
+    scores = jax.random.uniform(key, (d_in // m, m, d_out))
+    ranks = jnp.argsort(jnp.argsort(-scores, axis=1), axis=1)
+    return (ranks < n).reshape(d_in, d_out)
+
+
+def check_nm(mask: np.ndarray, n: int, m: int) -> bool:
+    """True iff every contiguous M-group along fan-in has exactly N non-zeros."""
+    a = np.asarray(mask)
+    groups = a.reshape(a.shape[0] // m, m, a.shape[1]).sum(axis=1)
+    return bool(np.all(groups == n))
+
+
+# ---------------------------------------------------------------------------
+# Condensed <-> dense
+# ---------------------------------------------------------------------------
+
+def dense_to_condensed(weight: jax.Array, mask: jax.Array, k: int):
+    """Convert masked dense (d_in, d_out) to condensed (values, indices) of shape (d_out, k).
+
+    Requires every column of ``mask`` to have at most k True. Columns with fewer
+    than k non-zeros (e.g. ablated neurons) are padded with index 0 / value 0.
+    """
+    d_in, d_out = weight.shape
+    # Rank active entries first within each column (stable => ascending row order).
+    priority = jnp.where(mask, 1.0, 0.0)
+    order = jnp.argsort(-priority, axis=0, stable=True)  # (d_in, d_out): active rows first
+    top_idx = order[:k, :].T.astype(jnp.int32)  # (d_out, k)
+    gathered_mask = jnp.take_along_axis(mask.T, top_idx, axis=1)
+    values = jnp.take_along_axis(weight.T, top_idx, axis=1) * gathered_mask
+    indices = jnp.where(gathered_mask, top_idx, 0).astype(jnp.int32)
+    return values, indices
+
+
+def condensed_to_dense(values: jax.Array, indices: jax.Array, d_in: int):
+    """Scatter condensed (d_out, k) arrays back to a dense (d_in, d_out) matrix."""
+    d_out, k = values.shape
+    dense = jnp.zeros((d_out, d_in), values.dtype)
+    rows = jnp.arange(d_out)[:, None].repeat(k, axis=1)
+    dense = dense.at[rows.reshape(-1), indices.reshape(-1)].add(values.reshape(-1))
+    return dense.T
+
+
+# ---------------------------------------------------------------------------
+# Invariant checks (host-side, for tests / debugging)
+# ---------------------------------------------------------------------------
+
+def column_nnz(mask: jax.Array) -> jax.Array:
+    """Number of non-zeros per output neuron (column)."""
+    return jnp.sum(mask.astype(jnp.int32), axis=0)
+
+
+def check_constant_fan_in(mask: np.ndarray, k: int, neuron_active: np.ndarray | None = None) -> bool:
+    """True iff every active column has exactly k non-zeros and inactive ones have 0."""
+    nnz = np.asarray(mask).sum(axis=0)
+    if neuron_active is None:
+        return bool(np.all(nnz == k))
+    neuron_active = np.asarray(neuron_active)
+    ok_active = np.all(nnz[neuron_active] == k) if neuron_active.any() else True
+    ok_ablated = np.all(nnz[~neuron_active] == 0) if (~neuron_active).any() else True
+    return bool(ok_active and ok_ablated)

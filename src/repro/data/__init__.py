@@ -1,0 +1,6 @@
+"""Data pipeline: deterministic synthetic LM streams + modality stubs."""
+from repro.data.pipeline import (  # noqa: F401
+    SyntheticLM,
+    make_batch_spec,
+    make_train_batch,
+)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical condensed sparse ops."""
+from repro.kernels.ops import (  # noqa: F401
+    condensed_linear,
+    condensed_linear_nd,
+    structured_dense,
+)

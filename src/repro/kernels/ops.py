@@ -1,0 +1,75 @@
+"""Jit'd public wrappers for the condensed kernels, with custom VJP.
+
+``condensed_linear`` is the layer-level op used by repro.sparse.condensed:
+forward runs the Pallas kernel; the backward pass computes
+
+  dx = scatter-add of dy * values   (jnp; XLA lowers this well on TPU)
+  dw = Pallas dw kernel (gather formulation, no scatter needed)
+
+The condensed path is inference-first (decode / online serving); training uses
+the masked-dense MXU path (repro.sparse.masked), so the jnp dx here is not on
+the training hot path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import condensed_matmul as cm
+from repro.kernels import ref
+
+# interpret=True everywhere in this container (CPU); on real TPU the same code
+# runs compiled by flipping this default (or via REPRO_PALLAS_INTERPRET=0).
+import os
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def condensed_linear(
+    x: jax.Array,
+    values: jax.Array,
+    indices: jax.Array,
+    block_b: int = 128,
+    block_n: int = 128,
+) -> jax.Array:
+    """y[b, n] = sum_k x[b, indices[n, k]] * values[n, k]."""
+    return cm.condensed_matmul(
+        x, values, indices, block_b=block_b, block_n=block_n, interpret=INTERPRET
+    )
+
+
+def _fwd(x, values, indices, block_b, block_n):
+    y = condensed_linear(x, values, indices, block_b, block_n)
+    return y, (x, values, indices)
+
+
+def _bwd(block_b, block_n, res, dy):
+    x, values, indices = res
+    dx = ref.condensed_matmul_dx_ref(dy, values, indices, x.shape[-1]).astype(x.dtype)
+    dw = cm.condensed_matmul_dw(dy, x, indices, block_n=block_n, interpret=INTERPRET)
+    return dx, dw.astype(values.dtype), None
+
+
+condensed_linear.defvjp(_fwd, _bwd)
+
+
+def condensed_linear_nd(x: jax.Array, values: jax.Array, indices: jax.Array, **kw) -> jax.Array:
+    """Rank-polymorphic wrapper: flattens leading dims to the batch axis."""
+    lead = x.shape[:-1]
+    y = condensed_linear(x.reshape(-1, x.shape[-1]), values, indices, **kw)
+    return y.reshape(*lead, values.shape[0])
+
+
+def structured_dense(x: jax.Array, weight: jax.Array, neuron_active: jax.Array) -> jax.Array:
+    """"Structured-only" path from Fig. 4: drop ablated neurons, dense matmul.
+
+    weight: (d_in, n_out); computes x @ weight but only for active columns
+    (ablated outputs are exact zeros). On TPU this is a *column-gathered*
+    matmul: XLA keeps it on the MXU; the byte/FLOP saving is the active-neuron
+    fraction.
+    """
+    w = weight * neuron_active[None, :].astype(weight.dtype)
+    return x @ w

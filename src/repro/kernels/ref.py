@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the condensed constant fan-in kernels.
+
+These are the ground truth the Pallas kernels are validated against
+(tests sweep shapes/dtypes and assert_allclose kernel vs oracle).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def condensed_matmul_ref(x: jax.Array, values: jax.Array, indices: jax.Array) -> jax.Array:
+    """Condensed constant fan-in matmul (paper Alg. 1 / Eq. 30-31).
+
+    x       : (B, d_in)
+    values  : (n_out, k)   non-zero weights per neuron
+    indices : (n_out, k)   int — input feature index of each non-zero
+    returns : (B, n_out)   out[b, n] = sum_k x[b, indices[n, k]] * values[n, k]
+    """
+    gathered = jnp.take(x, indices, axis=1)  # (B, n_out, k)
+    return jnp.sum(gathered * values[None, :, :].astype(x.dtype), axis=-1)
+
+
+def condensed_matmul_dx_ref(
+    dy: jax.Array, values: jax.Array, indices: jax.Array, d_in: int
+) -> jax.Array:
+    """Gradient wrt x: scatter-add of dy * values back to input features."""
+    b = dy.shape[0]
+    n_out, k = values.shape
+    contrib = dy[:, :, None] * values[None, :, :].astype(dy.dtype)  # (B, n_out, k)
+    flat_idx = indices.reshape(-1)                                  # (n_out*k,)
+    dx = jnp.zeros((b, d_in), dy.dtype)
+    return dx.at[:, flat_idx].add(contrib.reshape(b, -1))
+
+
+def condensed_matmul_dw_ref(dy: jax.Array, x: jax.Array, indices: jax.Array) -> jax.Array:
+    """Gradient wrt values: dw[n, k] = sum_b dy[b, n] * x[b, indices[n, k]]."""
+    gathered = jnp.take(x, indices, axis=1)  # (B, n_out, k)
+    return jnp.einsum("bn,bnk->nk", dy, gathered)
+
+
+def onehot_matmul_ref(x: jax.Array, values: jax.Array, indices: jax.Array) -> jax.Array:
+    """MXU-friendly formulation: scatter values to dense then matmul.
+
+    Mathematically identical to condensed_matmul_ref; used as the mid-sparsity
+    alternative where the MXU beats the gather path (see DESIGN.md §3).
+    """
+    n_out, k = values.shape
+    d_in = x.shape[-1]
+    dense = jnp.zeros((n_out, d_in), values.dtype)
+    rows = jnp.repeat(jnp.arange(n_out), k)
+    dense = dense.at[rows, indices.reshape(-1)].add(values.reshape(-1))
+    return x @ dense.T.astype(x.dtype)

@@ -1,0 +1,270 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above run before ANY other import (jax locks the device count
+on first init). For each cell this script:
+
+  1. builds the production mesh (16x16 single pod / 2x16x16 multi-pod),
+  2. builds ShapeDtypeStruct stand-ins for the train/serve step inputs
+     (weights, optimizer state, DST masks, batch, KV caches — no allocation),
+  3. jit-lowers with explicit in/out shardings from launch/sharding.py,
+  4. compiles, prints memory_analysis() (proves it fits) and cost_analysis()
+     (FLOPs/bytes for §Roofline), and
+  5. parses the partitioned HLO for collective traffic (hlo_analysis).
+
+Results are appended as JSON lines for benchmarks/roofline.py to aggregate.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  python -m repro.launch.dryrun --arch all [--shapes train_4k,prefill_32k]
+                                [--multi-pod] [--out results.jsonl]
+"""
+import argparse
+import functools
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data.pipeline import make_batch_spec
+from repro.launch import hlo_analysis as HLO
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import ShardingRules
+from repro.models import model as M
+from repro.sparse import registry as REG
+from repro.train.state import init_train_state
+from repro.train.trainer import make_train_step
+
+
+def _sds_tree(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _abstract_train_state(cfg):
+    return jax.eval_shape(lambda k: init_train_state(cfg, k), jax.random.PRNGKey(0))
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def state_shardings(rules: ShardingRules, state_sds):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    rep = NamedSharding(rules.mesh, P())
+    return type(state_sds)(
+        step=rep,
+        params=rules.params(state_sds.params),
+        opt_state=rules.opt_state(state_sds.opt_state, state_sds.params),
+        masks=rules.masks(state_sds.masks),
+        neuron_active=rules.neuron_active(state_sds.neuron_active),
+        grad_accum=rules.params(state_sds.grad_accum),
+        rng=rep,
+    )
+
+
+def lower_train(cfg, shape, mesh):
+    rules = ShardingRules(cfg, mesh)
+    registry = REG.build_registry(cfg)
+    state_sds = _abstract_train_state(cfg)
+    batch_sds = make_batch_spec(cfg, shape)
+    # targets/labels present for training
+    st_sh = state_shardings(rules, state_sds)
+    b_sh = rules.batch(batch_sds, shape=shape)
+    step = make_train_step(cfg, registry, lambda s: jnp.float32(1e-3),
+                           microbatches=cfg.microbatches)
+    jitted = jax.jit(step, in_shardings=(st_sh, b_sh),
+                     out_shardings=(st_sh, None), donate_argnums=(0,))
+    with jax.set_mesh(mesh):
+        return jitted.lower(state_sds, batch_sds)
+
+
+def lower_dst(cfg, shape, mesh):
+    """The topology-update program (runs every delta_t steps)."""
+    from repro.train.trainer import make_dst_step
+    rules = ShardingRules(cfg, mesh)
+    registry = REG.build_registry(cfg)
+    if not registry:
+        return None
+    state_sds = _abstract_train_state(cfg)
+    batch_sds = make_batch_spec(cfg, shape)
+    st_sh = state_shardings(rules, state_sds)
+    b_sh = rules.batch(batch_sds, shape=shape)
+    # NOTE (§Perf iteration 7): per-slab sharding constraints inside the
+    # lax.map get hoisted by GSPMD into whole-stack gathers (80 GB f32 for
+    # kimi's expert stacks). Letting the partitioner reshard each slab
+    # transiently is 4.6x cheaper — measured 318 -> 68 GB temp.
+    step = make_dst_step(cfg, registry, compute_specs=None)
+    jitted = jax.jit(step, in_shardings=(st_sh, b_sh), out_shardings=st_sh,
+                     donate_argnums=(0,))
+    with jax.set_mesh(mesh):
+        return jitted.lower(state_sds, batch_sds)
+
+
+def lower_serve_condensed(cfg, shape, mesh):
+    """Decode with the condensed constant fan-in representation (the paper's
+    Alg. 1 serving path): weight reads shrink to n_out*k entries."""
+    from repro.sparse import condensed as COND
+    rules = ShardingRules(cfg, mesh)
+    registry = REG.build_registry(cfg)
+    k_fan = REG.k_fan_map(cfg, registry)
+    params_sds = _abstract(lambda k: M.init_params(cfg, k, k_fan), jax.random.PRNGKey(0))
+    cond_sds = COND.abstract_condensed(cfg, registry)
+    cache_sds = _abstract(lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
+    batch_sds = make_batch_spec(cfg, shape)
+
+    p_sh = rules.params(params_sds)
+    m_sh = rules.masks(cond_sds)
+    c_sh = rules.cache(cache_sds, global_batch=shape.global_batch)
+    b_sh = rules.batch(batch_sds, shape=shape)
+
+    def serve_step(params, cond, batch, cache):
+        return M.decode_step(cfg, params, cond, batch, cache)
+
+    jitted = jax.jit(serve_step,
+                     in_shardings=(p_sh, m_sh, b_sh, c_sh),
+                     out_shardings=(None, c_sh), donate_argnums=(3,))
+    with jax.set_mesh(mesh):
+        return jitted.lower(params_sds, cond_sds, batch_sds, cache_sds)
+
+
+def lower_serve(cfg, shape, mesh):
+    if shape.kind == "prefill":
+        # larger attention chunks for long-prompt prefill: fewer unrolled
+        # q-chunks keeps HLO size and compile time bounded
+        cfg = cfg.replace(attn_q_chunk=4096, attn_kv_chunk=2048)
+    rules = ShardingRules(cfg, mesh)
+    registry = REG.build_registry(cfg)
+    k_fan = REG.k_fan_map(cfg, registry)
+
+    params_sds = _abstract(lambda k: M.init_params(cfg, k, k_fan), jax.random.PRNGKey(0))
+    if registry:
+        masks_sds = _abstract(
+            lambda k: REG.init_sparsity_state(cfg, k, registry)["masks"],
+            jax.random.PRNGKey(0))
+    else:
+        masks_sds = {}
+    cache_sds = _abstract(lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
+    batch_sds = make_batch_spec(cfg, shape)
+
+    p_sh = rules.params(params_sds)
+    m_sh = rules.masks(masks_sds)
+    c_sh = rules.cache(cache_sds, global_batch=shape.global_batch)
+    b_sh = rules.batch(batch_sds, shape=shape)
+
+    step_fn = M.prefill_step if shape.kind == "prefill" else M.decode_step
+
+    def serve_step(params, masks, batch, cache):
+        return step_fn(cfg, params, masks, batch, cache)
+
+    jitted = jax.jit(serve_step,
+                     in_shardings=(p_sh, m_sh, b_sh, c_sh),
+                     out_shardings=(None, c_sh), donate_argnums=(3,))
+    with jax.set_mesh(mesh):
+        return jitted.lower(params_sds, masks_sds, batch_sds, cache_sds)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, quiet: bool = False,
+             program: str = "auto", cfg=None) -> dict:
+    cfg = cfg or configs.get_config(arch)
+    shape = configs.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    lower_fn = {"train": lower_train, "serve": lower_serve, "dst": lower_dst,
+                "serve_cond": lower_serve_condensed}[
+        (("train" if shape.kind == "train" else "serve") if program == "auto"
+         else program)]
+    t0 = time.time()
+    lowered = lower_fn(cfg, shape, mesh)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # trip-count-aware static cost model (xla's cost_analysis counts scan
+    # bodies once — see hlo_analysis module docstring); bf16_equiv corrects
+    # the CPU backend's f32-upcast of bf16 dots/collectives for the TPU target
+    pc = HLO.analyze(hlo, bf16_equiv=(cfg.dtype == "bfloat16"))
+
+    flops = pc.flops
+    bytes_acc = pc.hbm_bytes
+    terms = HLO.roofline_terms(flops, bytes_acc, pc.total_collective_bytes, n_chips)
+
+    result = {
+        "arch": arch, "shape": shape_name, "program": program,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": n_chips,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_device": flops, "bytes_per_device": bytes_acc,
+        "xla_cost_flops": float(cost.get("flops", 0.0)),
+        "collective_bytes": pc.total_collective_bytes,
+        "collective_by_type": pc.bytes_by_type,
+        "collective_counts": pc.count_by_type,
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0)
+                       + getattr(mem, "temp_size_in_bytes", 0)),
+        "roofline": terms,
+        "dominant": HLO.dominant_term(terms),
+    }
+    if not quiet:
+        print(f"--- {arch} x {shape_name} x {result['mesh']} ---")
+        print("memory_analysis:", mem)
+        print("flops/device={:.3e} hbm_bytes/device={:.3e} peak_mem={:.2f}GB".format(
+            flops, bytes_acc, result["peak_bytes"] / 2**30))
+        print("collectives:", {k: f"{v/1e6:.1f}MB" for k, v in pc.bytes_by_type.items() if v})
+        print("roofline:", {k: f"{v*1e3:.2f}ms" for k, v in terms.items()},
+              "dominant:", result["dominant"])
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shapes", default="")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="")
+    ap.add_argument("--dst", action="store_true", help="also compile the topology-update program for train cells")
+    args = ap.parse_args(argv)
+
+    archs = list(configs.ALL_ARCHS) if args.arch == "all" else [args.arch]
+    results, failures = [], []
+    for arch in archs:
+        cfg = configs.get_config(arch)
+        cells = configs.shapes_for(arch, cfg.family, cfg.causal)
+        if args.shapes:
+            cells = [s for s in cells if s.name in args.shapes.split(",")]
+        for shape in cells:
+            meshes = [False, True] if args.both_meshes else [args.multi_pod]
+            programs = ["auto"] + (["dst"] if shape.kind == "train" and args.dst else [])
+            for mp in meshes:
+                for prog in programs:
+                    try:
+                        r = run_cell(arch, shape.name, mp, program=prog)
+                        results.append(r)
+                    except Exception as e:  # noqa: BLE001 — report, continue sweep
+                        traceback.print_exc()
+                        failures.append((arch, shape.name, mp, prog, str(e)[:200]))
+                    if args.out:
+                        with open(args.out, "w") as f:
+                            for r in results:
+                                f.write(json.dumps(r) + "\n")
+    print(f"\n{len(results)} cells compiled OK, {len(failures)} failed")
+    for f in failures:
+        print("FAILED:", f)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

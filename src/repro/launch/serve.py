@@ -1,0 +1,71 @@
+"""Batched serving driver: prefill a batch of prompts, decode greedily.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+
+Demonstrates the production serving path: prefill_step fills the KV/SSM
+caches (ring buffers for sliding-window layers), decode_step generates
+token-by-token. On real hardware the same functions are jit-ted with the
+launch.sharding cache/params shardings (see launch/dryrun.py lower_serve).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import model as M
+from repro.sparse import registry as REG
+
+
+def generate(cfg, params, masks, prompts: jax.Array, gen_len: int):
+    """prompts: (B, T) int32. Greedy decode. Returns (B, T+gen_len)."""
+    b, t = prompts.shape
+    cache = M.init_cache(cfg, b, max_len=t + gen_len)
+    logits, cache = jax.jit(
+        lambda p, m, bt, c: M.prefill_step(cfg, p, m, bt, c)
+    )(params, masks, {"tokens": prompts}, cache)
+    step = jax.jit(lambda p, m, bt, c: M.decode_step(cfg, p, m, bt, c))
+    out = [prompts]
+    cur = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    for _ in range(gen_len):
+        out.append(cur)
+        logits, cache = step(params, masks, {"tokens": cur}, cache)
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    return jnp.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ALL_ARCHS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (configs.get_smoke_config if args.smoke else configs.get_config)(args.arch)
+    if not cfg.causal:
+        raise SystemExit(f"{args.arch} is encoder-only — no decode path")
+    key = jax.random.PRNGKey(args.seed)
+    reg = REG.build_registry(cfg)
+    params = M.init_params(cfg, key, REG.k_fan_map(cfg, reg))
+    masks = REG.init_sparsity_state(cfg, key, reg)["masks"] if reg else {}
+
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    t0 = time.perf_counter()
+    out = generate(cfg, params, masks, prompts, args.gen)
+    dt = time.perf_counter() - t0
+    print(f"[serve] generated {args.batch}x{args.gen} tokens in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print("[serve] first stream:", out[0, -args.gen:].tolist())
+    return out
+
+
+if __name__ == "__main__":
+    main()

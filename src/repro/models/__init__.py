@@ -1,0 +1,1 @@
+"""Unified decoder-LM model zoo (dense / MoE / SSM / hybrid / VLM / audio / ViT)."""

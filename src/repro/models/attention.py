@@ -1,0 +1,200 @@
+"""GQA attention: chunked (flash-style) prefill/train + KV-cache decode.
+
+Design points (see DESIGN.md §4):
+
+* **Chunked attention**: queries are processed in *statically unrolled* chunks;
+  each q-chunk attends only to the kv prefix it can causally see (exact static
+  slice), with an inner ``lax.scan`` over kv chunks carrying online-softmax
+  stats. No O(T^2) score tensor is ever live, and — unlike a masked full scan —
+  no FLOPs are spent above the diagonal at the chunk level.
+* **GQA via gather-expand**: kv heads are expanded to the query-head axis with
+  a static ``head_to_kv`` gather. Under TP the q-head axis is sharded and kv is
+  replicated (GQA kv counts rarely divide the TP degree), so the gather is
+  shard-local and each device materializes only its own heads' kv — the
+  standard Megatron/MaxText GQA-TP layout. When head counts don't divide the
+  TP degree they are padded (configs.base.ArchConfig.pad_heads_to) and a
+  ``head_mask`` zeroes padded heads' outputs, keeping results bit-exact.
+* **Sliding window**: windowed layers slice a static ``(q_chunk + window)`` kv
+  slab per q-chunk → O(T·window) compute, and use a **ring-buffer KV cache** of
+  size ``window`` at decode time (gemma3's 5:1 local:global pattern makes the
+  500k-context cell affordable: only the rare global layers keep full caches).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-1e30)
+
+
+def expand_kv(k: jax.Array, head_to_kv: tuple) -> jax.Array:
+    """(B, S, Hkv, D) -> (B, S, H, D) by the static q-head -> kv-head map.
+
+    Identity maps (MHA) are returned untouched (no gather in the HLO).
+    """
+    if head_to_kv == tuple(range(k.shape[2])):
+        return k
+    idx = jnp.asarray(head_to_kv, jnp.int32)
+    return jnp.take(k, idx, axis=2)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    head_to_kv: tuple,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Memory-efficient attention.
+
+    q: (B, Tq, H, D); k, v: (B, S, Hkv, D). Returns (B, Tq, H, D).
+    ``q_offset`` is the absolute position of q[0] (for prefill continuation).
+    """
+    b, tq, h, d = q.shape
+    s = k.shape[1]
+    scale = d ** -0.5
+    q = q * scale
+    k = expand_kv(k, head_to_kv)
+    v = expand_kv(v, head_to_kv)
+
+    q_chunk = min(q_chunk, tq)
+    n_q = -(-tq // q_chunk)
+    pad_q = n_q * q_chunk - tq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+
+    outs = []
+    for i in range(n_q):  # static unroll: exact causal kv extent per chunk
+        q_i = q[:, i * q_chunk: (i + 1) * q_chunk]
+        q_lo = q_offset + i * q_chunk
+        q_hi = q_lo + q_chunk
+        kv_hi = min(s, q_hi) if causal else s
+        kv_lo = max(0, q_lo - window + 1) if (window and causal) else 0
+        kv_lo = (kv_lo // kv_chunk) * kv_chunk
+        kv_hi = min(s, -(-kv_hi // kv_chunk) * kv_chunk)
+        if kv_hi <= kv_lo:  # fully masked chunk (can happen with offsets)
+            outs.append(jnp.zeros((b, q_chunk, h, d), v.dtype))
+            continue
+        outs.append(
+            _attend_one_q_chunk(
+                q_i, k[:, kv_lo:kv_hi], v[:, kv_lo:kv_hi],
+                q_pos0=q_lo, kv_pos0=kv_lo, causal=causal,
+                window=window, kv_chunk=kv_chunk,
+            )
+        )
+    out = jnp.concatenate(outs, axis=1)[:, :tq]
+    return out
+
+
+def _attend_one_q_chunk(q_i, k_i, v_i, *, q_pos0, kv_pos0, causal, window, kv_chunk):
+    """Online-softmax scan over kv chunks for one q chunk.
+
+    q_i: (B, Qc, H, D); k_i/v_i: (B, Skv, H, D) — the causal slab, kv expanded.
+    """
+    b, qc, h, d = q_i.shape
+    skv = k_i.shape[1]
+    kv_chunk = min(kv_chunk, skv)
+    n_kv = -(-skv // kv_chunk)
+    pad = n_kv * kv_chunk - skv
+    if pad:
+        k_i = jnp.pad(k_i, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_i = jnp.pad(v_i, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    k_c = k_i.reshape(b, n_kv, kv_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    v_c = v_i.reshape(b, n_kv, kv_chunk, h, d).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_pos0 + jnp.arange(qc)
+
+    def step(carry, xs):
+        acc, m, l = carry
+        k_blk, v_blk, blk_idx = xs
+        kv_pos = kv_pos0 + blk_idx * kv_chunk + jnp.arange(kv_chunk)
+        s_blk = jnp.einsum("bqhd,bshd->bhqs", q_i, k_blk,
+                           preferred_element_type=jnp.float32)
+        mask = jnp.ones((qc, kv_chunk), bool)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        mask &= kv_pos[None, :] < kv_pos0 + skv  # padded kv tail
+        s_blk = jnp.where(mask[None, None], s_blk, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s_blk, axis=-1))
+        p = jnp.exp(s_blk - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        upd = jnp.einsum("bhqs,bshd->bhqd", p.astype(v_blk.dtype), v_blk)
+        acc_new = acc * corr[..., None].astype(acc.dtype) + upd.astype(jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, h, qc, d), jnp.float32)
+    m0 = jnp.full((b, h, qc), NEG_INF)
+    l0 = jnp.zeros((b, h, qc), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), (k_c, v_c, jnp.arange(n_kv)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(v_i.dtype)  # (B, Qc, H, D)
+
+
+# ---------------------------------------------------------------------------
+# decode (KV cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len: jax.Array,
+    *,
+    head_to_kv: tuple,
+    window: int = 0,
+) -> jax.Array:
+    """Single-token attention against a (possibly ring-buffered) KV cache.
+
+    q: (B, 1, H, D); k_cache/v_cache: (B, S, Hkv, D); cache_len: () int32 —
+    total tokens *including* the one just written. For windowed layers
+    S == window and slot j holds the most recent absolute position
+    t < cache_len with t % S == j.
+    """
+    b, _, h, d = q.shape
+    s = k_cache.shape[1]
+    scale = d ** -0.5
+
+    k_exp = expand_kv(k_cache, head_to_kv)
+    v_exp = expand_kv(v_cache, head_to_kv)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q * scale, k_exp,
+                        preferred_element_type=jnp.float32)[:, :, 0]  # (B, H, S)
+
+    slots = jnp.arange(s)
+    if window:
+        # absolute position held by each ring slot
+        t = cache_len - 1 - ((cache_len - 1 - slots) % s)
+        valid = (t >= 0) & (t < cache_len) & (t > cache_len - 1 - window)
+    else:
+        valid = slots < cache_len
+    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p.astype(v_exp.dtype), v_exp)
+    return out[:, None].transpose(0, 1, 2, 3).reshape(b, 1, h, d)
+
+
+def cache_write(k_cache, v_cache, k_new, v_new, cache_len):
+    """Write T_new tokens into the cache (ring semantics if cache is smaller).
+
+    k_cache: (B, S, Hkv, D); k_new: (B, T, Hkv, D); cache_len: tokens already
+    present. Returns updated caches.
+    """
+    s = k_cache.shape[1]
+    t = k_new.shape[1]
+    if t >= s:  # only the trailing window survives a big prefill
+        k_new, v_new = k_new[:, -s:], v_new[:, -s:]
+        off = t - s
+        pos = (cache_len + off + jnp.arange(s)) % s
+    else:
+        pos = (cache_len + jnp.arange(t)) % s
+    k_cache = k_cache.at[:, pos].set(k_new.astype(k_cache.dtype))
+    v_cache = v_cache.at[:, pos].set(v_new.astype(v_cache.dtype))
+    return k_cache, v_cache

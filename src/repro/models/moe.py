@@ -1,0 +1,114 @@
+"""Top-k MoE with GShard-style capacity routing (TPU-idiomatic one-hot dispatch).
+
+Tokens are processed in groups of ``group_size``; each group dispatches to a
+per-expert capacity buffer with one-hot einsums — the classic fully-SPMD-
+partitionable formulation (experts sharded over the 'model' mesh axis, groups
+over 'data'; XLA inserts the dispatch all-to-alls). Tokens over capacity are
+dropped (capacity_factor 1.25 default), matching standard large-scale practice.
+
+Experts are SwiGLU FFNs stored stacked ``(E, d, ff)`` so SRigL treats each
+expert row block as its own constant fan-in matrix (vmapped update).
+
+A load-balancing auxiliary loss (Switch/GShard) is returned for the trainer.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+class MoEParams(NamedTuple):
+    router: jax.Array   # (d_model, E)
+    w_gate: jax.Array   # (E, d_model, ff)
+    w_up: jax.Array     # (E, d_model, ff)
+    w_down: jax.Array   # (E, ff, d_model)
+
+
+def init_moe_params(key: jax.Array, d_model: int, d_ff: int, n_experts: int,
+                    k_fan_in: dict | None = None, dtype=jnp.float32) -> MoEParams:
+    ks = jax.random.split(key, 4)
+    def init(k, a, b, fan):
+        w = jax.random.normal(k, (n_experts, a, b)) / jnp.sqrt(max(fan, 1))
+        return w.astype(dtype)
+    kf = k_fan_in or {}
+    return MoEParams(
+        router=L.dense_init(ks[0], d_model, n_experts, jnp.float32),
+        w_gate=init(ks[1], d_model, d_ff, kf.get("w_gate", d_model)),
+        w_up=init(ks[2], d_model, d_ff, kf.get("w_up", d_model)),
+        w_down=init(ks[3], d_ff, d_model, kf.get("w_down", d_ff)),
+    )
+
+
+def route_topk(logits: jax.Array, top_k: int, capacity: int):
+    """GShard top-k routing for one group.
+
+    logits: (G, S, E). Returns (dispatch (G,S,E,C) bool, combine (G,S,E,C) f32,
+    aux_loss scalar).
+    """
+    g, s, e = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)          # (G, S, k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    # Sequential slot assignment across the k choices (classic GShard loop).
+    counts = jnp.zeros((g, e), jnp.int32)
+    dispatch = jnp.zeros((g, s, e, capacity), bool)
+    combine = jnp.zeros((g, s, e, capacity), jnp.float32)
+    for j in range(top_k):
+        onehot = jax.nn.one_hot(gate_idx[:, :, j], e, dtype=jnp.int32)  # (G,S,E)
+        pos = jnp.cumsum(onehot, axis=1) - onehot + counts[:, None, :]  # slot per token
+        counts = counts + jnp.sum(onehot, axis=1)
+        keep = (pos < capacity) & (onehot > 0)
+        slot = jnp.clip(pos, 0, capacity - 1)
+        slot_oh = jax.nn.one_hot(slot, capacity, dtype=jnp.float32) * keep[..., None]
+        dispatch = dispatch | (slot_oh > 0)
+        combine = combine + gate_vals[:, :, j, None, None] * slot_oh
+
+    # load-balance aux loss: E * sum_e f_e * p_e   (Switch Transformer eq. 4)
+    me = jnp.mean(probs, axis=(0, 1))                               # mean router prob
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[:, :, 0], e, dtype=jnp.float32), axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+    return dispatch, combine, aux
+
+
+def moe_block(cfg, params: MoEParams, x: jax.Array, masks: dict | None = None,
+              group_size: int = 2048):
+    """x: (B, T, d) -> (y, aux_loss)."""
+    m = masks or {}
+    b, t, d = x.shape
+    n_tok = b * t
+    gs = min(group_size, n_tok)
+    n_groups = n_tok // gs
+    assert n_groups * gs == n_tok, f"tokens {n_tok} not divisible by group {gs}"
+    e, k = cfg.n_experts, cfg.top_k_experts
+    # ceil + floor-at-top_k so tiny decode groups are never starved; a token
+    # occupies each chosen expert at most once, so capacity == gs => no drops.
+    capacity = min(gs, max(-(-gs * k * int(100 * cfg.capacity_factor) // (100 * e)), k))
+
+    xt = x.reshape(n_groups, gs, d)
+    logits = xt @ params.router.astype(x.dtype)                     # (G, S, E)
+    dispatch, combine, aux = route_topk(logits, k, capacity)
+
+    # dispatch: (G,S,E,C) x (G,S,d) -> (E, G, C, d)
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch.astype(x.dtype), xt)
+
+    def expert_ffn(w_gate, w_up, w_down, mg, mu, md, xin):
+        gate = L.linear(xin, w_gate, mg)
+        up = L.linear(xin, w_up, mu)
+        return L.linear(L.swiglu(gate, up), w_down, md)
+
+    mg, mu, md = m.get("w_gate"), m.get("w_up"), m.get("w_down")
+    if mg is not None:
+        ye = jax.vmap(expert_ffn)(params.w_gate, params.w_up, params.w_down, mg, mu, md, xe)
+    else:
+        ye = jax.vmap(
+            lambda wg, wu, wd, xin: expert_ffn(wg, wu, wd, None, None, None, xin)
+        )(params.w_gate, params.w_up, params.w_down, xe)
+
+    # combine: (G,S,E,C) x (E,G,C,d) -> (G,S,d)
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), ye)
+    return y.reshape(b, t, d), aux

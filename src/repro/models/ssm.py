@@ -1,0 +1,195 @@
+"""Mamba2 / SSD (state-space duality) mixer — chunked train/prefill + decode.
+
+Implements the SSD "chunked" algorithm (Dao & Gu 2024, arXiv:2405.21060):
+intra-chunk attention-like quadratic term + inter-chunk recurrent state carried
+by a ``lax.scan`` — O(T·chunk) compute, O(state) memory across chunks, which is
+what makes the 500k-token long-context cell affordable for SSM archs.
+
+TP note: the input projection is split into separate z / x / BC / dt matmuls so
+each output can carry its own sharding (z, x, dt are head-sharded over 'model';
+B, C are n_groups=1 and replicated). The depthwise conv and the SSD scan are
+channel-/head-local, so the whole mixer needs **zero collectives** between the
+in- and out-projections — the same property that makes SRigL's per-neuron
+constant fan-in DST update collective-free (DESIGN.md §3).
+
+Decode maintains (conv_state, ssm_state) per layer:
+  h <- exp(dt·A) h + dt · B x^T ;  y = C·h + D·x
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+class SSMParams(NamedTuple):
+    in_z: jax.Array       # (d_model, d_inner)
+    in_x: jax.Array       # (d_model, d_inner)
+    in_bc: jax.Array      # (d_model, 2*ssm_state)
+    in_dt: jax.Array      # (d_model, H)
+    conv_x: jax.Array     # (conv_width, d_inner)  depthwise
+    conv_bc: jax.Array    # (conv_width, 2*ssm_state)
+    conv_b: jax.Array     # (d_inner,)
+    conv_bc_b: jax.Array  # (2*ssm_state,)
+    a_log: jax.Array      # (H,)
+    d_skip: jax.Array     # (H,)
+    dt_bias: jax.Array    # (H,)
+    norm_scale: jax.Array  # (d_inner,)
+    out_proj: jax.Array   # (d_inner, d_model)
+
+
+def init_ssm_params(key: jax.Array, cfg, dtype=jnp.float32,
+                    k_fan_in: dict | None = None) -> SSMParams:
+    ks = jax.random.split(key, 6)
+    h = cfg.ssm_n_heads
+    kf = k_fan_in or {}
+
+    def sp(k, a, b, name):
+        return L.sparse_init(k, a, b, kf.get(name, a), dtype)
+
+    return SSMParams(
+        in_z=sp(ks[0], cfg.d_model, cfg.d_inner, "in_z"),
+        in_x=sp(ks[1], cfg.d_model, cfg.d_inner, "in_x"),
+        in_bc=L.dense_init(ks[2], cfg.d_model, 2 * cfg.ssm_state, dtype),
+        in_dt=L.dense_init(ks[3], cfg.d_model, h, dtype),
+        conv_x=(jax.random.normal(ks[4], (cfg.ssm_conv_width, cfg.d_inner)) * 0.1).astype(dtype),
+        conv_bc=(jax.random.normal(ks[5], (cfg.ssm_conv_width, 2 * cfg.ssm_state)) * 0.1).astype(dtype),
+        conv_b=jnp.zeros((cfg.d_inner,), dtype),
+        conv_bc_b=jnp.zeros((2 * cfg.ssm_state,), dtype),
+        a_log=jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        d_skip=jnp.ones((h,), jnp.float32),
+        dt_bias=jnp.log(jnp.expm1(jnp.full((h,), 0.01, jnp.float32))),
+        norm_scale=jnp.zeros((cfg.d_inner,), dtype),
+        out_proj=sp(ks[3], cfg.d_inner, cfg.d_model, "ssm_out"),
+    )
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv over time. x: (B, T, C), w: (width, C).
+
+    Returns (silu(conv(x)+b), new_state) where state is the trailing width-1
+    inputs (for decode continuation).
+    """
+    w = w.astype(x.dtype)
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, T+w-1, C)
+    y = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(width))
+    y = jax.nn.silu(y + b.astype(x.dtype))
+    new_state = xp[:, x.shape[1]:] if width > 1 else pad
+    return y, new_state
+
+
+def ssd_chunked(x, dt, a, b, c, *, chunk: int = 256, h0: jax.Array | None = None):
+    """Chunked SSD scan.
+
+    x : (B, T, H, P)   inputs per head
+    dt: (B, T, H)      positive step sizes (softplus already applied)
+    a : (H,)           negative decay rates (A = -exp(a_log))
+    b : (B, T, N)      input projection (shared across heads, n_groups=1)
+    c : (B, T, N)      output projection
+    h0: (B, H, P, N)   initial state (decode/prefill continuation)
+    Returns y: (B, T, H, P), h_last: (B, H, P, N) float32.
+    """
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, t)
+    nc = -(-t // chunk)
+    pad = nc * chunk - t
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+
+    f32 = jnp.float32
+    xc = x.reshape(bsz, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(bsz, nc, chunk, h).transpose(1, 0, 2, 3).astype(f32)
+    bc = b.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    cc = c.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    cum = jnp.cumsum(dtc * a.astype(f32)[None, None, None, :], axis=2)  # (nc,B,Q,H)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), f32)
+
+    ii = jnp.arange(chunk)
+    causal = ii[:, None] >= ii[None, :]
+
+    def step(h_prev, xs):
+        x_k, dt_k, b_k, c_k, cum_k = xs
+        # intra-chunk: y_i = sum_{j<=i} (c_i.b_j) exp(cum_i - cum_j) dt_j x_j
+        seg = cum_k[:, :, None, :] - cum_k[:, None, :, :]           # (B,Q,Q,H)
+        l_mat = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", c_k.astype(f32), b_k.astype(f32))
+        w_ij = cb[..., None] * l_mat * dt_k[:, None, :, :]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w_ij, x_k.astype(f32))
+        # inter-chunk: y_i += exp(cum_i) c_i . h_prev
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", c_k.astype(f32), h_prev,
+                             jnp.exp(cum_k))
+        # state: h = exp(cum_last) h_prev + sum_j exp(cum_last - cum_j) dt_j b_j x_j^T
+        total = cum_k[:, -1, :]
+        decay_j = jnp.exp(total[:, None, :] - cum_k) * dt_k
+        h_new = jnp.exp(total)[:, :, None, None] * h_prev + jnp.einsum(
+            "bjh,bjn,bjhp->bhpn", decay_j, b_k.astype(f32), x_k.astype(f32))
+        return h_new, y_intra + y_inter
+
+    h_last, yc = jax.lax.scan(step, h0, (xc, dtc, bc, cc, cum))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(bsz, nc * chunk, h, p)[:, :t]
+    return y.astype(x.dtype), h_last
+
+
+def ssd_decode_step(x, dt, a, b, c, h_prev):
+    """Single-token SSD update. x: (B,1,H,P); b,c: (B,1,N); dt: (B,1,H)."""
+    f32 = jnp.float32
+    da = jnp.exp(dt[:, 0].astype(f32) * a.astype(f32)[None, :])      # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0].astype(f32),
+                     b[:, 0].astype(f32), x[:, 0].astype(f32))
+    h_new = da[:, :, None, None] * h_prev + upd
+    y = jnp.einsum("bn,bhpn->bhp", c[:, 0].astype(f32), h_new)
+    return y[:, None].astype(x.dtype), h_new
+
+
+def ssm_block(cfg, params: SSMParams, x_in: jax.Array, masks: dict | None = None,
+              state: tuple | None = None, chunk: int = 256, decode: bool = False):
+    """Full Mamba2 mixer. x_in: (B, T, d_model) (pre-normed by caller).
+
+    state: (conv_x_state (B,w-1,d_inner), conv_bc_state (B,w-1,2N), h (B,H,P,N)).
+    Returns (y (B, T, d_model), new_state).
+    """
+    m = masks or {}
+    z = L.linear(x_in, params.in_z, m.get("in_z"))
+    x = L.linear(x_in, params.in_x, m.get("in_x"))
+    bc = L.linear(x_in, params.in_bc)
+    dt = L.linear(x_in, params.in_dt)
+
+    sx, sbc, h0 = state if state is not None else (None, None, None)
+    x, new_sx = _causal_conv(x, params.conv_x, params.conv_b, sx)
+    bc, new_sbc = _causal_conv(bc, params.conv_bc, params.conv_bc_b, sbc)
+    n = cfg.ssm_state
+    b, c = bc[..., :n], bc[..., n:]
+
+    h = cfg.ssm_n_heads
+    p = cfg.ssm_head_dim
+    xh = x.reshape(*x.shape[:-1], h, p)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + params.dt_bias)
+    a = -jnp.exp(params.a_log)
+
+    if decode:
+        y, h_last = ssd_decode_step(xh, dtv, a, b, c, h0)
+        y = y.reshape(*x.shape[:-1], h, p)
+    else:
+        y, h_last = ssd_chunked(xh, dtv, a, b, c, chunk=chunk, h0=h0)
+    y = y + params.d_skip.astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*x.shape[:-1], cfg.d_inner).astype(x.dtype)
+
+    y = L.rms_norm(y * jax.nn.silu(z), params.norm_scale)
+    out = L.linear(y, params.out_proj, m.get("out_proj"))
+    return out, (new_sx, new_sbc, h_last)

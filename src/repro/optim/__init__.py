@@ -1,0 +1,8 @@
+"""Optimizers, LR schedules, gradient compression."""
+from repro.optim.optimizers import (  # noqa: F401
+    adafactor,
+    adamw,
+    make_optimizer,
+    sgd_momentum,
+)
+from repro.optim.schedules import warmup_cosine, warmup_step  # noqa: F401

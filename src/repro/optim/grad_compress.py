@@ -1,0 +1,51 @@
+"""Cross-pod gradient compression with error feedback (beyond-paper, §Perf).
+
+At 2+ pods the data-parallel gradient all-reduce crosses the DCN, which is
+>10x slower per byte than ICI. Compressing gradients to bf16 (or int8 with
+per-tensor scale) before the reduction halves (or quarters) cross-pod bytes;
+the quantization error is fed back into the next step's gradient (error
+feedback / EF-SGD) so convergence is preserved.
+
+Usage in the trainer: grads are compressed *before* they leave the backward
+pass via jax.lax.psum-equivalent (here: before the optimizer consumes them,
+with XLA's all-reduce operating on the compressed dtype).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params) -> dict:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+
+
+def compress_bf16(grads, ef_state):
+    """Round grads+error to bf16; return (compressed, new_error)."""
+    def comp(g, e):
+        g32 = g.astype(jnp.float32) + e.astype(jnp.float32)
+        c = g32.astype(jnp.bfloat16)
+        return c, (g32 - c.astype(jnp.float32)).astype(jnp.bfloat16)
+    out = jax.tree.map(comp, grads, ef_state)
+    comp_t = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    err_t = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return comp_t, err_t
+
+
+def compress_int8(grads, ef_state):
+    """Per-tensor symmetric int8 quantization with error feedback."""
+    def comp(g, e):
+        g32 = g.astype(jnp.float32) + e.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return (q, scale), (g32 - deq).astype(jnp.bfloat16)
+    out = jax.tree.map(comp, grads, ef_state)
+    comp_t = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    err_t = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return comp_t, err_t
+
+
+def decompress_int8(comp):
+    return jax.tree.map(lambda t: t[0].astype(jnp.float32) * t[1],
+                        comp, is_leaf=lambda t: isinstance(t, tuple))

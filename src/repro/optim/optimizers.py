@@ -1,0 +1,178 @@
+"""Sparse-aware optimizers (functional, optax-style but self-contained).
+
+Each optimizer is (init_fn, update_fn):
+
+  state = init(params)
+  new_params, new_state = update(params, grads, state, lr, masks=None)
+
+Sparse-awareness: when a ``masks`` pytree is given (paths mirroring params;
+missing paths = dense), the *gradient applied to the weight* is masked, while
+the incoming ``grads`` stay dense (the trainer reuses them for the RigL/SRigL
+grow criterion). Optimizer moments are masked too, so pruned slots carry no
+stale momentum — the RigL reference behaviour (regrown weights restart from
+zero weight, zero momentum).
+
+``adafactor`` (factored second moment, optional momentumless) is what the
+100B+ configs use: at 1T parameters unfactored Adam moments cannot fit HBM
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _tree_get(masks: dict | None, path: tuple):
+    if masks is None:
+        return None
+    node = masks
+    for p in path:
+        if not isinstance(node, dict) or p not in node:
+            return None
+        node = node[p]
+    return node
+
+
+def _map_with_path(fn, params, *rest):
+    """tree_map that also passes the dict-path of each leaf."""
+    def rec(path, p, *r):
+        if isinstance(p, dict):
+            return {k: rec(path + (k,), p[k], *[x[k] for x in r]) for k in p}
+        return fn(path, p, *r)
+    return rec((), params, *rest)
+
+
+def _masked(g, mask):
+    return g * mask.astype(g.dtype) if mask is not None else g
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum (paper's CNN recipe)
+# ---------------------------------------------------------------------------
+
+def sgd_momentum(momentum: float = 0.9, weight_decay: float = 0.0):
+    def init(params):
+        return {"mu": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(params, grads, state, lr, masks=None, step=None):
+        def upd(path, p, g, mu):
+            m = _tree_get(masks, path)
+            g = _masked(g.astype(jnp.float32), m)
+            if weight_decay:
+                g = g + weight_decay * _masked(p.astype(jnp.float32), m)
+            mu_new = momentum * mu + g
+            if m is not None:
+                mu_new = _masked(mu_new, m)
+            return (p.astype(jnp.float32) - lr * mu_new).astype(p.dtype), mu_new
+
+        out = _map_with_path(upd, params, grads, state["mu"])
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"mu": new_mu}
+
+    return init, update
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state, lr, masks=None, step=None):
+        c = state["count"] + 1
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(path, p, g, mu, nu):
+            m = _tree_get(masks, path)
+            g = _masked(g.astype(jnp.float32), m)
+            mu_new = b1 * mu + (1 - b1) * g
+            nu_new = b2 * nu + (1 - b2) * g * g
+            if m is not None:
+                mu_new, nu_new = _masked(mu_new, m), _masked(nu_new, m)
+            upd_ = (mu_new / bc1) / (jnp.sqrt(nu_new / bc2) + eps)
+            if weight_decay:
+                upd_ = upd_ + weight_decay * _masked(p.astype(jnp.float32), m)
+            return (p.astype(jnp.float32) - lr * upd_).astype(p.dtype), mu_new, nu_new
+
+        out = _map_with_path(upd, params, grads, state["mu"], state["nu"])
+        pick = lambda i: jax.tree.map(lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple))
+        return pick(0), {"mu": pick(1), "nu": pick(2), "count": c}
+
+    return init, update
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; for the 100B-1T configs)
+# ---------------------------------------------------------------------------
+
+def adafactor(eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay: float = 0.8, weight_decay: float = 0.0):
+    """Momentum-less Adafactor (Shazeer & Stern 2018) with factored 2nd moment
+    for tensors of rank >= 2 (factored over the last two axes)."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def st(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(st, params,
+                                  is_leaf=lambda x: not isinstance(x, dict)),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state, lr, masks=None, step=None):
+        c = state["count"] + 1
+        rho = 1.0 - c.astype(jnp.float32) ** -decay
+
+        def upd(path, p, g, v):
+            m = _tree_get(masks, path)
+            g = _masked(g.astype(jnp.float32), m)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = rho * v["vr"] + (1 - rho) * jnp.mean(g2, axis=-1)
+                vc = rho * v["vc"] + (1 - rho) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :]
+                    / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None], eps))
+                u = g / jnp.maximum(denom, eps)
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vv = rho * v["v"] + (1 - rho) * g2
+                u = g / jnp.sqrt(jnp.maximum(vv, eps))
+                new_v = {"v": vv}
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * _masked(p.astype(jnp.float32), m)
+            if m is not None:
+                u = _masked(u, m)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_v
+
+        out = _map_with_path(upd, params, grads, state["v"])
+        new_params = _map_with_path(lambda path, t: t[0], out)
+        new_v = _map_with_path(lambda path, t: t[1], out)
+        return new_params, {"v": new_v, "count": c}
+
+    return init, update
+
+
+def make_optimizer(name: str, **kw):
+    if name == "sgdm":
+        return sgd_momentum(**kw)
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(name)

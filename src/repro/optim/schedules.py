@@ -1,0 +1,27 @@
+"""Learning-rate schedules (traceable in step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
+                  min_lr: float = 0.0):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = base_lr * s / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = min_lr + 0.5 * (base_lr - min_lr) * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return lr
+
+
+def warmup_step(base_lr: float, warmup_steps: int, boundaries: tuple, factor: float = 0.1):
+    """Step decay (paper's ResNet recipe: /10 at epochs 30/70/90)."""
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = base_lr * s / jnp.maximum(warmup_steps, 1)
+        mult = jnp.ones(())
+        for b in boundaries:
+            mult = mult * jnp.where(s >= b, factor, 1.0)
+        return jnp.where(s < warmup_steps, warm, base_lr * mult)
+    return lr

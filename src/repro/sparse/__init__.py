@@ -1,0 +1,9 @@
+"""Sparse-layer registry and execution paths (masked-dense / condensed)."""
+from repro.sparse.registry import (  # noqa: F401
+    SparseStack,
+    build_registry,
+    dst_update,
+    init_sparsity_state,
+    k_fan_map,
+    sparsity_summary,
+)

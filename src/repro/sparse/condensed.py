@@ -1,0 +1,64 @@
+"""Condensed-representation export: masks -> {values, indices} pytree.
+
+The paper's serving story (Sec. 4.4): the SAME trained weights can execute
+as masked-dense (MXU path, training/prefill) or condensed constant fan-in
+(bandwidth path, decode/online inference). This module converts a trained
+(params, masks) pair into the condensed pytree that repro.models.layers
+dispatches on, and provides the abstract (ShapeDtypeStruct) variant the
+dry-run uses to lower the condensed decode program without allocation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distributions as D
+from repro.core import topology
+from repro.sparse import registry as REG
+
+
+def _condense_stack(weight, mask, k: int):
+    """vmap dense_to_condensed over the leading stack dims."""
+    fn = lambda w, m: topology.dense_to_condensed(w, m, k)
+    for _ in range(weight.ndim - 2):
+        fn = jax.vmap(fn)
+    vals, idx = fn(weight, mask)
+    return {"values": vals, "indices": idx}
+
+
+def export_condensed(cfg, registry, params: dict, masks: dict) -> dict:
+    """Concrete export after training. k per stack = max realized fan-in."""
+    out: dict = {}
+    for s in registry:
+        w = REG.get_path(params, s.path)
+        m = REG.get_path(masks, s.path)
+        nnz_per_col = jnp.sum(m, axis=-2)
+        k = int(jnp.max(nnz_per_col))
+        REG._set_path(out, s.path, _condense_stack(w * m, m, k))
+    return out
+
+
+def abstract_condensed(cfg, registry, param_dtype=None) -> dict:
+    """ShapeDtypeStruct stand-ins at the target fan-in (for the dry-run)."""
+    dt = jnp.dtype(param_dtype or cfg.param_dtype)
+    out: dict = {}
+    for s in registry:
+        k = D.fan_in_from_density(s.d_in, s.density)
+        shape = (*s.lead, s.d_out, k)
+        REG._set_path(out, s.path, {
+            "values": jax.ShapeDtypeStruct(shape, dt),
+            "indices": jax.ShapeDtypeStruct(shape, jnp.int32),
+        })
+    return out
+
+
+def condensed_bytes(cfg, registry) -> tuple[int, int]:
+    """(condensed weight bytes, dense weight bytes) across sparse stacks."""
+    dense = cond = 0
+    itemsize = jnp.dtype(cfg.param_dtype).itemsize
+    for s in registry:
+        k = D.fan_in_from_density(s.d_in, s.density)
+        n = s.n_replicas
+        dense += n * s.d_in * s.d_out * itemsize
+        cond += n * s.d_out * k * (itemsize + 4)  # values + int32 indices
+    return cond, dense

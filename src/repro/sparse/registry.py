@@ -1,0 +1,311 @@
+"""Registry of sparsifiable layers per architecture + pytree-level DST update.
+
+The registry enumerates every sparse weight *stack* (a scanned group of
+identically-shaped layers, e.g. ``("blocks", "w_gate")`` with leading dims
+``(L,)`` or ``(L, E)`` for MoE experts). The ERK distribution is solved over
+stacks; masks are initialized and updated with the leading dims vmapped so a
+single jit covers all layers of a stack.
+
+Paper-faithful defaults (DESIGN.md §5): MLP / attention-output / SSM in-out
+projections are sparse; QKV input projections, router, norms, embeddings and
+the final head stay dense (the paper's ViT recipe).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distributions as D
+from repro.core import rigl as R
+from repro.core import set_sparse as SS
+from repro.core import srigl as S
+from repro.core import topology
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseStack:
+    path: tuple[str, ...]       # location in the params pytree
+    d_in: int
+    d_out: int
+    lead: tuple[int, ...]       # leading (stack) dims, e.g. (L,) or (L, E)
+    density: float = 1.0        # filled by ERK solve
+
+    @property
+    def n_replicas(self) -> int:
+        return int(math.prod(self.lead)) if self.lead else 1
+
+    @property
+    def name(self) -> str:
+        return "/".join(self.path)
+
+    def srigl_spec(self, cfg) -> S.SRigLSpec:
+        sp = cfg.sparsity
+        return S.SRigLSpec(
+            name=self.name, d_in=self.d_in, d_out=self.d_out,
+            density=self.density, gamma_sal=sp.gamma_sal, ablation=sp.ablation)
+
+    def rigl_spec(self) -> R.RigLSpec:
+        return R.RigLSpec(name=self.name, d_in=self.d_in, d_out=self.d_out,
+                          density=self.density)
+
+
+# ---------------------------------------------------------------------------
+# enumeration
+# ---------------------------------------------------------------------------
+
+def _attn_stacks(cfg, prefix: tuple, lead: tuple, with_mlp=True) -> list[SparseStack]:
+    d, qd, kvd, ff = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.d_ff
+    out = [SparseStack(prefix + ("wo",), qd, d, lead)]
+    if cfg.sparsity.sparse_qkv:
+        out += [
+            SparseStack(prefix + ("wq",), d, qd, lead),
+            SparseStack(prefix + ("wk",), d, kvd, lead),
+            SparseStack(prefix + ("wv",), d, kvd, lead),
+        ]
+    if with_mlp and ff:
+        out += [
+            SparseStack(prefix + ("w_gate",), d, ff, lead),
+            SparseStack(prefix + ("w_up",), d, ff, lead),
+            SparseStack(prefix + ("w_down",), ff, d, lead),
+        ]
+    return out
+
+
+def _moe_stacks(cfg, prefix: tuple, lead: tuple) -> list[SparseStack]:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    out = _attn_stacks(cfg, prefix, lead, with_mlp=False)
+    out += [
+        SparseStack(prefix + ("w_gate",), d, ff, lead + (e,)),
+        SparseStack(prefix + ("w_up",), d, ff, lead + (e,)),
+        SparseStack(prefix + ("w_down",), ff, d, lead + (e,)),
+    ]
+    return out
+
+
+def _ssm_stacks(cfg, prefix: tuple, lead: tuple) -> list[SparseStack]:
+    d, di = cfg.d_model, cfg.d_inner
+    return [
+        SparseStack(prefix + ("in_z",), d, di, lead),
+        SparseStack(prefix + ("in_x",), d, di, lead),
+        SparseStack(prefix + ("out_proj",), di, d, lead),
+    ]
+
+
+def build_registry(cfg) -> list[SparseStack]:
+    """All sparse stacks of ``cfg`` with ERK/uniform densities solved."""
+    if cfg.sparsity.method == "dense":
+        return []
+    fam = cfg.family
+    stacks: list[SparseStack] = []
+    if fam in ("dense", "vlm", "audio", "vit") and not cfg.local_global_ratio:
+        stacks = _attn_stacks(cfg, ("blocks",), (cfg.n_layers,))
+    elif cfg.local_global_ratio:
+        r = cfg.local_global_ratio
+        g = cfg.n_layers // (r + 1)
+        rem = cfg.n_layers - g * (r + 1)
+        stacks = _attn_stacks(cfg, ("g_local",), (g, r))
+        stacks += _attn_stacks(cfg, ("g_global",), (g,))
+        if rem:
+            stacks += _attn_stacks(cfg, ("g_rem",), (rem,))
+    elif fam == "moe":
+        stacks = _moe_stacks(cfg, ("blocks",), (cfg.n_layers,))
+    elif fam == "ssm":
+        stacks = _ssm_stacks(cfg, ("blocks",), (cfg.n_layers,))
+    elif fam == "hybrid":
+        r = cfg.hybrid_attn_every
+        g = cfg.n_layers // r
+        rem = cfg.n_layers - g * r
+        stacks = _ssm_stacks(cfg, ("m_groups",), (g, r))
+        if rem:
+            stacks += _ssm_stacks(cfg, ("m_rem",), (rem,))
+        stacks += _attn_stacks(cfg, ("shared_attn",), ())
+    else:
+        raise ValueError(fam)
+
+    # solve the per-stack densities
+    shapes = [D.LayerShape(s.name, s.d_in, s.d_out, s.n_replicas) for s in stacks]
+    solver = D.erk_densities if cfg.sparsity.distribution == "erk" else D.uniform_densities
+    dens = solver(shapes, cfg.sparsity.sparsity)
+    return [dataclasses.replace(s, density=dens[s.name]) for s in stacks]
+
+
+def k_fan_map(cfg, registry: Sequence[SparseStack]) -> dict[str, int]:
+    """layer-name -> constant fan-in (for init scaling). Last path element keys."""
+    return {s.path[-1]: D.fan_in_from_density(s.d_in, s.density) for s in registry}
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers
+# ---------------------------------------------------------------------------
+
+def _set_path(tree: dict, path: tuple, leaf) -> None:
+    node = tree
+    for p in path[:-1]:
+        node = node.setdefault(p, {})
+    node[path[-1]] = leaf
+
+
+def get_path(tree: dict, path: tuple):
+    node = tree
+    for p in path:
+        node = node[p]
+    return node
+
+
+# ---------------------------------------------------------------------------
+# state init + update
+# ---------------------------------------------------------------------------
+
+def _vmap_over_lead(fn, n_lead: int):
+    for _ in range(n_lead):
+        fn = jax.vmap(fn)
+    return fn
+
+
+def _map_over_lead(fn, n_lead: int, constraint=None):
+    """Sequential lax.map over the FIRST leading axis (layers), vmap the rest.
+
+    Keeps topology-update temp memory at one layer-slab instead of the whole
+    stack (a 123B-arch stack would not fit HBM). ``constraint`` optionally
+    re-shards each slab for the update (row-parallel weights have their fan-in
+    axis TP-sharded in storage, but the per-column selection sorts along
+    fan-in — constraining the slab to neuron-sharded layout keeps the sort
+    shard-local; see DESIGN.md §3).
+    """
+    inner = _vmap_over_lead(fn, max(n_lead - 1, 0))
+
+    def constrained(*args):
+        if constraint is not None:
+            nd = len(constraint)
+            out = []
+            for a in args:
+                if hasattr(a, "ndim") and a.ndim == nd:        # weight-like
+                    a = jax.lax.with_sharding_constraint(a, constraint)
+                elif hasattr(a, "ndim") and a.ndim == nd - 1:  # neuron-like
+                    from jax.sharding import PartitionSpec as P
+                    a = jax.lax.with_sharding_constraint(
+                        a, P(*constraint[:-2], constraint[-1]))
+                out.append(a)
+            args = tuple(out)
+        return inner(*args)
+
+    if n_lead == 0:
+        return constrained
+    return lambda *args: jax.lax.map(lambda xs: constrained(*xs), args)
+
+
+def init_sparsity_state(cfg, key: jax.Array, registry: Sequence[SparseStack]) -> dict:
+    """Returns {"masks": pytree, "neuron_active": pytree} (paths mirror params)."""
+    masks: dict = {}
+    active: dict = {}
+    method = cfg.sparsity.method
+    keys = jax.random.split(key, max(len(registry), 1))
+    for s, k in zip(registry, keys):
+        if method in ("srigl",):
+            kk = D.fan_in_from_density(s.d_in, s.density)
+            init = lambda key_: topology.random_constant_fan_in_mask(key_, s.d_in, s.d_out, kk)
+        else:  # rigl / set: unstructured
+            nnz = max(1, round(s.density * s.d_in * s.d_out))
+            init = lambda key_: topology.random_unstructured_mask(key_, s.d_in, s.d_out, nnz)
+        lead_keys = jax.random.split(k, max(s.n_replicas, 1)).reshape(*(s.lead or (1,)), 2)
+        mask = _vmap_over_lead(init, max(len(s.lead), 1))(lead_keys)
+        if not s.lead:
+            mask = mask[0] if mask.ndim == 3 else mask
+        _set_path(masks, s.path, mask.reshape(*s.lead, s.d_in, s.d_out))
+        _set_path(active, s.path, jnp.ones((*s.lead, s.d_out), bool))
+    return {"masks": masks, "neuron_active": active}
+
+
+def dst_update(cfg, registry: Sequence[SparseStack], params: dict, grads: dict,
+               state: dict, drop_fraction, rng: jax.Array,
+               compute_specs: dict | None = None):
+    """One topology update across every sparse stack. Pure/jit-able.
+
+    Run as its OWN program every delta_t steps (not fused into train_step):
+    the selection temporaries then never contribute to the hot path's peak
+    memory, and lax.map over the layer axis bounds them to one layer-slab.
+    ``compute_specs`` optionally maps stack-name -> PartitionSpec for the
+    per-layer slab (see _map_over_lead).
+
+    Returns (new_state, stats dict keyed by stack name).
+    """
+    method = cfg.sparsity.method
+    compute_specs = compute_specs or {}
+    new_masks, new_active, stats = {}, {}, {}
+    rngs = jax.random.split(rng, max(len(registry), 1))
+    for s, key in zip(registry, rngs):
+        w = get_path(params, s.path)
+        g = get_path(grads, s.path)
+        m = get_path(state["masks"], s.path)
+        a = get_path(state["neuron_active"], s.path)
+        nl = len(s.lead)
+        cspec = compute_specs.get(s.name)
+
+        if method == "srigl":
+            spec = s.srigl_spec(cfg)
+            # f32 casts happen per-slab INSIDE the layer map: casting the
+            # whole stacked tensor up front would materialize a full f32
+            # copy of the (possibly 100B+-param) stack
+            fn = lambda w_, g_, m_, a_: S.srigl_update(
+                spec, w_.astype(jnp.float32), g_.astype(jnp.float32),
+                S.LayerState(m_, a_), drop_fraction)
+            fn = _map_over_lead(fn, nl, cspec)
+            st, sts = fn(w, g, m, a)
+            _set_path(new_masks, s.path, st.mask)
+            _set_path(new_active, s.path, st.neuron_active)
+            stats[s.name] = {k: v for k, v in sts._asdict().items()}
+        elif method == "rigl":
+            spec = s.rigl_spec()
+            fn = lambda w_, g_, m_: R.rigl_update(spec, w_, g_, R.RigLState(m_), drop_fraction)
+            fn = _vmap_over_lead(fn, nl)
+            st, sts = fn(w.astype(jnp.float32), g.astype(jnp.float32), m)
+            _set_path(new_masks, s.path, st.mask)
+            _set_path(new_active, s.path, a)
+            stats[s.name] = sts
+        elif method == "set":
+            spec = s.rigl_spec()
+            lead_keys = jax.random.split(key, max(s.n_replicas, 1)).reshape(*(s.lead or (1,)), 2)
+            if not s.lead:
+                lead_keys = lead_keys[0]
+            fn = lambda w_, k_, m_: SS.set_update(spec, w_, k_, R.RigLState(m_), drop_fraction)
+            fn = _vmap_over_lead(fn, nl)
+            st, sts = fn(w.astype(jnp.float32), lead_keys, m)
+            _set_path(new_masks, s.path, st.mask)
+            _set_path(new_active, s.path, a)
+            stats[s.name] = sts
+        else:
+            raise ValueError(method)
+    return {"masks": new_masks, "neuron_active": new_active}, stats
+
+
+def init_itop(registry: Sequence[SparseStack], state: dict) -> dict:
+    """In-Time Overparameterization tracker (Liu et al. 2021c; paper App. H):
+    the union of all masks seen so far — ITOP rate = |union| / |weights|."""
+    return jax.tree.map(lambda m: m, state["masks"])
+
+
+def update_itop(itop: dict, masks: dict) -> dict:
+    return jax.tree.map(lambda u, m: u | m, itop, masks)
+
+
+def itop_rate(registry: Sequence[SparseStack], itop: dict) -> dict:
+    return {s.name: float(jnp.mean(get_path(itop, s.path).astype(jnp.float32)))
+            for s in registry}
+
+
+def sparsity_summary(registry: Sequence[SparseStack], state: dict) -> dict:
+    """Host-side summary: realized sparsity + ablation fraction per stack."""
+    out = {}
+    for s in registry:
+        m = get_path(state["masks"], s.path)
+        a = get_path(state["neuron_active"], s.path)
+        out[s.name] = {
+            "density": float(jnp.mean(m.astype(jnp.float32))),
+            "target_density": s.density,
+            "active_neurons": float(jnp.mean(a.astype(jnp.float32))),
+        }
+    return out

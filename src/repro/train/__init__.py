@@ -1,0 +1,3 @@
+"""Training runtime: state, trainer loop, checkpointing, elasticity."""
+from repro.train.state import TrainState, init_train_state  # noqa: F401
+from repro.train.trainer import Trainer, train_step  # noqa: F401

@@ -1,0 +1,52 @@
+"""Elastic scaling + fault-domain utilities.
+
+Checkpoints are stored mesh-agnostic (see checkpoint.py), so elastic scaling
+is: (1) detect the new device set, (2) rebuild the mesh with
+``largest_feasible_mesh``, (3) re-lower train_step under the new mesh,
+(4) restore the checkpoint with the new-sharding template. Nothing else in the
+stack changes — DST state (masks / neuron_active) reshards with its weights
+because the shardings are path-parallel.
+
+Straggler mitigation at the multi-slice level (documented pattern, exercised
+by the Trainer watchdog hook): ΔT-aligned checkpoint cadence keeps the restart
+penalty below one DST period; hot-spare slices take over the data-parallel
+rank of a failed slice by replaying from (step // ckpt_every) * ckpt_every.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def largest_feasible_mesh(n_devices: int, model_parallel: int):
+    """Greatest (data, model) grid with model fixed and data = n // model.
+
+    Elastic restarts keep the model-parallel degree (weight shards must stay
+    rectangular) and absorb device loss in the data axis; leftover devices
+    idle until the next maintenance window.
+    """
+    model = model_parallel
+    data = max(1, n_devices // model)
+    return (data, model)
+
+
+def remesh(template_state, ckpt_dir: str, step: int, make_state_fn):
+    """Re-shard a checkpoint onto the current device topology.
+
+    make_state_fn() must initialize a state under the *new* mesh (shardings
+    attached); values are then overwritten from the checkpoint.
+    """
+    from repro.train import checkpoint as CKPT
+    new_template = make_state_fn()
+    return CKPT.restore(ckpt_dir, step, new_template)
+
+
+def device_health() -> dict:
+    """Cheap liveness probe across local devices (multi-host: all_gather it)."""
+    out = {}
+    for d in jax.local_devices():
+        try:
+            x = jax.device_put(jax.numpy.ones(()), d)
+            out[str(d)] = bool(x.block_until_ready() == 1.0)
+        except Exception:  # pragma: no cover - only on real hw faults
+            out[str(d)] = False
+    return out

@@ -1,0 +1,46 @@
+"""TrainState: everything a step needs, one pytree (checkpointable)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.optim import make_optimizer
+from repro.sparse import registry as REG
+
+
+class TrainState(NamedTuple):
+    step: jax.Array            # () int32
+    params: Any                # model parameter pytree
+    opt_state: Any
+    masks: Any                 # sparse boolean masks (paths mirror params)
+    neuron_active: Any         # per-stack (lead..., d_out) bool
+    grad_accum: Any            # dense-grad accumulator for the saliency window
+                               # ({} when grad_accum_for_saliency == 1)
+    rng: jax.Array
+
+
+def init_train_state(cfg, key: jax.Array) -> TrainState:
+    k_params, k_masks, k_rng = jax.random.split(key, 3)
+    registry = REG.build_registry(cfg)
+    k_fan = REG.k_fan_map(cfg, registry)
+    params = M.init_params(cfg, k_params, k_fan)
+    if registry:
+        sp_state = REG.init_sparsity_state(cfg, k_masks, registry)
+        masks, active = sp_state["masks"], sp_state["neuron_active"]
+    else:
+        masks, active = {}, {}
+    opt_init, _ = make_optimizer(cfg.optimizer)
+    opt_state = opt_init(params)
+    if cfg.sparsity.grad_accum_for_saliency > 1 and registry:
+        accum = {}
+        for s in registry:
+            w = REG.get_path(params, s.path)
+            REG._set_path(accum, s.path, jnp.zeros(w.shape, jnp.float32))
+    else:
+        accum = {}
+    return TrainState(
+        step=jnp.zeros((), jnp.int32), params=params, opt_state=opt_state,
+        masks=masks, neuron_active=active, grad_accum=accum, rng=k_rng)

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests run on the single host CPU device (the 512-device forcing is ONLY in
+# repro.launch.dryrun, which must never be imported here).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

