@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   flops_table     — Table 5  sparse vs dense training/inference FLOPs
   condensed_bench — Fig. 4   condensed vs dense/unstructured/structured layer
   ablation_bench  — Fig. 3b  active-neuron fraction, RigL vs SRigL
+  serve_paths     — Fig. 6/7 masked vs condensed vs structured decode tok/s
   accuracy        — Tables 1-3 proxy: method ordering on a small LM
   gamma_sweep     — Fig. 8   gamma_sal sensitivity
   roofline        — §Roofline aggregation of dry-run results (if present)
@@ -24,7 +25,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (accuracy, ablation_bench, condensed_bench,
-                            flops_table, gamma_sweep, roofline, variance)
+                            flops_table, gamma_sweep, roofline, serve_paths,
+                            variance)
 
     steps = 30 if args.quick else 80
     suites = [
@@ -32,6 +34,8 @@ def main(argv=None) -> int:
         ("flops_table", flops_table.run),
         ("condensed_bench", lambda: condensed_bench.run(batch=1)
                                     + condensed_bench.run(batch=256)),
+        ("serve_paths", lambda: serve_paths.run(
+            batches=(1, 32) if args.quick else (1, 32, 256))),
         ("ablation_bench", lambda: ablation_bench.run(steps=min(steps, 40))),
         ("accuracy", lambda: accuracy.run(steps=steps)),
         ("gamma_sweep", lambda: gamma_sweep.run(steps=min(steps, 60))),

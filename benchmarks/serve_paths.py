@@ -1,0 +1,59 @@
+"""Serving-path decode throughput: masked vs condensed vs structured.
+
+Reproduces the *shape* of the paper's Fig. 6/7 claim (real-world inference
+acceleration from constant fan-in sparsity) on the smoke LM: for each batch
+size in {1, 32, 256}, run the jitted lax.scan greedy-decode loop through each
+serving representation and report tokens/second.
+
+CPU caveat (same as condensed_bench): the Pallas kernel runs in interpret
+mode here, so absolute condensed timings do not transfer to the TPU/GPU
+target — the analytic weight-bytes ratio printed in the derived column is the
+quantity that does (decode is bandwidth-bound).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch import serve
+from repro.models import model as M
+from repro.sparse import condensed as COND
+from repro.sparse import registry as REG
+
+BATCHES = (1, 32, 256)
+PROMPT_LEN = 8
+GEN_LEN = 8
+
+
+def run(batches=BATCHES, arch: str = "qwen3-1.7b"):
+    cfg = configs.get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    reg = REG.build_registry(cfg)
+    params = M.init_params(cfg, key, REG.k_fan_map(cfg, reg))
+    masks = REG.init_sparsity_state(cfg, key, reg)["masks"]
+    cond_bytes, dense_bytes = COND.condensed_bytes(cfg, reg)
+
+    rows = []
+    for batch in batches:
+        prompts = jax.random.randint(key, (batch, PROMPT_LEN), 0, cfg.vocab_size)
+        for path in serve.PATHS:
+            sm = serve.build_serving_masks(cfg, reg, params, masks, path)
+            # compile (prefill jit + decode-loop jit), then one timed pass
+            serve.serve_once(cfg, params, sm, prompts, GEN_LEN, path, quiet=True)
+            _, tok_s = serve.serve_once(cfg, params, sm, prompts, GEN_LEN, path,
+                                        quiet=True)
+            ratio = {"masked": 1.0, "structured": 1.0,
+                     "condensed": cond_bytes / dense_bytes}[path]
+            # decode-only per-token cost (prefill excluded — the claim under
+            # benchmark is decode throughput, and interpret-mode prefill would
+            # otherwise dominate the condensed column)
+            rows.append((f"serve_paths/{path}/b{batch}",
+                         1e6 / tok_s,
+                         f"tok_s={tok_s:.1f};weight_bytes_ratio={ratio:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -60,6 +60,23 @@ def main():
     print(f"condensed-vs-masked max err: {err:.2e}  (fan-in k={k}, "
           f"{vals.size}/{w.size} weights stored = {vals.size/w.size:.1%})")
 
+    # 5. serve the trained model through both representations: the condensed
+    #    path runs every sparse linear through the Pallas constant fan-in
+    #    kernel and greedy decode is token-identical to masked-dense.
+    #    (CLI equivalent:
+    #       PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
+    #           --smoke --path condensed)
+    from repro.launch import serve
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                                 cfg.vocab_size)
+    cond = serve.build_serving_masks(cfg, registry, state.params, state.masks,
+                                     "condensed")
+    out_masked = serve.generate(cfg, state.params, state.masks, prompts, 8)
+    out_cond = serve.generate(cfg, state.params, cond, prompts, 8)
+    same = bool(jnp.all(out_masked == out_cond))
+    print(f"serve: condensed decode tokens == masked decode tokens: {same}")
+    print(f"serve: first stream: {out_cond[0, 8:].tolist()}")
+
 
 if __name__ == "__main__":
     main()

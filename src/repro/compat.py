@@ -1,0 +1,152 @@
+"""JAX version-compat layer: one import site for every mesh/layout API that
+moved between JAX 0.4.x and current.
+
+The repo targets the newest mesh APIs (`jax.sharding.get_abstract_mesh`,
+`jax.set_mesh`, `jax.sharding.AxisType`, `jax.experimental.layout.Format`) but
+must run on the 0.4.x series baked into CPU test containers. Every module that
+touches mesh state imports these shims instead of jax directly:
+
+  get_abstract_mesh()   -> AbstractMesh | None  (None == "not under a mesh")
+  use_mesh(mesh)        -> context manager entering BOTH the physical-mesh
+                           resource env and the abstract-mesh tracing context
+                           (on 0.4.x these are two separate thread-locals; on
+                           current JAX it is jax.set_mesh)
+  make_mesh(shape, axes)-> jax.make_mesh with axis_types=Auto when the
+                           installed version supports explicit axis types
+  Format / DeviceLayout -> jax.experimental.layout.{Format, Layout} on current
+                           JAX, {Layout, DeviceLocalLayout} on 0.4.x
+
+The shims are resolved at import time (cheap getattr probes, no version
+string parsing) so behaviour under a given JAX install is deterministic.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+# Stable across every supported version — re-exported so sharding code has a
+# single compat import site.
+from jax.sharding import NamedSharding, PartitionSpec  # noqa: F401
+
+
+def _mesh_internals():
+    from jax._src import mesh as mesh_src
+    return mesh_src
+
+
+# ---------------------------------------------------------------------------
+# abstract mesh
+# ---------------------------------------------------------------------------
+
+def get_abstract_mesh():
+    """The abstract mesh of the current tracing context, or None.
+
+    Normalizes the cross-version zoo of "no mesh" sentinels (missing symbol,
+    ``None``, empty tuple, ``AbstractMesh(empty=True)``) to a plain ``None`` so
+    callers can write ``if compat.get_abstract_mesh() is None``.
+    """
+    public = getattr(jax.sharding, "get_abstract_mesh", None)
+    if public is not None:
+        mesh = public()
+    else:
+        try:
+            mesh = _mesh_internals().get_abstract_mesh()
+        except Exception:  # noqa: BLE001 — any internals drift means "no mesh"
+            return None
+    if mesh is None or isinstance(mesh, tuple):
+        return None
+    if getattr(mesh, "empty", False):
+        return None
+    return mesh
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Enter ``mesh`` for both execution and tracing, on any JAX version.
+
+    Equivalent to ``with jax.set_mesh(mesh):`` on current JAX. On 0.4.x the
+    physical resource env (consumed by ``with_sharding_constraint`` given a
+    bare PartitionSpec) and the abstract mesh (consumed by shard_hint during
+    tracing, and part of the jit cache key) are separate thread-locals; this
+    enters both.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        with set_mesh(mesh):
+            yield mesh
+        return
+    sharding_use = getattr(jax.sharding, "use_mesh", None)
+    if sharding_use is not None:
+        with sharding_use(mesh):
+            yield mesh
+        return
+    mesh_src = _mesh_internals()
+    with contextlib.ExitStack() as stack:
+        stack.enter_context(mesh)  # physical resource env
+        abstract = getattr(mesh, "abstract_mesh", None)
+        if abstract is not None and hasattr(mesh_src, "set_abstract_mesh"):
+            stack.enter_context(mesh_src.set_abstract_mesh(abstract))
+        yield mesh
+
+
+# Drop-in for call sites written against the current-JAX name.
+set_mesh = use_mesh
+
+
+# ---------------------------------------------------------------------------
+# mesh construction
+# ---------------------------------------------------------------------------
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """jax.make_mesh, requesting Auto axis types where the API exists."""
+    kwargs = {} if devices is None else {"devices": devices}
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=(axis_type.Auto,) * len(axis_names),
+                                 **kwargs)
+        except TypeError:  # version with AxisType but older make_mesh signature
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# compiled-program introspection
+# ---------------------------------------------------------------------------
+
+def cost_analysis(compiled) -> dict:
+    """Normalized ``compiled.cost_analysis()``: current JAX returns a flat
+    dict, 0.4.x returns a one-element list of dicts (one per computation)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost) if cost else {}
+
+
+# ---------------------------------------------------------------------------
+# layout / Format
+# ---------------------------------------------------------------------------
+
+try:  # current JAX: Format wraps (DeviceLocalLayout-like, Sharding)
+    from jax.experimental.layout import Format  # type: ignore
+    try:
+        from jax.experimental.layout import Layout as DeviceLayout  # type: ignore
+    except ImportError:  # pragma: no cover
+        DeviceLayout = None
+except ImportError:
+    try:  # 0.4.x: Layout plays Format's role; DeviceLocalLayout the inner one
+        from jax.experimental.layout import Layout as Format  # type: ignore
+        from jax.experimental.layout import DeviceLocalLayout as DeviceLayout  # type: ignore
+    except ImportError:  # pragma: no cover — layouts unavailable entirely
+        Format = None
+        DeviceLayout = None
+
+HAS_FORMAT = Format is not None
+
+
+def default_format():
+    """A no-constraint layout value accepted by jit's in_shardings/out_layouts
+    slots on every supported version (None == "compiler picks")."""
+    return None

@@ -11,7 +11,8 @@ steps of the paper map to the code as follows:
   2. K = drop_fraction * nnz (per layer, cosine-annealed)          -> schedule.py
   3. per-neuron salient count: survivors-of-prune + top-K-gradients
   4. ablate neurons with fewer than max(1, ceil(gamma_sal * k)) salient weights
-  5. new fan-in k' = round(target_nnz / n_active')
+  5. new fan-in k' = floor(target_nnz / n_active')  (floor => nnz never
+     exceeds the per-layer budget; see the step-5 comment below)
   6. layer-wise prune of the K smallest-magnitude active weights
   7. per-neuron regrow by decreasing |G| until fan-in k'
 
@@ -130,8 +131,11 @@ def srigl_update(
         active_new = jnp.ones_like(active_old)
 
     # -- step 5: new constant fan-in ----------------------------------------
+    # floor (not round) keeps nnz = k' * n_active' <= target_nnz exact: the
+    # budget never grows across updates. target_nnz = k0*d_out >= d_out >=
+    # n_active', so floor >= 1 and the lower clip never inflates the budget.
     n_active_new = jnp.maximum(jnp.sum(active_new), 1)
-    k_new = jnp.clip(jnp.round(spec.target_nnz / n_active_new), 1, spec.d_in)
+    k_new = jnp.clip(spec.target_nnz // n_active_new, 1, spec.d_in)
     k_new = k_new.astype(jnp.int32)
 
     # -- steps 6+7: build the new mask by per-column priority ---------------

@@ -32,7 +32,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
-from repro import configs
+from repro import compat, configs
 from repro.data.pipeline import make_batch_spec
 from repro.launch import hlo_analysis as HLO
 from repro.launch.mesh import make_production_mesh
@@ -81,7 +81,7 @@ def lower_train(cfg, shape, mesh):
                            microbatches=cfg.microbatches)
     jitted = jax.jit(step, in_shardings=(st_sh, b_sh),
                      out_shardings=(st_sh, None), donate_argnums=(0,))
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         return jitted.lower(state_sds, batch_sds)
 
 
@@ -103,7 +103,7 @@ def lower_dst(cfg, shape, mesh):
     step = make_dst_step(cfg, registry, compute_specs=None)
     jitted = jax.jit(step, in_shardings=(st_sh, b_sh), out_shardings=st_sh,
                      donate_argnums=(0,))
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         return jitted.lower(state_sds, batch_sds)
 
 
@@ -130,7 +130,7 @@ def lower_serve_condensed(cfg, shape, mesh):
     jitted = jax.jit(serve_step,
                      in_shardings=(p_sh, m_sh, b_sh, c_sh),
                      out_shardings=(None, c_sh), donate_argnums=(3,))
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         return jitted.lower(params_sds, cond_sds, batch_sds, cache_sds)
 
 
@@ -166,7 +166,7 @@ def lower_serve(cfg, shape, mesh):
     jitted = jax.jit(serve_step,
                      in_shardings=(p_sh, m_sh, b_sh, c_sh),
                      out_shardings=(None, c_sh), donate_argnums=(3,))
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         return jitted.lower(params_sds, masks_sds, batch_sds, cache_sds)
 
 
@@ -188,7 +188,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, quiet: bool = False,
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = compat.cost_analysis(compiled)
     hlo = compiled.as_text()
     # trip-count-aware static cost model (xla's cost_analysis counts scan
     # bodies once — see hlo_analysis module docstring); bf16_equiv corrects

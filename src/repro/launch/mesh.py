@@ -2,25 +2,24 @@
 
 A function (not a module-level constant) so importing this module never
 touches jax device state — smoke tests must keep seeing 1 CPU device while
-dryrun.py boots with 512 forced host devices.
+dryrun.py boots with 512 forced host devices. Mesh creation goes through
+repro.compat so the same code runs on JAX 0.4.x (no AxisType) and current.
 """
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 chips per pod; 2 pods when multi_pod (pod axis = pure DP/DCN)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Degenerate 1x1 mesh on the local device (CPU tests/examples)."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 def batch_axes(mesh) -> tuple:

@@ -28,7 +28,8 @@ hand-written per-arch table to drift out of sync.
 from __future__ import annotations
 
 import jax
-from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import NamedSharding, PartitionSpec as P
 
 
 # ---------------------------------------------------------------------------

@@ -42,18 +42,27 @@ def embed_init(key: jax.Array, vocab: int, d: int, dtype=jnp.float32) -> jax.Arr
 def linear(x: jax.Array, w: jax.Array, mask=None) -> jax.Array:
     """y = x @ (w masked if sparse). Dense gradients via straight-through.
 
-    When ``mask`` is a condensed dict {"values": (n_out,k), "indices": ...}
-    (exported via repro.sparse.condensed), the dense weight is not read at
-    all — the gather-multiply-reduce touches only n_out*k weight entries,
-    the paper's Alg. 1 inference path (bandwidth win at decode time).
+    Serving-representation dispatch (paper Sec. 4.4 "same weights, two
+    representations"): the ``mask`` argument selects the execution path.
+
+    * bool array — masked-dense MXU path (training / prefill default).
+    * {"values": (n_out, k), "indices": (n_out, k)} — condensed constant
+      fan-in path via the Pallas kernel (repro.kernels.ops): the dense
+      weight is not read at all, HBM traffic shrinks to n_out*k entries
+      (values + indices), the paper's Alg. 1 decode path.
+    * {"neuron_active": (n_out,)} — structured-only path (Fig. 4): ablated
+      output neurons are dropped but active columns stay dense. Exact only
+      for ablation-only layers; used by the serving ablation benchmark.
     """
     if isinstance(mask, dict):
-        from repro.kernels import ref
-        lead = x.shape[:-1]
-        y = ref.condensed_matmul_ref(
-            x.reshape(-1, x.shape[-1]),
-            mask["values"].astype(x.dtype), mask["indices"])
-        return y.reshape(*lead, y.shape[-1])
+        from repro.kernels import ops
+        if "values" in mask:
+            return ops.condensed_linear_nd(
+                x, mask["values"].astype(x.dtype), mask["indices"])
+        if "neuron_active" in mask:
+            return ops.structured_dense(x, w.astype(x.dtype),
+                                        mask["neuron_active"])
+        raise ValueError(f"unknown serving-mask dict keys: {sorted(mask)}")
     if mask is not None:
         w = apply_mask_for_forward(w, mask)
     return x @ w.astype(x.dtype)

@@ -25,6 +25,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import moe as MOE
@@ -35,10 +36,9 @@ Masks = dict
 
 
 def _mesh_ok():
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or getattr(mesh, "empty", True):
-        return None
-    return mesh
+    """Abstract mesh of the current trace, or None (via the compat shim —
+    jax.sharding.get_abstract_mesh only exists on newer JAX)."""
+    return compat.get_abstract_mesh()
 
 
 def shard_hint(x: jax.Array, *spec):

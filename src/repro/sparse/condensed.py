@@ -38,6 +38,23 @@ def export_condensed(cfg, registry, params: dict, masks: dict) -> dict:
     return out
 
 
+def export_structured(cfg, registry, masks: dict) -> dict:
+    """Structured-only serving pytree: {"neuron_active": (lead..., d_out)}.
+
+    The Fig. 4 "structured" representation drops ablated output neurons but
+    keeps active columns dense — repro.models.layers.linear dispatches these
+    dicts to kernels.ops.structured_dense. A neuron is active iff its mask
+    column has any non-zero (matches the trainer's neuron_active state after
+    an SRigL update, and degrades gracefully for unstructured masks).
+    """
+    out: dict = {}
+    for s in registry:
+        m = REG.get_path(masks, s.path)
+        REG._set_path(out, s.path,
+                      {"neuron_active": jnp.any(m, axis=-2)})
+    return out
+
+
 def abstract_condensed(cfg, registry, param_dtype=None) -> dict:
     """ShapeDtypeStruct stand-ins at the target fan-in (for the dry-run)."""
     dt = jnp.dtype(param_dtype or cfg.param_dtype)

@@ -1,0 +1,94 @@
+"""hypothesis when installed, else a seeded-parametrize fallback.
+
+The property-test modules import ``given``, ``settings`` and ``st`` from here
+instead of from hypothesis directly. With hypothesis installed these ARE the
+hypothesis objects (shrinking, example database, the works). Without it, the
+fallback turns each ``@given`` property into a deterministic
+``pytest.mark.parametrize`` over seeded draws — weaker (no shrinking, fixed
+example count) but it keeps every property exercised, so the suite collects
+and runs on minimal containers.
+
+Fallback subset implemented: st.integers / st.floats / st.sampled_from /
+st.booleans, settings(max_examples=, deadline=), @given with positional
+strategies. That is exactly the surface the test modules use; extend here
+before reaching for new hypothesis features.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # ---- seeded fallback ---------------------------------
+    HAVE_HYPOTHESIS = False
+    import random
+    import zlib
+
+    import pytest
+
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw_fn, label):
+            self._draw_fn = draw_fn
+            self.label = label
+
+        def draw(self, rng: random.Random):
+            return self._draw_fn(rng)
+
+        def __repr__(self):
+            return f"_Strategy({self.label})"
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                             f"integers({min_value},{max_value})")
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                             f"floats({min_value},{max_value})")
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements),
+                             f"sampled_from({elements!r})")
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+    st = _StrategiesModule()
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            if getattr(fn, "_hyp_given_applied", False):
+                # real hypothesis accepts either order; the fallback reads
+                # max_examples at @given time, so settings applied above it
+                # would be silently dropped — fail loudly instead
+                raise RuntimeError(
+                    "_hypothesis_compat fallback: apply @settings BELOW "
+                    "@given (given outermost), or max_examples is ignored")
+            fn._hyp_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            n = getattr(fn, "_hyp_max_examples", _DEFAULT_EXAMPLES)
+            # stable per-test seed base so renaming other tests never
+            # reshuffles this one's examples
+            base = zlib.crc32(fn.__name__.encode())
+
+            def wrapper(_hyp_example):
+                rng = random.Random(base * 1_000_003 + _hyp_example)
+                fn(*[s.draw(rng) for s in strategies])
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._hyp_given_applied = True
+            return pytest.mark.parametrize("_hyp_example", range(n))(wrapper)
+        return deco
