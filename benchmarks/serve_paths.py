@@ -1,24 +1,34 @@
-"""Serving-path decode throughput: masked vs condensed vs structured.
+"""Serving-path decode throughput: all four representations + the auto plan.
 
 Reproduces the *shape* of the paper's Fig. 6/7 claim (real-world inference
 acceleration from constant fan-in sparsity) on the smoke LM: for each batch
 size in {1, 32, 256}, run the jitted lax.scan greedy-decode loop through each
-serving representation and report tokens/second.
+serving representation (masked / condensed / structured /
+condensed_over_active) plus the cost-model ``auto`` plan, and report
+tokens/second. The auto rows also record which representation the plan chose
+per stack — the expected trajectory is condensed at B=1 flipping to masked by
+B=256 (paper Sec. 4.4 crossover).
+
+Besides the CSV rows, ``main`` emits machine-readable
+``BENCH_serve_paths.json`` so the perf trajectory is tracked across PRs.
 
 CPU caveat (same as condensed_bench): the Pallas kernel runs in interpret
 mode here, so absolute condensed timings do not transfer to the TPU/GPU
-target — the analytic weight-bytes ratio printed in the derived column is the
-quantity that does (decode is bandwidth-bound).
+target — the analytic weight-bytes ratio in the derived column is the
+quantity that does (decode is bandwidth-bound). The ratio is each plan's
+per-step weight traffic relative to the MASKED serving path (dense weights +
+bool mask), so masked == 1.0 by definition and an auto plan that resolves
+every stack to masked also reports exactly 1.0.
 """
-import time
+import argparse
+import json
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.launch import serve
 from repro.models import model as M
-from repro.sparse import condensed as COND
+from repro.sparse import plan as PLAN
 from repro.sparse import registry as REG
 
 BATCHES = (1, 32, 256)
@@ -26,34 +36,76 @@ PROMPT_LEN = 8
 GEN_LEN = 8
 
 
-def run(batches=BATCHES, arch: str = "qwen3-1.7b"):
+def run(batches=BATCHES, arch: str = "qwen3-1.7b", results: list | None = None):
     cfg = configs.get_smoke_config(arch)
     key = jax.random.PRNGKey(0)
     reg = REG.build_registry(cfg)
     params = M.init_params(cfg, key, REG.k_fan_map(cfg, reg))
     masks = REG.init_sparsity_state(cfg, key, reg)["masks"]
-    cond_bytes, dense_bytes = COND.condensed_bytes(cfg, reg)
 
     rows = []
     for batch in batches:
         prompts = jax.random.randint(key, (batch, PROMPT_LEN), 0, cfg.vocab_size)
-        for path in serve.PATHS:
-            sm = serve.build_serving_masks(cfg, reg, params, masks, path)
+        for path in PLAN.PATHS:
+            if path == "masked":
+                sm, reps, ratio = masks, {s.name: "masked" for s in reg}, 1.0
+            else:
+                plan = serve.build_plan(cfg, reg, params, masks, path,
+                                        batch_size=batch)
+                sm = plan.serving_tree
+                reps = {n: d.representation for n, d in plan.decisions.items()}
+                sb, db = plan.weight_bytes()
+                ratio = sb / db
             # compile (prefill jit + decode-loop jit), then one timed pass
             serve.serve_once(cfg, params, sm, prompts, GEN_LEN, path, quiet=True)
             _, tok_s = serve.serve_once(cfg, params, sm, prompts, GEN_LEN, path,
                                         quiet=True)
-            ratio = {"masked": 1.0, "structured": 1.0,
-                     "condensed": cond_bytes / dense_bytes}[path]
             # decode-only per-token cost (prefill excluded — the claim under
             # benchmark is decode throughput, and interpret-mode prefill would
             # otherwise dominate the condensed column)
             rows.append((f"serve_paths/{path}/b{batch}",
                          1e6 / tok_s,
                          f"tok_s={tok_s:.1f};weight_bytes_ratio={ratio:.3f}"))
+            if results is not None:
+                results.append({
+                    "arch": arch, "batch": batch, "path": path,
+                    "tok_s": round(tok_s, 2),
+                    "us_per_tok": round(1e6 / tok_s, 2),
+                    "weight_bytes_ratio": round(ratio, 4),
+                    "representations": reps,
+                })
     return rows
 
 
-if __name__ == "__main__":
-    for name, us, derived in run():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--batches", default=",".join(map(str, BATCHES)))
+    ap.add_argument("--out", default="BENCH_serve_paths.json",
+                    help="machine-readable results (perf trajectory across PRs)")
+    args = ap.parse_args(argv)
+    batches = tuple(int(b) for b in args.batches.split(","))
+
+    results: list = []
+    rows = run(batches=batches, arch=args.arch, results=results)
+    for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if args.out:
+        payload = {
+            "benchmark": "serve_paths",
+            "arch": args.arch,
+            "prompt_len": PROMPT_LEN,
+            "gen_len": GEN_LEN,
+            "backend": jax.default_backend(),
+            "pallas_interpret_note": "condensed timings are interpret-mode on "
+                                     "CPU; weight_bytes_ratio is the "
+                                     "hardware-transferable quantity",
+            "rows": results,
+        }
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"[serve_paths] wrote {args.out} ({len(results)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -60,22 +60,40 @@ def main():
     print(f"condensed-vs-masked max err: {err:.2e}  (fan-in k={k}, "
           f"{vals.size}/{w.size} weights stored = {vals.size/w.size:.1%})")
 
-    # 5. serve the trained model through both representations: the condensed
-    #    path runs every sparse linear through the Pallas constant fan-in
-    #    kernel and greedy decode is token-identical to masked-dense.
+    # 5. serve the trained model through an execution PLAN (paper Sec. 4.4):
+    #    repro.sparse.plan picks a representation PER STACK from a bytes/FLOPs
+    #    cost model over the request batch — condensed gather at decode (B=1),
+    #    masked-dense MXU at large batch, and the composed condensed-over-
+    #    active once training has ablated neurons (the combined Fig. 4 point).
+    #    Greedy decode is token-identical to masked-dense for every exact
+    #    representation the plan can choose.
     #    (CLI equivalent:
     #       PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
-    #           --smoke --path condensed)
+    #           --smoke --path auto)
     from repro.launch import serve
     prompts = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
                                  cfg.vocab_size)
-    cond = serve.build_serving_masks(cfg, registry, state.params, state.masks,
-                                     "condensed")
+    plan = serve.build_plan(cfg, registry, state.params, state.masks, "auto",
+                            batch_size=2, mask_versions=state.mask_versions)
+    print(plan.describe())
     out_masked = serve.generate(cfg, state.params, state.masks, prompts, 8)
-    out_cond = serve.generate(cfg, state.params, cond, prompts, 8)
-    same = bool(jnp.all(out_masked == out_cond))
-    print(f"serve: condensed decode tokens == masked decode tokens: {same}")
-    print(f"serve: first stream: {out_cond[0, 8:].tolist()}")
+    out_plan = serve.generate(cfg, state.params, plan.serving_tree, prompts, 8)
+    same = bool(jnp.all(out_masked == out_plan))
+    print(f"serve: planned decode tokens == masked decode tokens: {same}")
+    print(f"serve: first stream: {out_plan[0, 8:].tolist()}")
+
+    # 6. incremental export: keep training, then refresh the plan — only
+    #    stacks whose mask-version counter moved are re-condensed, so a live
+    #    training job can serve without a full re-export every delta_t steps.
+    for i in range(60, 70):
+        batch = jax.tree.map(jnp.asarray, data.batch(i))
+        state, _ = step(state, batch)
+        if bool(sched.is_update_step(i + 1)):
+            state = dst(state, batch)
+    changed = plan.refresh(state.params, state.masks, state.mask_versions)
+    print(f"serve: plan.refresh re-condensed {len(changed)}/{len(registry)} "
+          f"stacks: {changed}; values-only regathers (topology unchanged, "
+          f"weights trained on): {plan.value_refreshes}")
 
 
 if __name__ == "__main__":

@@ -11,9 +11,15 @@ The **condensed representation** stores such a matrix as two dense arrays:
   values  : (d_out, k)  — the non-zero weights of each neuron
   indices : (d_out, k)  — the input-feature index of each non-zero (int32)
 
-Ablated neurons are represented with ``indices`` row 0..k-1 and ``values`` row 0
-(a zero row contributes nothing); a separate ``neuron_active`` bool vector tracks
-ablation for the structured (row-removal) execution path.
+Padding slots (columns with fewer than k non-zeros, including fully-ablated
+neurons) carry ``values`` 0 and an ``indices`` entry pointing at an INACTIVE
+row of that column (mask False there). That invariant makes a values-only
+refresh exact: re-gathering ``(w * mask)`` at the stored indices reproduces 0
+for every padding slot without a duplicate contribution — the incremental
+serving export (repro.sparse.plan.Plan.refresh) relies on it to update
+weights under unchanged topology without re-sorting. A separate
+``neuron_active`` bool vector tracks ablation for the structured
+(row-removal) execution path.
 """
 from __future__ import annotations
 
@@ -76,8 +82,11 @@ def check_nm(mask: np.ndarray, n: int, m: int) -> bool:
 def dense_to_condensed(weight: jax.Array, mask: jax.Array, k: int):
     """Convert masked dense (d_in, d_out) to condensed (values, indices) of shape (d_out, k).
 
-    Requires every column of ``mask`` to have at most k True. Columns with fewer
-    than k non-zeros (e.g. ablated neurons) are padded with index 0 / value 0.
+    Requires every column of ``mask`` to have at most k True. Columns with
+    fewer than k non-zeros (e.g. ablated neurons) are padded with value 0 and
+    an index pointing at an inactive row of that column (the row order ranks
+    active rows first, so slots past a column's nnz land on mask-False rows) —
+    see the module docstring for why padding must NOT alias an active row.
     """
     d_in, d_out = weight.shape
     # Rank active entries first within each column (stable => ascending row order).
@@ -86,8 +95,7 @@ def dense_to_condensed(weight: jax.Array, mask: jax.Array, k: int):
     top_idx = order[:k, :].T.astype(jnp.int32)  # (d_out, k)
     gathered_mask = jnp.take_along_axis(mask.T, top_idx, axis=1)
     values = jnp.take_along_axis(weight.T, top_idx, axis=1) * gathered_mask
-    indices = jnp.where(gathered_mask, top_idx, 0).astype(jnp.int32)
-    return values, indices
+    return values, top_idx
 
 
 def condensed_to_dense(values: jax.Array, indices: jax.Array, d_in: int):

@@ -63,13 +63,39 @@ def condensed_linear_nd(x: jax.Array, values: jax.Array, indices: jax.Array, **k
     return y.reshape(*lead, values.shape[0])
 
 
+def condensed_over_active_linear_nd(x: jax.Array, values: jax.Array,
+                                    indices: jax.Array, out_index: jax.Array,
+                                    d_out: int, **kw) -> jax.Array:
+    """Composed Fig. 4 representation: condensed gather over ACTIVE rows only.
+
+    values/indices: (a, k) condensed arrays covering only surviving (non-
+    ablated) neurons; out_index: (a,) int32 position of each surviving row in
+    the full (d_out,) output, with out-of-range entries (== d_out) marking
+    padding rows. The gather kernel runs over a <= d_out rows — the ablated-
+    neuron fraction converts directly into fewer HBM bytes AND fewer gather
+    FLOPs — and the result is scattered into the dense output layout (ablated
+    neurons are exact zeros, so greedy decode stays token-identical to the
+    masked path).
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y_act = condensed_linear(x2, values, indices, **kw)      # (B, a)
+    y = jnp.zeros((x2.shape[0], d_out), y_act.dtype)
+    # active rows are unique, padding rows point at d_out -> dropped
+    y = y.at[:, out_index].add(y_act, mode="drop")
+    return y.reshape(*lead, d_out)
+
+
 def structured_dense(x: jax.Array, weight: jax.Array, neuron_active: jax.Array) -> jax.Array:
     """"Structured-only" path from Fig. 4: drop ablated neurons, dense matmul.
 
-    weight: (d_in, n_out); computes x @ weight but only for active columns
-    (ablated outputs are exact zeros). On TPU this is a *column-gathered*
-    matmul: XLA keeps it on the MXU; the byte/FLOP saving is the active-neuron
-    fraction.
+    weight: (d_in, n_out); computes x @ weight with ablated outputs forced to
+    exact zeros. NOTE: as implemented this reads the full dense weight and
+    runs the full matmul — the only traffic saved vs masked is the bool
+    fan-in mask (neuron_active is n_out bools). A genuinely column-gathered
+    kernel that delivers the active-fraction byte/FLOP saving is a ROADMAP
+    follow-up; the cost model in repro.sparse.plan prices this path at what
+    it actually executes.
     """
     w = weight * neuron_active[None, :].astype(weight.dtype)
     return x @ w

@@ -65,6 +65,7 @@ def state_shardings(rules: ShardingRules, state_sds):
         masks=rules.masks(state_sds.masks),
         neuron_active=rules.neuron_active(state_sds.neuron_active),
         grad_accum=rules.params(state_sds.grad_accum),
+        mask_versions=jax.tree.map(lambda _: rep, state_sds.mask_versions),
         rng=rep,
     )
 
@@ -107,15 +108,17 @@ def lower_dst(cfg, shape, mesh):
         return jitted.lower(state_sds, batch_sds)
 
 
-def lower_serve_condensed(cfg, shape, mesh):
-    """Decode with the condensed constant fan-in representation (the paper's
-    Alg. 1 serving path): weight reads shrink to n_out*k entries."""
-    from repro.sparse import condensed as COND
+def lower_serve_planned(cfg, shape, mesh, reps: dict):
+    """Decode under a per-stack representation assignment ``reps`` (stack
+    name -> representation), the dry-run consumer of repro.sparse.plan:
+    the serving pytree is built abstractly (ShapeDtypeStructs, no
+    allocation) and the planned decode program is lowered against it."""
+    from repro.sparse import plan as PLAN
     rules = ShardingRules(cfg, mesh)
     registry = REG.build_registry(cfg)
     k_fan = REG.k_fan_map(cfg, registry)
     params_sds = _abstract(lambda k: M.init_params(cfg, k, k_fan), jax.random.PRNGKey(0))
-    cond_sds = COND.abstract_condensed(cfg, registry)
+    cond_sds = PLAN.abstract_serving_tree(cfg, registry, reps)
     cache_sds = _abstract(lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
     batch_sds = make_batch_spec(cfg, shape)
 
@@ -132,6 +135,23 @@ def lower_serve_condensed(cfg, shape, mesh):
                      out_shardings=(None, c_sh), donate_argnums=(3,))
     with compat.use_mesh(mesh):
         return jitted.lower(params_sds, cond_sds, batch_sds, cache_sds)
+
+
+def lower_serve_condensed(cfg, shape, mesh):
+    """Decode with the condensed constant fan-in representation (the paper's
+    Alg. 1 serving path): weight reads shrink to n_out*k entries."""
+    registry = REG.build_registry(cfg)
+    return lower_serve_planned(cfg, shape, mesh,
+                               {s.name: "condensed" for s in registry})
+
+
+def lower_serve_plan(cfg, shape, mesh):
+    """Decode under the cost-model's per-stack choice for this shape's batch
+    (the ``--path auto`` program, compiled without allocation)."""
+    from repro.sparse import plan as PLAN
+    registry = REG.build_registry(cfg)
+    reps = PLAN.plan_for_shape(cfg, registry, batch_size=shape.global_batch)
+    return lower_serve_planned(cfg, shape, mesh, reps)
 
 
 def lower_serve(cfg, shape, mesh):
@@ -177,7 +197,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, quiet: bool = False,
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.size
     lower_fn = {"train": lower_train, "serve": lower_serve, "dst": lower_dst,
-                "serve_cond": lower_serve_condensed}[
+                "serve_cond": lower_serve_condensed,
+                "serve_plan": lower_serve_plan}[
         (("train" if shape.kind == "train" else "serve") if program == "auto"
          else program)]
     t0 = time.time()

@@ -4,8 +4,13 @@
       --batch 4 --prompt-len 32 --gen 16 --path condensed
 
 Demonstrates the production serving paths (paper Sec. 4.4 — same trained
-weights, multiple execution representations):
+weights, multiple execution representations). Representation selection lives
+in repro.sparse.plan; this driver builds a per-stack execution Plan:
 
+  --path auto        per-stack bytes/FLOPs cost model over the request batch
+                     shape: condensed gather wins the bandwidth-bound decode
+                     shapes (B=1), masked-dense wins the MXU back at large
+                     batch (B=256), matching the paper's Sec. 4.4 crossover
   --path masked      masked-dense MXU path (bool masks; training layout)
   --path condensed   constant fan-in condensed path: sparse linears run the
                      Pallas gather kernel over {values, indices}, touching
@@ -14,9 +19,15 @@ weights, multiple execution representations):
   --path structured  ablated neurons dropped, active columns dense (Fig. 4
                      "structured" ablation — NOT output-equivalent unless the
                      sparsity is ablation-only)
+  --path condensed_over_active
+                     the paper's combined Fig. 4 point: ablated neurons are
+                     dropped, THEN the condensed gather runs over the
+                     surviving rows only. Token-identical to masked for any
+                     mask (ablated outputs are exact zeros either way).
 
-Greedy decode for masked and condensed is token-identical: both evaluate the
-same masked weights, only the storage/compute representation differs.
+Greedy decode for masked / condensed / condensed_over_active / auto is
+token-identical: all evaluate the same masked weights, only the
+storage/compute representation differs.
 
 The generation loop is a single jitted ``lax.scan`` over decode steps with the
 KV/SSM cache donated (no per-token Python dispatch, no cache copies) — the
@@ -33,23 +44,31 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.models import model as M
-from repro.sparse import condensed as COND
+from repro.sparse import plan as PLAN
 from repro.sparse import registry as REG
 
-PATHS = ("masked", "condensed", "structured")
+PATHS = PLAN.PATHS
 
 
-def build_serving_masks(cfg, registry, params, masks, path: str):
+def build_plan(cfg, registry, params, masks, path: str, *,
+               batch_size: int = 1, mask_versions=None) -> PLAN.Plan:
+    """Per-stack execution plan for ``path`` at the request batch shape."""
+    return PLAN.build_plan(cfg, registry, params, masks, path=path,
+                           batch_size=batch_size, mask_versions=mask_versions)
+
+
+def build_serving_masks(cfg, registry, params, masks, path: str,
+                        batch_size: int = 1):
     """Convert the trained (params, masks) pair into the serving pytree for
-    ``path``. The result plugs into the masks slot of prefill/decode_step;
-    repro.models.layers.linear dispatches per-leaf on its structure."""
+    ``path``. Thin wrapper over repro.sparse.plan — the result plugs into the
+    masks slot of prefill/decode_step; repro.models.layers.linear dispatches
+    per-leaf on its structure. ``path="masked"`` returns ``masks`` unchanged
+    (identity, no export) to keep the training-layout fast path allocation-
+    free."""
     if path == "masked":
         return masks
-    if path == "condensed":
-        return COND.export_condensed(cfg, registry, params, masks)
-    if path == "structured":
-        return COND.export_structured(cfg, registry, masks)
-    raise ValueError(f"unknown serving path {path!r}; expected one of {PATHS}")
+    return build_plan(cfg, registry, params, masks, path,
+                      batch_size=batch_size).serving_tree
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -130,9 +149,17 @@ def main(argv=None):
     reg = REG.build_registry(cfg)
     params = M.init_params(cfg, key, REG.k_fan_map(cfg, reg))
     masks = REG.init_sparsity_state(cfg, key, reg)["masks"] if reg else {}
-    if args.path != "masked" and not reg:
-        raise SystemExit(f"{args.arch} has no sparse stacks — only --path masked")
-    serving_masks = build_serving_masks(cfg, reg, params, masks, args.path)
+    if args.path not in ("masked", "auto") and not reg:
+        raise SystemExit(f"{args.arch} has no sparse stacks — only "
+                         f"--path masked/auto")
+    if args.path == "masked" or not reg:
+        serving_masks = masks
+    else:
+        plan = build_plan(cfg, reg, params, masks, args.path,
+                          batch_size=args.batch)
+        if args.path == "auto":
+            print(plan.describe())
+        serving_masks = plan.serving_tree
 
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)

@@ -42,20 +42,31 @@ def embed_init(key: jax.Array, vocab: int, d: int, dtype=jnp.float32) -> jax.Arr
 def linear(x: jax.Array, w: jax.Array, mask=None) -> jax.Array:
     """y = x @ (w masked if sparse). Dense gradients via straight-through.
 
-    Serving-representation dispatch (paper Sec. 4.4 "same weights, two
-    representations"): the ``mask`` argument selects the execution path.
+    Serving-representation dispatch (paper Sec. 4.4 "same weights, multiple
+    representations"): the ``mask`` argument selects the execution path. The
+    per-stack choice is made by repro.sparse.plan (a bytes/FLOPs cost model
+    over the request batch shape); this function only dispatches on the leaf.
 
     * bool array — masked-dense MXU path (training / prefill default).
     * {"values": (n_out, k), "indices": (n_out, k)} — condensed constant
       fan-in path via the Pallas kernel (repro.kernels.ops): the dense
       weight is not read at all, HBM traffic shrinks to n_out*k entries
       (values + indices), the paper's Alg. 1 decode path.
+    * {"values": (a, k), "indices": (a, k), "out_index": (a,)} — condensed-
+      over-active path (the paper's combined Fig. 4 point): ablated neurons
+      are dropped FIRST, the gather kernel runs over the a <= n_out surviving
+      rows, and the result is scattered back to the dense output layout.
+      Exact for any mask (ablated outputs are exact zeros either way).
     * {"neuron_active": (n_out,)} — structured-only path (Fig. 4): ablated
       output neurons are dropped but active columns stay dense. Exact only
       for ablation-only layers; used by the serving ablation benchmark.
     """
     if isinstance(mask, dict):
         from repro.kernels import ops
+        if "out_index" in mask:
+            return ops.condensed_over_active_linear_nd(
+                x, mask["values"].astype(x.dtype), mask["indices"],
+                mask["out_index"], w.shape[-1])
         if "values" in mask:
             return ops.condensed_linear_nd(
                 x, mask["values"].astype(x.dtype), mask["indices"])

@@ -1,4 +1,6 @@
-"""Sparse-layer registry and execution paths (masked-dense / condensed)."""
+"""Sparse-layer registry and execution paths (masked-dense / condensed /
+structured / condensed-over-active), plus the serving execution-plan
+subsystem (repro.sparse.plan) that picks a representation per stack."""
 from repro.sparse.registry import (  # noqa: F401
     SparseStack,
     build_registry,

@@ -9,12 +9,51 @@ dry-run uses to lower the condensed decode program without allocation.
 """
 from __future__ import annotations
 
+import typing
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import distributions as D
 from repro.core import topology
 from repro.sparse import registry as REG
+
+
+class ExportStats(typing.NamedTuple):
+    """Realized per-stack structure, measured from the trained masks."""
+    k: int                  # max realized fan-in over all columns/replicas
+    max_active: int         # max active (non-ablated) neurons over replicas
+    active_fraction: float  # mean fraction of active neurons
+
+
+def export_stats(registry, masks: dict,
+                 stacks: typing.Sequence | None = None) -> dict[str, ExportStats]:
+    """Per-stack realized stats with ONE device program and ONE host sync.
+
+    The naive per-stack ``int(jnp.max(...))`` forces a device->host transfer
+    per stack (a serialization point on every export); here every stack's
+    reductions are fused into a single stacked (n_stacks, 3) array and fetched
+    with a single ``jax.device_get``. ``stacks`` optionally restricts the
+    computation to a subset (incremental refresh re-measures only the stacks
+    whose masks changed).
+    """
+    stacks = list(registry if stacks is None else stacks)
+    rows = []
+    for s in stacks:
+        m = REG.get_path(masks, s.path)
+        nnz = jnp.sum(m.astype(jnp.int32), axis=-2)          # (lead..., d_out)
+        act = jnp.any(m, axis=-2)                            # (lead..., d_out)
+        rows.append(jnp.stack([
+            jnp.max(nnz).astype(jnp.float32),
+            jnp.max(jnp.sum(act.astype(jnp.int32), axis=-1)).astype(jnp.float32),
+            jnp.mean(act.astype(jnp.float32)),
+        ]))
+    if not rows:
+        return {}
+    table = jax.device_get(jnp.stack(rows))                  # single transfer
+    return {s.name: ExportStats(k=int(r[0]), max_active=int(r[1]),
+                                active_fraction=float(r[2]))
+            for s, r in zip(stacks, table)}
 
 
 def _condense_stack(weight, mask, k: int):
@@ -26,47 +65,140 @@ def _condense_stack(weight, mask, k: int):
     return {"values": vals, "indices": idx}
 
 
-def export_condensed(cfg, registry, params: dict, masks: dict) -> dict:
+def condense_stack_leaf(weight, mask, stats: ExportStats) -> dict:
+    """Condensed leaf {"values", "indices"} for one stack at realized fan-in."""
+    return _condense_stack(weight * mask, mask, max(stats.k, 1))
+
+
+def export_condensed(cfg, registry, params: dict, masks: dict,
+                     stats: dict[str, ExportStats] | None = None) -> dict:
     """Concrete export after training. k per stack = max realized fan-in."""
+    stats = stats if stats is not None else export_stats(registry, masks)
     out: dict = {}
     for s in registry:
         w = REG.get_path(params, s.path)
         m = REG.get_path(masks, s.path)
-        nnz_per_col = jnp.sum(m, axis=-2)
-        k = int(jnp.max(nnz_per_col))
-        REG._set_path(out, s.path, _condense_stack(w * m, m, k))
+        REG._set_path(out, s.path, condense_stack_leaf(w, m, stats[s.name]))
     return out
 
 
-def export_structured(cfg, registry, masks: dict) -> dict:
-    """Structured-only serving pytree: {"neuron_active": (lead..., d_out)}.
+def _condense_active_stack(weight, mask, k: int, a: int):
+    """Condensed-over-active leaf for one stack (vmapped over lead dims).
 
-    The Fig. 4 "structured" representation drops ablated output neurons but
-    keeps active columns dense — repro.models.layers.linear dispatches these
-    dicts to kernels.ops.structured_dense. A neuron is active iff its mask
-    column has any non-zero (matches the trainer's neuron_active state after
-    an SRigL update, and degrades gracefully for unstructured masks).
+    Drops ablated output neurons FIRST (Fig. 4's "structured" move), then
+    condenses only the surviving columns to constant fan-in ``k`` — the
+    composed representation of the paper's combined Fig. 4 point. ``a`` is
+    the (static) max active-neuron count across the stack's replicas; rows
+    beyond a replica's realized active count are padding with values 0 and
+    an out-of-range ``out_index`` so the scatter in kernels.ops drops them.
+
+    A neuron is treated as active iff its mask column has any non-zero —
+    derived from the mask itself (not the trainer's neuron_active bookkeeping)
+    so the representation is exact vs masked-dense by construction.
     """
+    d_out = weight.shape[-1]
+
+    def fn(w, m):
+        col_active = jnp.any(m, axis=0)                      # (d_out,)
+        order = jnp.argsort(~col_active, stable=True).astype(jnp.int32)
+        out_index = order[:a]                                # active cols first
+        sel = col_active[out_index]                          # (a,)
+        w_sel = jnp.take(w, out_index, axis=1)
+        m_sel = jnp.take(m, out_index, axis=1) & sel[None, :]
+        vals, idx = topology.dense_to_condensed(w_sel * m_sel, m_sel, k)
+        return vals, idx, jnp.where(sel, out_index, d_out).astype(jnp.int32)
+
+    for _ in range(weight.ndim - 2):
+        fn = jax.vmap(fn)
+    vals, idx, oi = fn(weight, mask)
+    return {"values": vals, "indices": idx, "out_index": oi}
+
+
+def condense_active_stack_leaf(weight, mask, stats: ExportStats) -> dict:
+    return _condense_active_stack(weight, mask, max(stats.k, 1),
+                                  max(stats.max_active, 1))
+
+
+def revalue_stack_leaf(weight, mask, leaf: dict) -> dict:
+    """Values-only refresh of a condensed(-over-active) leaf under UNCHANGED
+    topology: re-gather ``weight * mask`` at the stored indices, reusing the
+    indices (and out_index) arrays verbatim.
+
+    Exact because padding slots point at inactive rows (dense_to_condensed's
+    invariant), so they re-gather exact zeros; condensed-over-active padding
+    ROWS may re-gather garbage from a clipped column but are dropped by the
+    out-of-range out_index at scatter time. This skips the argsort and the
+    stats host sync — the cheap path Plan.refresh uses for stacks whose mask
+    version did NOT move while the weights kept training.
+    """
+    out_index = leaf.get("out_index")
+
+    def fn(w, m, idx, oi=None):
+        wm_t = (w * m).T                                     # (d_out, d_in)
+        if oi is not None:  # select surviving columns (clip: padding dropped)
+            wm_t = jnp.take(wm_t, jnp.minimum(oi, wm_t.shape[0] - 1), axis=0)
+        return jnp.take_along_axis(wm_t, idx, axis=1)
+
+    n_lead = weight.ndim - 2
+    for _ in range(n_lead):
+        fn = jax.vmap(fn)
+    if out_index is None:
+        values = fn(weight, mask, leaf["indices"])
+        return {"values": values.astype(leaf["values"].dtype),
+                "indices": leaf["indices"]}
+    values = fn(weight, mask, leaf["indices"], out_index)
+    return {"values": values.astype(leaf["values"].dtype),
+            "indices": leaf["indices"], "out_index": out_index}
+
+
+def export_condensed_over_active(cfg, registry, params: dict, masks: dict,
+                                 stats: dict[str, ExportStats] | None = None) -> dict:
+    """Composed export: ablated neurons dropped, survivors condensed.
+
+    Leaf type: {"values": (lead..., a, k), "indices": (lead..., a, k),
+    "out_index": (lead..., a)} — repro.models.layers.linear dispatches these
+    to kernels.ops.condensed_over_active_linear_nd. Token-identical to the
+    masked path for ANY mask (ablated columns contribute exact zeros either
+    way); the byte saving over plain condensed is the ablated-neuron fraction.
+    """
+    stats = stats if stats is not None else export_stats(registry, masks)
+    out: dict = {}
+    for s in registry:
+        w = REG.get_path(params, s.path)
+        m = REG.get_path(masks, s.path)
+        REG._set_path(out, s.path, condense_active_stack_leaf(w, m, stats[s.name]))
+    return out
+
+
+def structured_stack_leaf(mask) -> dict:
+    """Structured-only leaf for one stack: {"neuron_active": (lead..., d_out)}.
+
+    A neuron is active iff its mask column has any non-zero (matches the
+    trainer's neuron_active state after an SRigL update, and degrades
+    gracefully for unstructured masks). Single definition shared by
+    export_structured and repro.sparse.plan's leaf builder."""
+    return {"neuron_active": jnp.any(mask, axis=-2)}
+
+
+def export_structured(cfg, registry, masks: dict) -> dict:
+    """Structured-only serving pytree (Fig. 4 "structured"): ablated output
+    neurons dropped, active columns kept dense — repro.models.layers.linear
+    dispatches these dicts to kernels.ops.structured_dense."""
     out: dict = {}
     for s in registry:
         m = REG.get_path(masks, s.path)
-        REG._set_path(out, s.path,
-                      {"neuron_active": jnp.any(m, axis=-2)})
+        REG._set_path(out, s.path, structured_stack_leaf(m))
     return out
 
 
 def abstract_condensed(cfg, registry, param_dtype=None) -> dict:
-    """ShapeDtypeStruct stand-ins at the target fan-in (for the dry-run)."""
-    dt = jnp.dtype(param_dtype or cfg.param_dtype)
-    out: dict = {}
-    for s in registry:
-        k = D.fan_in_from_density(s.d_in, s.density)
-        shape = (*s.lead, s.d_out, k)
-        REG._set_path(out, s.path, {
-            "values": jax.ShapeDtypeStruct(shape, dt),
-            "indices": jax.ShapeDtypeStruct(shape, jnp.int32),
-        })
-    return out
+    """ShapeDtypeStruct stand-ins at the target fan-in (for the dry-run).
+    Delegates to the plan subsystem's abstract tree (single leaf-schema
+    definition); lazy import to avoid a module cycle."""
+    from repro.sparse import plan as PLAN
+    return PLAN.abstract_serving_tree(cfg, registry,
+                                      {s.name: "condensed" for s in registry},
+                                      param_dtype=param_dtype)
 
 
 def condensed_bytes(cfg, registry) -> tuple[int, int]:

@@ -1,0 +1,383 @@
+"""Serving execution plans: per-stack representation selection + refresh.
+
+The paper's headline serving result (Sec. 4.4) is that the SAME trained
+constant-fan-in weights can execute under multiple representations, and which
+one wins depends on the request's batch shape and the hardware balance:
+masked-dense rides the MXU at large batch, the condensed gather rides HBM
+bandwidth at decode/B=1, and the best Fig. 4 point COMPOSES neuron ablation
+with the condensed layout (condensed-over-active). This module is the single
+place that decision lives:
+
+* ``build_plan`` turns a trained (params, masks) pair into a ``Plan`` — a
+  per-``SparseStack`` representation choice (made by a bytes/FLOPs cost model
+  when ``path="auto"``, or forced by a fixed path name) plus the serving
+  pytree that plugs into the masks slot of prefill/decode_step.
+* ``Plan.refresh`` is the incremental export: given the trainer's per-stack
+  mask-version counters, only stacks whose version changed since the last
+  export are re-condensed — a live training job can serve without paying a
+  full re-export every delta_t steps.
+* ``plan_for_shape`` / ``abstract_serving_tree`` are the allocation-free
+  variants the dry-run uses to lower a planned decode program.
+
+Consumers: repro.launch.serve (``--path auto``), repro.launch.dryrun
+(``serve_plan`` program), benchmarks/serve_paths.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distributions as D
+from repro.sparse import condensed as COND
+from repro.sparse import registry as REG
+
+REPRESENTATIONS = ("masked", "condensed", "structured", "condensed_over_active")
+PATHS = REPRESENTATIONS + ("auto",)
+
+# fraction below 1.0 at which a stack counts as having ablated neurons (guards
+# against float fuzz in the mean-active reduction)
+_ABLATION_EPS = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    """Throughput balance the cost model prices representations against.
+
+    Defaults are TPU-v5e-like and deliberately coarse: the model only needs
+    the RATIOS right (MXU ~50x the gather unit, arithmetic-intensity knee
+    around B~100 for 10%-dense stacks) to reproduce the paper's batch-1 vs
+    batch-256 crossover. Real-hardware calibration is a follow-up (see
+    ROADMAP: TPU block-size validation).
+    """
+    name: str = "tpu-v5e-like"
+    hbm_bytes_per_s: float = 8.19e11     # ~819 GB/s HBM
+    mxu_flops_per_s: float = 1.97e14     # dense MXU matmul throughput
+    gather_flops_per_s: float = 3.9e12   # VPU gather-multiply-accumulate
+
+
+DEFAULT_PROFILE = HardwareProfile()
+
+
+@dataclasses.dataclass(frozen=True)
+class StackDecision:
+    """One stack's chosen representation + the cost table that chose it."""
+    name: str
+    representation: str
+    est_s: dict[str, float]       # representation -> est. seconds per step
+    stats: COND.ExportStats       # realized fan-in / ablation at export time
+
+    @property
+    def active_fraction(self) -> float:
+        return self.stats.active_fraction
+
+
+def stack_costs(stack, *, batch_size: int, itemsize: int, k: int,
+                active_fraction: float,
+                profile: HardwareProfile = DEFAULT_PROFILE) -> dict[str, float]:
+    """Estimated seconds per serving step for each representation.
+
+    Each representation's time is the roofline max of its HBM-byte term and
+    its compute term on the unit that executes it:
+
+    * masked     — reads the full dense weight + bool mask; dense MXU matmul.
+    * condensed  — reads n_out*k (values + int32 indices); VPU gather-MAC,
+                   so its compute term grows with batch ~50x faster than the
+                   MXU's (the reason masked wins back at large batch).
+    * structured — priced at what kernels.ops.structured_dense actually
+                   executes: a FULL dense matmul over the full weight (only
+                   the bool fan-in mask read is saved; neuron_active is
+                   n_out bools). A true column-gathered kernel that delivers
+                   the active-fraction saving is a ROADMAP follow-up — do
+                   not price savings the code doesn't deliver.
+    * condensed_over_active — the condensed terms scaled by the active
+                   fraction (gather over surviving rows only; the kernel
+                   really does run over a <= n_out rows).
+    """
+    b = max(int(batch_size), 1)
+    n = stack.n_replicas
+    act = min(max(active_fraction, 0.0), 1.0)
+    dense_bytes = n * stack.d_in * stack.d_out * itemsize
+    mask_bytes = n * stack.d_in * stack.d_out          # bool mask, 1 byte
+    cond_bytes = n * stack.d_out * k * (itemsize + 4)  # values + int32 idx
+    dense_flops = 2.0 * b * n * stack.d_in * stack.d_out
+    gather_flops = 2.0 * b * n * stack.d_out * k
+    return {
+        "masked": max((dense_bytes + mask_bytes) / profile.hbm_bytes_per_s,
+                      dense_flops / profile.mxu_flops_per_s),
+        "condensed": max(cond_bytes / profile.hbm_bytes_per_s,
+                         gather_flops / profile.gather_flops_per_s),
+        "structured": max((dense_bytes + n * stack.d_out) / profile.hbm_bytes_per_s,
+                          dense_flops / profile.mxu_flops_per_s),
+        "condensed_over_active": max(
+            act * cond_bytes / profile.hbm_bytes_per_s,
+            act * gather_flops / profile.gather_flops_per_s),
+    }
+
+
+def select_representation(stack, *, batch_size: int, itemsize: int,
+                          stats: COND.ExportStats,
+                          profile: HardwareProfile = DEFAULT_PROFILE) -> StackDecision:
+    """Cost-model choice among EXACT representations for one stack.
+
+    ``structured`` is never auto-selected: it keeps active columns dense, so
+    it is only output-equivalent for ablation-only masks (Fig. 4 ablation, on
+    request via a fixed path). The exact candidates are masked, and the
+    gather family — plain condensed when every neuron is active, condensed-
+    over-active once ablation has created dead rows to drop.
+    """
+    costs = stack_costs(stack, batch_size=batch_size, itemsize=itemsize,
+                        k=max(stats.k, 1),
+                        active_fraction=stats.active_fraction, profile=profile)
+    has_ablation = stats.active_fraction < 1.0 - _ABLATION_EPS
+    gather_rep = "condensed_over_active" if has_ablation else "condensed"
+    rep = min(("masked", gather_rep), key=lambda r: costs[r])
+    return StackDecision(name=stack.name, representation=rep, est_s=costs,
+                         stats=stats)
+
+
+def _build_leaf(rep: str, weight, mask, stats: COND.ExportStats):
+    if rep == "masked":
+        return mask
+    if rep == "condensed":
+        return COND.condense_stack_leaf(weight, mask, stats)
+    if rep == "condensed_over_active":
+        return COND.condense_active_stack_leaf(weight, mask, stats)
+    if rep == "structured":
+        return COND.structured_stack_leaf(mask)
+    raise ValueError(f"unknown representation {rep!r}")
+
+
+def _decide(stack, path: str, *, batch_size: int, itemsize: int,
+            stats: COND.ExportStats, profile: HardwareProfile) -> StackDecision:
+    """One stack's decision: cost-model choice for "auto", forced otherwise.
+    Shared by build_plan and Plan.refresh so the two can never diverge."""
+    if path == "auto":
+        return select_representation(stack, batch_size=batch_size,
+                                     itemsize=itemsize, stats=stats,
+                                     profile=profile)
+    costs = stack_costs(stack, batch_size=batch_size, itemsize=itemsize,
+                        k=max(stats.k, 1),
+                        active_fraction=stats.active_fraction, profile=profile)
+    return StackDecision(name=stack.name, representation=path, est_s=costs,
+                         stats=stats)
+
+
+def _host_versions(mask_versions: dict) -> dict[str, int]:
+    """Trainer counters (host ints or device scalars) -> plain int dict,
+    fetched with one device_get."""
+    return {k: int(v) for k, v in jax.device_get(dict(mask_versions)).items()}
+
+
+@dataclasses.dataclass
+class Plan:
+    """A built execution plan: decisions + serving pytree + export versions.
+
+    ``serving_tree`` plugs into the masks slot of prefill/decode_step;
+    repro.models.layers.linear dispatches per leaf. ``export_calls`` counts
+    per-stack leaf (re)builds over the plan's lifetime — the incremental-
+    export tests assert it only grows by the number of CHANGED stacks.
+    """
+    cfg: object
+    registry: list
+    path: str                      # requested path ("auto" or a fixed rep)
+    batch_size: int
+    profile: HardwareProfile
+    decisions: dict[str, StackDecision]
+    serving_tree: dict
+    mask_versions: dict[str, int]  # stack name -> version at last export
+    export_calls: int = 0
+    value_refreshes: int = 0       # cheap values-only regathers (no re-sort)
+
+    def representation_of(self, name: str) -> str:
+        return self.decisions[name].representation
+
+    def refresh(self, params: dict, masks: dict, mask_versions: dict, *,
+                refresh_values: bool = True) -> list[str]:
+        """Incremental re-export: re-condense ONLY stacks whose version moved.
+
+        ``mask_versions`` is the trainer's per-stack counter pytree (host ints
+        or device scalars; fetched with one device_get). Changed stacks get
+        fresh realized stats (one fused program over just those stacks), a
+        re-run of the cost model (ablation appearing mid-training can flip
+        condensed -> condensed_over_active), and a rebuilt leaf. Returns the
+        names of the stacks that were re-exported.
+
+        Version counters only track TOPOLOGY: between DST steps the weights
+        keep training for every stack, so with ``refresh_values=True``
+        (default) the unchanged condensed-family stacks get a values-only
+        regather at their stored indices — cheap (no argsort, no stats sync,
+        indices reused verbatim) but necessary for the serving snapshot to be
+        coherent with ``params``. Masked/structured leaves need nothing: they
+        read the live weights from ``params`` at execution time. Pass
+        ``refresh_values=False`` only when params are frozen (serving a fixed
+        checkpoint).
+        """
+        versions = _host_versions(mask_versions)
+        by_name = {s.name: s for s in self.registry}
+        changed = [by_name[n] for n, v in versions.items()
+                   if n in by_name and v != self.mask_versions.get(n)]
+        changed_names = {s.name for s in changed}
+        if changed:
+            stats = COND.export_stats(self.registry, masks, stacks=changed)
+            itemsize = jnp.dtype(self.cfg.param_dtype).itemsize
+            for s in changed:
+                dec = _decide(s, self.path, batch_size=self.batch_size,
+                              itemsize=itemsize, stats=stats[s.name],
+                              profile=self.profile)
+                self.decisions[s.name] = dec
+                REG._set_path(self.serving_tree, s.path,
+                              _build_leaf(dec.representation,
+                                          REG.get_path(params, s.path),
+                                          REG.get_path(masks, s.path),
+                                          stats[s.name]))
+                self.mask_versions[s.name] = versions[s.name]
+                self.export_calls += 1
+        if refresh_values:
+            for s in self.registry:
+                if s.name in changed_names:
+                    continue
+                rep = self.decisions[s.name].representation
+                if rep not in ("condensed", "condensed_over_active"):
+                    continue
+                leaf = REG.get_path(self.serving_tree, s.path)
+                REG._set_path(self.serving_tree, s.path,
+                              COND.revalue_stack_leaf(
+                                  REG.get_path(params, s.path),
+                                  REG.get_path(masks, s.path), leaf))
+                self.value_refreshes += 1
+        return [s.name for s in changed]
+
+    def weight_bytes(self) -> tuple[int, int]:
+        """(serving weight bytes under this plan, masked-path weight bytes).
+
+        The reference is the masked-dense serving path's traffic — dense
+        weights PLUS the bool mask it also reads — so a plan that resolves
+        every stack to masked reports exactly the reference (ratio 1.0).
+        condensed_over_active is priced at its EXPORTED size: max_active rows
+        per replica (stack-wide max, padding included) of k*(values+idx)
+        plus the 4-byte out_index per row — not the mean active fraction,
+        which would understate the footprint under uneven ablation.
+        """
+        itemsize = jnp.dtype(self.cfg.param_dtype).itemsize
+        masked_ref = serving = 0
+        for s in self.registry:
+            dec = self.decisions[s.name]
+            n = s.n_replicas
+            k = max(dec.stats.k, 1)
+            a = max(dec.stats.max_active, 1)
+            d_bytes = n * s.d_in * s.d_out * itemsize
+            m_bytes = d_bytes + n * s.d_in * s.d_out          # + bool mask
+            serving += {
+                "masked": m_bytes,
+                # structured_dense still reads the FULL dense weight (plus
+                # n_out neuron_active bools); only the fan-in mask is saved
+                "structured": d_bytes + n * s.d_out,
+                "condensed": n * s.d_out * k * (itemsize + 4),
+                "condensed_over_active": n * a * (k * (itemsize + 4) + 4),
+            }[dec.representation]
+            masked_ref += m_bytes
+        return serving, masked_ref
+
+    def describe(self) -> str:
+        lines = [f"[plan] path={self.path} batch={self.batch_size} "
+                 f"profile={self.profile.name}"]
+        for name, dec in self.decisions.items():
+            est = dec.est_s[dec.representation]
+            lines.append(
+                f"[plan]   {name:24s} -> {dec.representation:22s} "
+                f"(est {est * 1e6:8.3f} us/step, k={dec.stats.k}, "
+                f"active={dec.active_fraction:.2f})")
+        return "\n".join(lines)
+
+
+def build_plan(cfg, registry, params: dict, masks: dict, *,
+               batch_size: int = 1, path: str = "auto",
+               mask_versions: dict | None = None,
+               profile: HardwareProfile = DEFAULT_PROFILE) -> Plan:
+    """Build the per-stack execution plan for a request batch shape.
+
+    ``path="auto"`` selects per stack by the cost model; a fixed path name
+    forces that representation everywhere (the pre-plan ``--path`` behavior).
+    ``mask_versions`` snapshots the trainer's counters so a later ``refresh``
+    only re-exports stacks whose counter moved.
+    """
+    if path not in PATHS:
+        raise ValueError(f"unknown serving path {path!r}; expected one of {PATHS}")
+    registry = list(registry or [])
+    versions = (_host_versions(mask_versions) if mask_versions is not None
+                else {s.name: 0 for s in registry})
+    itemsize = jnp.dtype(cfg.param_dtype).itemsize
+    stats = COND.export_stats(registry, masks)
+
+    decisions: dict[str, StackDecision] = {}
+    tree: dict = {}
+    calls = 0
+    for s in registry:
+        dec = _decide(s, path, batch_size=batch_size, itemsize=itemsize,
+                      stats=stats[s.name], profile=profile)
+        decisions[s.name] = dec
+        REG._set_path(tree, s.path,
+                      _build_leaf(dec.representation,
+                                  REG.get_path(params, s.path),
+                                  REG.get_path(masks, s.path), stats[s.name]))
+        calls += 1
+    return Plan(cfg=cfg, registry=registry, path=path, batch_size=batch_size,
+                profile=profile, decisions=decisions, serving_tree=tree,
+                mask_versions={s.name: versions.get(s.name, 0) for s in registry},
+                export_calls=calls)
+
+
+# ---------------------------------------------------------------------------
+# allocation-free variants (dry-run / compile-only consumers)
+# ---------------------------------------------------------------------------
+
+def plan_for_shape(cfg, registry, *, batch_size: int,
+                   profile: HardwareProfile = DEFAULT_PROFILE) -> dict[str, str]:
+    """Representation choice per stack from STATIC info only (target ERK
+    densities, no realized masks — so no ablation is assumed). Used by the
+    dry-run to pick what to lower for a given serving shape."""
+    itemsize = jnp.dtype(cfg.param_dtype).itemsize
+    out = {}
+    for s in registry:
+        stats = COND.ExportStats(k=D.fan_in_from_density(s.d_in, s.density),
+                                 max_active=s.d_out, active_fraction=1.0)
+        dec = select_representation(s, batch_size=batch_size, itemsize=itemsize,
+                                    stats=stats, profile=profile)
+        out[s.name] = dec.representation
+    return out
+
+
+def abstract_serving_tree(cfg, registry, reps: dict[str, str],
+                          param_dtype=None) -> dict:
+    """ShapeDtypeStruct serving pytree for ``reps`` (no allocation).
+
+    condensed-over-active uses a = d_out as the static bound (the dry-run has
+    no realized ablation counts); the concrete export shrinks a to the real
+    max active-neuron count.
+    """
+    dt = jnp.dtype(param_dtype or cfg.param_dtype)
+    out: dict = {}
+    for s in registry:
+        rep = reps[s.name]
+        k = D.fan_in_from_density(s.d_in, s.density)
+        if rep == "masked":
+            leaf = jax.ShapeDtypeStruct((*s.lead, s.d_in, s.d_out), jnp.bool_)
+        elif rep == "condensed":
+            shape = (*s.lead, s.d_out, k)
+            leaf = {"values": jax.ShapeDtypeStruct(shape, dt),
+                    "indices": jax.ShapeDtypeStruct(shape, jnp.int32)}
+        elif rep == "condensed_over_active":
+            shape = (*s.lead, s.d_out, k)
+            leaf = {"values": jax.ShapeDtypeStruct(shape, dt),
+                    "indices": jax.ShapeDtypeStruct(shape, jnp.int32),
+                    "out_index": jax.ShapeDtypeStruct((*s.lead, s.d_out),
+                                                      jnp.int32)}
+        elif rep == "structured":
+            leaf = {"neuron_active": jax.ShapeDtypeStruct((*s.lead, s.d_out),
+                                                          jnp.bool_)}
+        else:
+            raise ValueError(f"unknown representation {rep!r}")
+        REG._set_path(out, s.path, leaf)
+    return out

@@ -19,6 +19,10 @@ class TrainState(NamedTuple):
     neuron_active: Any         # per-stack (lead..., d_out) bool
     grad_accum: Any            # dense-grad accumulator for the saliency window
                                # ({} when grad_accum_for_saliency == 1)
+    mask_versions: Any         # {stack name: () int32} — bumped by the DST
+                               # step when that stack's mask changed; the
+                               # serving Plan.refresh re-condenses only stacks
+                               # whose counter moved (incremental export)
     rng: jax.Array
 
 
@@ -41,6 +45,8 @@ def init_train_state(cfg, key: jax.Array) -> TrainState:
             REG._set_path(accum, s.path, jnp.zeros(w.shape, jnp.float32))
     else:
         accum = {}
+    versions = {s.name: jnp.zeros((), jnp.int32) for s in registry}
     return TrainState(
         step=jnp.zeros((), jnp.int32), params=params, opt_state=opt_state,
-        masks=masks, neuron_active=active, grad_accum=accum, rng=k_rng)
+        masks=masks, neuron_active=active, grad_accum=accum,
+        mask_versions=versions, rng=k_rng)

@@ -119,7 +119,8 @@ def make_train_step(cfg, registry, lr_fn: Callable, *, clip_norm: float = 1.0,
         new_state = TrainState(step=state.step + 1, params=params,
                                opt_state=opt_state, masks=state.masks,
                                neuron_active=state.neuron_active,
-                               grad_accum=grad_accum, rng=rng_next)
+                               grad_accum=grad_accum,
+                               mask_versions=state.mask_versions, rng=rng_next)
         metrics = dict(metrics)
         metrics.update(grad_norm=gnorm, lr=lr,
                        drop_fraction=sched.drop_fraction(state.step))
@@ -156,14 +157,21 @@ def make_dst_step(cfg, registry, compute_specs: dict | None = None):
                                         sp_state, drop, rng,
                                         compute_specs=compute_specs)
         new_params = jax.tree.map(lambda x: x, state.params)  # fresh containers
+        new_versions = dict(state.mask_versions)
         for s in registry:
             w = REG.get_path(new_params, s.path)
             old_m = REG.get_path(state.masks, s.path)
             new_m = REG.get_path(new_sp["masks"], s.path)
             w = jnp.where(new_m & ~old_m, 0.0, w).astype(w.dtype)
             REG._set_path(new_params, s.path, w)
+            # stamp the per-stack mask-version counter: the serving plan's
+            # incremental refresh re-condenses only stacks whose counter moved
+            changed = jnp.any(new_m != old_m)
+            new_versions[s.name] = (state.mask_versions[s.name]
+                                    + changed.astype(jnp.int32))
         return state._replace(params=new_params, masks=new_sp["masks"],
-                              neuron_active=new_sp["neuron_active"], rng=rng_next)
+                              neuron_active=new_sp["neuron_active"],
+                              mask_versions=new_versions, rng=rng_next)
 
     return dst_step
 

@@ -1,0 +1,407 @@
+"""Serving execution plans (repro.sparse.plan): per-stack representation
+selection, the composed condensed-over-active path, and incremental export.
+
+The acceptance criteria made executable:
+
+* ``--path auto`` on the smoke config selects condensed at batch 1 and
+  masked at batch 256 per the bytes/FLOPs cost model;
+* condensed-over-active greedy decode is token-identical to masked when
+  ablated neurons are present (the paper's combined Fig. 4 point);
+* ``Plan.refresh`` re-condenses ONLY stacks whose mask version changed
+  (asserted via the plan's export-call counter);
+* ``export_structured`` is token-identical to masked on ablation-ONLY masks
+  and degrades gracefully (runs, but diverges) on unstructured masks.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.launch import serve
+from repro.models import model as M
+from repro.sparse import condensed as COND
+from repro.sparse import plan as PLAN
+from repro.sparse import registry as REG
+
+
+@pytest.fixture(scope="module")
+def smoke_setup():
+    cfg = configs.get_smoke_config("qwen3-1.7b")
+    key = jax.random.PRNGKey(0)
+    reg = REG.build_registry(cfg)
+    params = M.init_params(cfg, key, REG.k_fan_map(cfg, reg))
+    masks = REG.init_sparsity_state(cfg, key, reg)["masks"]
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab_size)
+    return cfg, reg, params, masks, prompts
+
+
+def _ablate(reg, masks, frac=0.25):
+    """SRigL-style ablation: zero the last ``frac`` of each stack's mask
+    columns (those output neurons become exact zeros on the masked path)."""
+    out = {}
+    for s in reg:
+        m = REG.get_path(masks, s.path)
+        cut = s.d_out - max(1, int(s.d_out * frac))
+        REG._set_path(out, s.path, m & (jnp.arange(s.d_out) < cut)[None, :])
+    return out
+
+
+def _ablation_only(reg, masks, frac=0.25):
+    """Masks whose sparsity is PURELY neuron ablation: active columns fully
+    dense, ablated columns fully empty — the regime where the structured
+    (column-drop) representation is exact."""
+    out = {}
+    for s in reg:
+        m = REG.get_path(masks, s.path)
+        cut = s.d_out - max(1, int(s.d_out * frac))
+        col_active = (jnp.arange(s.d_out) < cut)[None, :]
+        REG._set_path(out, s.path, jnp.broadcast_to(col_active, m.shape))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cost model / auto selection
+# ---------------------------------------------------------------------------
+
+def test_auto_selects_condensed_at_b1_and_masked_at_b256(smoke_setup):
+    """The acceptance-criteria crossover: bandwidth-bound decode (B=1) goes
+    to the condensed gather; the MXU wins back at large batch (B=256)."""
+    cfg, reg, params, masks, _ = smoke_setup
+    p1 = PLAN.build_plan(cfg, reg, params, masks, batch_size=1, path="auto")
+    p256 = PLAN.build_plan(cfg, reg, params, masks, batch_size=256, path="auto")
+    for s in reg:
+        assert p1.representation_of(s.name) == "condensed"
+        assert p256.representation_of(s.name) == "masked"
+
+
+def test_auto_with_ablation_selects_condensed_over_active(smoke_setup):
+    cfg, reg, params, masks, _ = smoke_setup
+    abl = _ablate(reg, masks)
+    plan = PLAN.build_plan(cfg, reg, params, abl, batch_size=1, path="auto")
+    for s in reg:
+        assert plan.representation_of(s.name) == "condensed_over_active"
+        assert plan.decisions[s.name].active_fraction < 1.0
+
+
+def test_auto_never_selects_structured(smoke_setup):
+    """structured keeps active columns dense, so it is not output-equivalent
+    for fine-grained masks — auto must only choose exact representations."""
+    cfg, reg, params, masks, _ = smoke_setup
+    for batch in (1, 8, 64, 256):
+        for m in (masks, _ablate(reg, masks)):
+            plan = PLAN.build_plan(cfg, reg, params, m, batch_size=batch,
+                                   path="auto")
+            assert all(d.representation != "structured"
+                       for d in plan.decisions.values())
+
+
+def test_cost_model_crossover_is_batch_monotonic(smoke_setup):
+    """Once the MXU wins a stack, it keeps winning at larger batch (gather
+    compute grows linearly in B on a ~50x slower unit)."""
+    cfg, reg, params, masks, _ = smoke_setup
+    stats = COND.export_stats(reg, masks)
+    for s in reg:
+        was_masked = False
+        for batch in (1, 4, 16, 64, 128, 256, 1024):
+            dec = PLAN.select_representation(
+                s, batch_size=batch, itemsize=4, stats=stats[s.name])
+            if was_masked:
+                assert dec.representation == "masked"
+            was_masked = dec.representation == "masked"
+        assert was_masked  # big-batch endpoint is always the MXU
+
+
+def test_build_plan_rejects_unknown_path(smoke_setup):
+    cfg, reg, params, masks, _ = smoke_setup
+    with pytest.raises(ValueError):
+        PLAN.build_plan(cfg, reg, params, masks, batch_size=1, path="csr")
+
+
+def test_plan_for_shape_matches_concrete_auto_without_ablation(smoke_setup):
+    """The dry-run's static (density-based) selection agrees with the
+    concrete plan when no ablation has happened yet."""
+    cfg, reg, params, masks, _ = smoke_setup
+    for batch in (1, 256):
+        static = PLAN.plan_for_shape(cfg, reg, batch_size=batch)
+        concrete = PLAN.build_plan(cfg, reg, params, masks, batch_size=batch,
+                                   path="auto")
+        assert static == {n: d.representation
+                          for n, d in concrete.decisions.items()}
+
+
+def test_abstract_serving_tree_shapes_match_concrete_condensed(smoke_setup):
+    cfg, reg, params, masks, _ = smoke_setup
+    reps = {s.name: "condensed" for s in reg}
+    abstract = PLAN.abstract_serving_tree(cfg, reg, reps)
+    concrete = COND.export_condensed(cfg, reg, params, masks)
+    for s in reg:
+        a = REG.get_path(abstract, s.path)
+        c = REG.get_path(concrete, s.path)
+        # same rank/lead dims; k may differ (target vs realized fan-in)
+        assert a["values"].shape[:-1] == c["values"].shape[:-1]
+        assert a["indices"].dtype == c["indices"].dtype
+
+
+# ---------------------------------------------------------------------------
+# condensed-over-active exactness
+# ---------------------------------------------------------------------------
+
+def test_condensed_over_active_token_identical_with_ablation(smoke_setup):
+    """The combined Fig. 4 point: drop ablated neurons, condense survivors —
+    greedy decode must match the masked path token for token."""
+    cfg, reg, params, masks, prompts = smoke_setup
+    abl = _ablate(reg, masks)
+    coa = serve.build_serving_masks(cfg, reg, params, abl,
+                                    "condensed_over_active")
+    out_masked = serve.generate(cfg, params, abl, prompts, gen_len=8)
+    out_coa = serve.generate(cfg, params, coa, prompts, gen_len=8)
+    np.testing.assert_array_equal(np.array(out_masked), np.array(out_coa))
+
+
+def test_condensed_over_active_shrinks_row_count(smoke_setup):
+    """With 25% of neurons ablated the gather runs over ~75% of the rows —
+    the leaf's row dim is the realized max active count, not d_out."""
+    cfg, reg, params, masks, _ = smoke_setup
+    abl = _ablate(reg, masks, frac=0.25)
+    stats = COND.export_stats(reg, abl)
+    tree = COND.export_condensed_over_active(cfg, reg, params, abl, stats)
+    for s in reg:
+        leaf = REG.get_path(tree, s.path)
+        a = leaf["values"].shape[-2]
+        assert a == stats[s.name].max_active < s.d_out
+        assert leaf["out_index"].shape == leaf["values"].shape[:-1]
+        # padded rows (if any) point out of range; real rows are in range
+        oi = np.array(leaf["out_index"])
+        assert oi.max() <= s.d_out
+
+
+def test_condensed_over_active_token_identical_without_ablation(smoke_setup):
+    """Degenerate case (no ablated neurons): still exact, a == d_out."""
+    cfg, reg, params, masks, prompts = smoke_setup
+    coa = serve.build_serving_masks(cfg, reg, params, masks,
+                                    "condensed_over_active")
+    out_masked = serve.generate(cfg, params, masks, prompts, gen_len=6)
+    out_coa = serve.generate(cfg, params, coa, prompts, gen_len=6)
+    np.testing.assert_array_equal(np.array(out_masked), np.array(out_coa))
+
+
+def test_auto_plan_decode_token_identical(smoke_setup):
+    """Whatever mix auto picks must still evaluate the same function."""
+    cfg, reg, params, masks, prompts = smoke_setup
+    abl = _ablate(reg, masks)
+    for batch_size in (1, 256):
+        plan = PLAN.build_plan(cfg, reg, params, abl, batch_size=batch_size,
+                               path="auto")
+        out_masked = serve.generate(cfg, params, abl, prompts, gen_len=6)
+        out_auto = serve.generate(cfg, params, plan.serving_tree, prompts,
+                                  gen_len=6)
+        np.testing.assert_array_equal(np.array(out_masked), np.array(out_auto))
+
+
+# ---------------------------------------------------------------------------
+# export_structured exactness contract (satellite)
+# ---------------------------------------------------------------------------
+
+def test_structured_token_identical_on_ablation_only_masks(smoke_setup):
+    """When sparsity is PURELY neuron ablation (active columns dense), the
+    structured column-drop representation is exact."""
+    cfg, reg, params, masks, prompts = smoke_setup
+    abl_only = _ablation_only(reg, masks)
+    struct = serve.build_serving_masks(cfg, reg, params, abl_only, "structured")
+    out_masked = serve.generate(cfg, params, abl_only, prompts, gen_len=8)
+    out_struct = serve.generate(cfg, params, struct, prompts, gen_len=8)
+    np.testing.assert_array_equal(np.array(out_masked), np.array(out_struct))
+
+
+def test_structured_degrades_gracefully_on_unstructured_masks(smoke_setup):
+    """On fine-grained masks structured still RUNS (graceful degradation) but
+    is documented as NOT equivalent — single-step logits must diverge."""
+    cfg, reg, params, masks, prompts = smoke_setup
+    struct = serve.build_serving_masks(cfg, reg, params, masks, "structured")
+    out = serve.generate(cfg, params, struct, prompts, gen_len=4)
+    assert out.shape == (2, 8 + 4)
+    tok = prompts[:, :1]
+    lm, _ = M.decode_step(cfg, params, masks, {"tokens": tok},
+                          M.init_cache(cfg, 2, 4))
+    ls, _ = M.decode_step(cfg, params, struct, {"tokens": tok},
+                          M.init_cache(cfg, 2, 4))
+    assert float(jnp.max(jnp.abs(lm - ls))) > 1e-4
+
+
+# ---------------------------------------------------------------------------
+# fused export stats (single host sync)
+# ---------------------------------------------------------------------------
+
+def test_export_stats_matches_naive_per_stack(smoke_setup):
+    cfg, reg, params, masks, _ = smoke_setup
+    abl = _ablate(reg, masks)
+    stats = COND.export_stats(reg, abl)
+    for s in reg:
+        m = np.array(REG.get_path(abl, s.path))
+        nnz = m.sum(axis=-2)
+        act = m.any(axis=-2)
+        assert stats[s.name].k == int(nnz.max())
+        assert stats[s.name].max_active == int(act.sum(axis=-1).max())
+        np.testing.assert_allclose(stats[s.name].active_fraction,
+                                   act.mean(), rtol=1e-5)
+
+
+def test_export_condensed_matches_legacy_path(smoke_setup):
+    """The fused-stats export produces the same condensed pytree as the
+    per-stack computation it replaced."""
+    cfg, reg, params, masks, _ = smoke_setup
+    tree = COND.export_condensed(cfg, reg, params, masks)
+    for s in reg:
+        w = REG.get_path(params, s.path)
+        m = REG.get_path(masks, s.path)
+        k = int(np.array(m).sum(axis=-2).max())
+        legacy = COND._condense_stack(w * m, m, k)
+        got = REG.get_path(tree, s.path)
+        np.testing.assert_array_equal(np.array(got["values"]),
+                                      np.array(legacy["values"]))
+        np.testing.assert_array_equal(np.array(got["indices"]),
+                                      np.array(legacy["indices"]))
+
+
+# ---------------------------------------------------------------------------
+# incremental export (Plan.refresh)
+# ---------------------------------------------------------------------------
+
+def test_refresh_recondenses_only_changed_stacks(smoke_setup):
+    cfg, reg, params, masks, _ = smoke_setup
+    versions = {s.name: 0 for s in reg}
+    plan = PLAN.build_plan(cfg, reg, params, masks, batch_size=1, path="auto",
+                           mask_versions=versions)
+    assert plan.export_calls == len(reg)  # initial full export
+
+    # no version movement -> no re-condense (frozen-params serving mode)
+    assert plan.refresh(params, masks, versions, refresh_values=False) == []
+    assert plan.export_calls == len(reg)
+
+    # one stack's mask changes (and its version is stamped)
+    target = reg[1]
+    new_masks = jax.tree.map(lambda m: m, masks)
+    REG._set_path(new_masks, target.path,
+                  REG.get_path(_ablate([target], masks), target.path))
+    new_versions = dict(versions)
+    new_versions[target.name] = 1
+
+    before = {s.name: REG.get_path(plan.serving_tree, s.path) for s in reg}
+    changed = plan.refresh(params, new_masks, new_versions,
+                           refresh_values=False)
+    assert changed == [target.name]
+    assert plan.export_calls == len(reg) + 1  # exactly ONE re-condense
+    assert plan.value_refreshes == 0
+    for s in reg:
+        leaf = REG.get_path(plan.serving_tree, s.path)
+        if s.name == target.name:
+            assert leaf is not before[s.name]
+        else:  # untouched stacks keep their exported arrays verbatim
+            assert leaf is before[s.name]
+
+
+def test_refresh_values_regathers_unchanged_stacks_without_resort(smoke_setup):
+    """Default refresh: unchanged-topology stacks get a values-only regather
+    (indices reused verbatim, NOT counted as a re-condense) so the serving
+    snapshot stays coherent with weights that kept training."""
+    cfg, reg, params, masks, _ = smoke_setup
+    versions = {s.name: 0 for s in reg}
+    plan = PLAN.build_plan(cfg, reg, params, masks, batch_size=1, path="auto",
+                           mask_versions=versions)
+    before = {s.name: REG.get_path(plan.serving_tree, s.path) for s in reg}
+    target = reg[1]
+    new_versions = dict(versions)
+    new_versions[target.name] = 1
+    new_masks = jax.tree.map(lambda m: m, masks)
+    REG._set_path(new_masks, target.path,
+                  REG.get_path(_ablate([target], masks), target.path))
+
+    changed = plan.refresh(params, new_masks, new_versions)
+    assert changed == [target.name]
+    assert plan.export_calls == len(reg) + 1        # one full re-condense
+    assert plan.value_refreshes == len(reg) - 1     # cheap regathers
+    for s in reg:
+        leaf = REG.get_path(plan.serving_tree, s.path)
+        if s.name != target.name:
+            # indices reused verbatim; same params -> identical values
+            assert leaf["indices"] is before[s.name]["indices"]
+            np.testing.assert_array_equal(np.array(leaf["values"]),
+                                          np.array(before[s.name]["values"]))
+
+
+def test_refresh_keeps_snapshot_coherent_when_params_train_on(smoke_setup):
+    """The live-serving regression: weights keep training between DST steps
+    (no mask change anywhere), and the refreshed plan must serve the NEW
+    weights — not the values baked in at build time."""
+    cfg, reg, params, masks, prompts = smoke_setup
+    # no ablation -> condensed leaves; with ablation -> condensed_over_active
+    # leaves (both regather paths must stay exact)
+    for serving_masks in (masks, _ablate(reg, masks)):
+        plan = PLAN.build_plan(cfg, reg, params, serving_masks, batch_size=1,
+                               path="auto", mask_versions={s.name: 0 for s in reg})
+        # simulate further training: perturb every sparse stack's weights
+        new_params = jax.tree.map(lambda x: x, params)
+        for s in reg:
+            w = REG.get_path(new_params, s.path)
+            REG._set_path(new_params, s.path,
+                          w + 0.1 * jax.random.normal(jax.random.PRNGKey(7),
+                                                      w.shape))
+        assert plan.refresh(new_params, serving_masks,
+                            {s.name: 0 for s in reg}) == []
+        out_masked = serve.generate(cfg, new_params, serving_masks, prompts,
+                                    gen_len=6)
+        out_plan = serve.generate(cfg, new_params, plan.serving_tree, prompts,
+                                  gen_len=6)
+        np.testing.assert_array_equal(np.array(out_masked), np.array(out_plan))
+
+
+def test_refresh_flips_representation_when_ablation_appears(smoke_setup):
+    """Ablation appearing mid-training flips an auto stack from condensed to
+    condensed-over-active on the next refresh."""
+    cfg, reg, params, masks, _ = smoke_setup
+    plan = PLAN.build_plan(cfg, reg, params, masks, batch_size=1, path="auto",
+                           mask_versions={s.name: 0 for s in reg})
+    assert plan.representation_of(reg[0].name) == "condensed"
+    abl = _ablate(reg, masks)
+    plan.refresh(params, abl, {s.name: 1 for s in reg})
+    for s in reg:
+        assert plan.representation_of(s.name) == "condensed_over_active"
+
+
+def test_refreshed_plan_serves_correctly(smoke_setup):
+    """After an incremental refresh the serving tree evaluates the NEW masks."""
+    cfg, reg, params, masks, prompts = smoke_setup
+    plan = PLAN.build_plan(cfg, reg, params, masks, batch_size=1, path="auto",
+                           mask_versions={s.name: 0 for s in reg})
+    abl = _ablate(reg, masks)
+    plan.refresh(params, abl, {s.name: 1 for s in reg})
+    out_masked = serve.generate(cfg, params, abl, prompts, gen_len=6)
+    out_plan = serve.generate(cfg, params, plan.serving_tree, prompts, gen_len=6)
+    np.testing.assert_array_equal(np.array(out_masked), np.array(out_plan))
+
+
+def test_plan_weight_bytes_orders_representations(smoke_setup):
+    """Bytes under the plan: the masked path is the reference (ratio 1.0 by
+    definition), condensed beats it at 90% sparsity, and ablation shrinks
+    condensed-over-active below plain condensed."""
+    cfg, reg, params, masks, _ = smoke_setup
+    cond = PLAN.build_plan(cfg, reg, params, masks, batch_size=1,
+                           path="condensed")
+    masked = PLAN.build_plan(cfg, reg, params, masks, batch_size=1,
+                             path="masked")
+    sb_c, ref = cond.weight_bytes()
+    sb_m, ref_m = masked.weight_bytes()
+    assert ref == ref_m
+    assert sb_m == ref  # all-masked plan reports exactly the reference
+    assert sb_c < sb_m
+    abl = _ablate(reg, masks)
+    coa = PLAN.build_plan(cfg, reg, params, abl, batch_size=1,
+                          path="condensed_over_active")
+    sb_a, _ = coa.weight_bytes()
+    assert sb_a < sb_c
+    # priced at EXPORTED size: max_active rows (+4B out_index), not mean act
+    for s in reg:
+        dec = coa.decisions[s.name]
+        assert dec.stats.max_active < s.d_out

@@ -102,3 +102,17 @@ def test_serve_main_cli_condensed_matches_masked(capsys):
     np.testing.assert_array_equal(np.array(out_masked), np.array(out_cond))
     logs = capsys.readouterr().out
     assert "tok/s" in logs and "[serve:condensed]" in logs
+
+
+def test_serve_main_cli_auto_plans_and_matches_masked(capsys):
+    """``--path auto`` builds a per-stack plan at the request batch shape,
+    prints the decisions, and stays token-identical to masked."""
+    common = ["--arch", "qwen3-1.7b", "--smoke", "--batch", "2",
+              "--prompt-len", "8", "--gen", "6"]
+    out_masked = serve.main(common + ["--path", "masked"])
+    out_auto = serve.main(common + ["--path", "auto"])
+    np.testing.assert_array_equal(np.array(out_masked), np.array(out_auto))
+    logs = capsys.readouterr().out
+    assert "[plan] path=auto batch=2" in logs
+    assert "-> condensed" in logs  # B=2 is decode-like: gather wins
+    assert "[serve:auto]" in logs

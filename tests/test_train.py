@@ -74,6 +74,30 @@ def test_dst_step_maintains_invariants_and_zeroes_grown():
                     assert topology.check_constant_fan_in(m2[j], int(k), a2[j])
 
 
+def test_dst_step_stamps_mask_versions():
+    """The trainer's per-stack mask-version counters (consumed by the serving
+    Plan's incremental export): train_step leaves them alone; the DST step
+    bumps exactly the stacks whose masks actually changed."""
+    cfg = _cfg(delta_t=2)
+    reg = REG.build_registry(cfg)
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    assert set(state.mask_versions) == {s.name for s in reg}
+    assert all(int(v) == 0 for v in state.mask_versions.values())
+
+    step = jax.jit(make_train_step(cfg, reg, lambda s: jnp.float32(3e-3)))
+    dst = jax.jit(make_dst_step(cfg, reg))
+    for b in _batches(cfg, 2):
+        state, _ = step(state, b)
+    assert all(int(v) == 0 for v in state.mask_versions.values())  # no DST yet
+
+    old_masks = jax.tree.map(lambda x: x, state.masks)
+    state = dst(state, _batches(cfg, 1)[0])
+    for s in reg:
+        changed = bool(np.any(np.array(REG.get_path(state.masks, s.path))
+                              != np.array(REG.get_path(old_masks, s.path))))
+        assert int(state.mask_versions[s.name]) == int(changed)
+
+
 def test_loss_decreases_with_dst():
     cfg = _cfg(delta_t=5)
     trainer = Trainer(cfg=cfg, lr_fn=lambda s: jnp.float32(3e-3), log_every=1000)
