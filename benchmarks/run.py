@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   condensed_bench — Fig. 4   condensed vs dense/unstructured/structured layer
   ablation_bench  — Fig. 3b  active-neuron fraction, RigL vs SRigL
   serve_paths     — Fig. 6/7 masked vs condensed vs structured decode tok/s
+  kernel_autotune — tuned-vs-default kernel blocks + calibrated crossover
   accuracy        — Tables 1-3 proxy: method ordering on a small LM
   gamma_sweep     — Fig. 8   gamma_sal sensitivity
   roofline        — §Roofline aggregation of dry-run results (if present)
@@ -25,8 +26,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (accuracy, ablation_bench, condensed_bench,
-                            flops_table, gamma_sweep, roofline, serve_paths,
-                            variance)
+                            flops_table, gamma_sweep, kernel_autotune,
+                            roofline, serve_paths, variance)
 
     steps = 30 if args.quick else 80
     suites = [
@@ -36,6 +37,7 @@ def main(argv=None) -> int:
                                     + condensed_bench.run(batch=256)),
         ("serve_paths", lambda: serve_paths.run(
             batches=(1, 32) if args.quick else (1, 32, 256))),
+        ("kernel_autotune", lambda: kernel_autotune.run(smoke=True)),
         ("ablation_bench", lambda: ablation_bench.run(steps=min(steps, 40))),
         ("accuracy", lambda: accuracy.run(steps=steps)),
         ("gamma_sweep", lambda: gamma_sweep.run(steps=min(steps, 60))),

@@ -7,7 +7,14 @@ serving representation (masked / condensed / structured /
 condensed_over_active) plus the cost-model ``auto`` plan, and report
 tokens/second. The auto rows also record which representation the plan chose
 per stack — the expected trajectory is condensed at B=1 flipping to masked by
-B=256 (paper Sec. 4.4 crossover).
+B=256 (paper Sec. 4.4 crossover) — and which hardware profile priced the
+decision (``--profile measured`` calibrates the cost model on this machine
+via ``plan.HardwareProfile.measure()`` instead of the v5e-like defaults).
+
+Timing discipline: ``--warmup`` un-timed passes absorb jit compilation and
+dispatch-cache warming, then ``us_per_tok`` / ``tok_s`` are the MEDIAN of
+``--reps`` timed passes (a single timed pass can fold compile/dispatch
+jitter into the trajectory JSON).
 
 Besides the CSV rows, ``main`` emits machine-readable
 ``BENCH_serve_paths.json`` so the perf trajectory is tracked across PRs.
@@ -22,6 +29,7 @@ every stack to masked also reports exactly 1.0.
 """
 import argparse
 import json
+import statistics
 
 import jax
 
@@ -34,9 +42,13 @@ from repro.sparse import registry as REG
 BATCHES = (1, 32, 256)
 PROMPT_LEN = 8
 GEN_LEN = 8
+WARMUP = 2
+REPS = 3
 
 
-def run(batches=BATCHES, arch: str = "qwen3-1.7b", results: list | None = None):
+def run(batches=BATCHES, arch: str = "qwen3-1.7b", results: list | None = None,
+        profile: PLAN.HardwareProfile = PLAN.DEFAULT_PROFILE,
+        warmup: int = WARMUP, reps: int = REPS):
     cfg = configs.get_smoke_config(arch)
     key = jax.random.PRNGKey(0)
     reg = REG.build_registry(cfg)
@@ -48,18 +60,23 @@ def run(batches=BATCHES, arch: str = "qwen3-1.7b", results: list | None = None):
         prompts = jax.random.randint(key, (batch, PROMPT_LEN), 0, cfg.vocab_size)
         for path in PLAN.PATHS:
             if path == "masked":
-                sm, reps, ratio = masks, {s.name: "masked" for s in reg}, 1.0
+                sm, reps_chosen, ratio = masks, {s.name: "masked" for s in reg}, 1.0
             else:
                 plan = serve.build_plan(cfg, reg, params, masks, path,
-                                        batch_size=batch)
+                                        batch_size=batch, profile=profile)
                 sm = plan.serving_tree
-                reps = {n: d.representation for n, d in plan.decisions.items()}
+                reps_chosen = {n: d.representation
+                               for n, d in plan.decisions.items()}
                 sb, db = plan.weight_bytes()
                 ratio = sb / db
-            # compile (prefill jit + decode-loop jit), then one timed pass
-            serve.serve_once(cfg, params, sm, prompts, GEN_LEN, path, quiet=True)
-            _, tok_s = serve.serve_once(cfg, params, sm, prompts, GEN_LEN, path,
-                                        quiet=True)
+            # warmup passes absorb jit compile + dispatch-cache effects...
+            for _ in range(max(warmup, 1)):
+                serve.serve_once(cfg, params, sm, prompts, GEN_LEN, path,
+                                 quiet=True)
+            # ...then report the median of the timed passes
+            toks = [serve.serve_once(cfg, params, sm, prompts, GEN_LEN, path,
+                                     quiet=True)[1] for _ in range(max(reps, 1))]
+            tok_s = statistics.median(toks)
             # decode-only per-token cost (prefill excluded — the claim under
             # benchmark is decode throughput, and interpret-mode prefill would
             # otherwise dominate the condensed column)
@@ -71,8 +88,12 @@ def run(batches=BATCHES, arch: str = "qwen3-1.7b", results: list | None = None):
                     "arch": arch, "batch": batch, "path": path,
                     "tok_s": round(tok_s, 2),
                     "us_per_tok": round(1e6 / tok_s, 2),
+                    "tok_s_spread": [round(t, 2) for t in sorted(toks)],
                     "weight_bytes_ratio": round(ratio, 4),
-                    "representations": reps,
+                    "representations": reps_chosen,
+                    # the profile only prices the auto rows' decisions, but is
+                    # recorded on every row for a self-describing artifact
+                    "profile": profile.name,
                 })
     return rows
 
@@ -81,13 +102,24 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--batches", default=",".join(map(str, BATCHES)))
+    ap.add_argument("--warmup", type=int, default=WARMUP,
+                    help="un-timed passes per (path, batch) before timing")
+    ap.add_argument("--reps", type=int, default=REPS,
+                    help="timed passes per (path, batch); median reported")
+    ap.add_argument("--profile", choices=("default", "measured"),
+                    default="default",
+                    help="hardware profile pricing the auto plan: 'measured' "
+                         "calibrates on this machine (HardwareProfile.measure)")
     ap.add_argument("--out", default="BENCH_serve_paths.json",
                     help="machine-readable results (perf trajectory across PRs)")
     args = ap.parse_args(argv)
     batches = tuple(int(b) for b in args.batches.split(","))
+    profile = (PLAN.HardwareProfile.measure()
+               if args.profile == "measured" else PLAN.DEFAULT_PROFILE)
 
     results: list = []
-    rows = run(batches=batches, arch=args.arch, results=results)
+    rows = run(batches=batches, arch=args.arch, results=results,
+               profile=profile, warmup=args.warmup, reps=args.reps)
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     if args.out:
@@ -96,6 +128,9 @@ def main(argv=None):
             "arch": args.arch,
             "prompt_len": PROMPT_LEN,
             "gen_len": GEN_LEN,
+            "warmup": args.warmup,
+            "reps": args.reps,
+            "profile": profile.name,
             "backend": jax.default_backend(),
             "pallas_interpret_note": "condensed timings are interpret-mode on "
                                      "CPU; weight_bytes_ratio is the "

@@ -85,6 +85,10 @@ def main():
     # 6. incremental export: keep training, then refresh the plan — only
     #    stacks whose mask-version counter moved are re-condensed, so a live
     #    training job can serve without a full re-export every delta_t steps.
+    #    The refresh runs as jitted device programs with the plan's OLD
+    #    {values, indices} buffers donated: new arrays are written into the
+    #    old storage whenever shapes match, so serving weight memory never
+    #    doubles during a refresh (and no weight data touches the host).
     for i in range(60, 70):
         batch = jax.tree.map(jnp.asarray, data.batch(i))
         state, _ = step(state, batch)
@@ -94,6 +98,28 @@ def main():
     print(f"serve: plan.refresh re-condensed {len(changed)}/{len(registry)} "
           f"stacks: {changed}; values-only regathers (topology unchanged, "
           f"weights trained on): {plan.value_refreshes}")
+
+    # 7. calibration: replace the cost model's built-in v5e-like constants
+    #    with rates measured on THIS machine (HBM stream, matmul, gather —
+    #    cached per backend in the autotune cache file), and let the timed
+    #    block-shape search pick the Pallas kernel tiles for the decode
+    #    shape. `--path auto --profile measured` / `--autotune` on the serve
+    #    CLI do the same; benchmarks/kernel_autotune.py validates that the
+    #    calibrated model's predicted masked/condensed crossover batch lands
+    #    in the measured bucket.
+    from repro.sparse import autotune, plan as PLAN
+    prof = PLAN.HardwareProfile.measure()
+    print(f"calibrated {prof.name}: hbm {prof.hbm_bytes_per_s / 1e9:.1f} GB/s "
+          f"matmul {prof.mxu_flops_per_s / 1e9:.1f} GFLOP/s "
+          f"gather {prof.gather_flops_per_s / 1e9:.1f} GFLOP/s "
+          f"(cache: {autotune.cache_path()})")
+    plan_m = serve.build_plan(cfg, registry, state.params, state.masks,
+                              "auto", batch_size=2, profile=prof)
+    print(plan_m.describe())
+    res = autotune.autotune_blocks(2, s0.d_in, s0.d_out, k)
+    print(f"autotuned {s0.name} @ b=2: best "
+          f"{res.block_b or 'decode'}x{res.block_n} "
+          f"({res.us:.0f} us vs 128x128 default {res.default_us:.0f} us)")
 
 
 if __name__ == "__main__":

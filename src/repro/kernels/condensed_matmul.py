@@ -10,20 +10,191 @@ TPU adaptation of the paper's Alg. 1 (a CPU loop / CUDA gather kernel):
   bound decode/online-inference shapes this kernel targets.
 * Grid is (batch tiles x neuron tiles); each grid step gathers
   ``x_tile[:, idx_tile]`` -> (B_blk, N_blk, k) on the VPU and reduces over k.
-* Block sizes default to MXU/VPU-aligned multiples (8 sublanes x 128 lanes);
-  ``d_in`` is NOT blocked (constant fan-in indices may reference any input
-  feature), so VMEM budget is ``B_blk*d_in + N_blk*k*2 + B_blk*N_blk`` words
-  — callers pick ``B_blk`` so this fits (~16 MiB/core VMEM on v5e).
+* ``d_in`` is NOT blocked (constant fan-in indices may reference any input
+  feature), so the block shape must satisfy the VMEM budget
+
+      forward:  B_blk*d_in + N_blk*k*2 + B_blk*N_blk          words
+      dw:       B_blk*N_blk + B_blk*d_in + 2*N_blk*k          words
+                (dy tile      x tile       idx tile + dw tile)
+
+  against the per-backend VMEM cap (~16 MiB/core on v5e-class TPUs, half of
+  which is budgeted here to leave room for double buffering and compiler
+  temporaries). ``block_candidates`` / ``dw_block_candidates`` enumerate the
+  8x128-aligned shapes that fit; ``default_blocks`` picks an untimed default
+  and ``repro.sparse.autotune`` runs the timed search.
+* Decode shapes (B <= 8) use a specialized variant: the grid runs over
+  neuron tiles only and the (sublane-padded) batch is staged whole, so a
+  B=1 request does not pay for a 128-row batch tile of padding.
+* The dw kernel is blocked over batch tiles (accumulating into the output
+  block across the innermost grid dimension), so large-batch training shapes
+  never stage the full batch in VMEM.
+* ``interpret`` is auto-selected from the backend (interpret only on CPU);
+  ``REPRO_PALLAS_INTERPRET={0,1}`` overrides in either direction.
 
 Validated against ``ref.condensed_matmul_ref`` in interpret mode (CPU).
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+# TPU tiling units (f32): last dim 128 lanes, second-to-last 8 sublanes.
+LANE = 128
+SUBLANE = 8
+
+# Decode-specialized variant threshold: at or below this batch the whole
+# (sublane-padded) batch is staged in VMEM and the grid runs over neuron
+# tiles only.
+SMALL_BATCH_MAX = 8
+
+# Per-backend VMEM capacity in bytes. CPU (interpret mode) has no hard cap,
+# but uses the TPU budget so block choices transfer to the real target.
+VMEM_BYTES = {"tpu": 16 * 2**20, "gpu": 16 * 2**20, "cpu": 16 * 2**20}
+# Fraction of VMEM one grid step's working set may occupy (the rest is left
+# for double buffering of the next blocks and compiler temporaries).
+VMEM_USABLE_FRACTION = 0.5
+
+_WORD = 4  # f32 values / int32 indices; bf16 inputs still accumulate in f32
+
+
+def default_interpret(backend: str | None = None) -> bool:
+    """Interpret-mode default: only on CPU (no Mosaic lowering there).
+
+    ``REPRO_PALLAS_INTERPRET`` overrides in either direction (``0`` forces
+    compiled lowering, anything else forces the interpreter) — the escape
+    hatch for debugging compiled kernels on TPU or forcing interpret in CI.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env != "0"
+    return (backend or jax.default_backend()) == "cpu"
+
+
+def vmem_budget_bytes(backend: str | None = None) -> int:
+    cap = VMEM_BYTES.get(backend or jax.default_backend(), VMEM_BYTES["tpu"])
+    return int(cap * VMEM_USABLE_FRACTION)
+
+
+def fwd_vmem_words(block_b: int, block_n: int, d_in: int, k: int) -> int:
+    """Forward working set: x tile + (values + indices) tiles + out tile."""
+    return block_b * d_in + block_n * k * 2 + block_b * block_n
+
+
+def dw_vmem_words(block_b: int, block_n: int, d_in: int, k: int) -> int:
+    """dw working set: dy tile + x tile + indices tile + dw accumulator."""
+    return block_b * block_n + block_b * d_in + 2 * block_n * k
+
+
+def _ceil_to(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+_BLOCK_B_CANDIDATES = (8, 16, 32, 64, 128, 256, 512)
+_BLOCK_N_CANDIDATES = (128, 256, 512, 1024)
+
+
+def _aligned_candidates(words_fn, b: int, d_in: int, n_out: int, k: int,
+                        backend: str | None) -> list[tuple[int, int]]:
+    """All 8x128-aligned (block_b, block_n) shapes whose ``words_fn`` working
+    set fits the VMEM budget. Blocks larger than the padded problem dims are
+    excluded (they only add padding work). Always returns at least one
+    shape: the (8, 128) minimum is kept even if the budget formula rejects
+    it, because ``d_in`` is structurally unblocked — a problem too large at
+    minimum blocks needs a different kernel, not a smaller tile.
+    """
+    budget = vmem_budget_bytes(backend)
+    bp = _ceil_to(max(b, 1), SUBLANE)
+    np_ = _ceil_to(max(n_out, 1), LANE)
+    out = []
+    for bb in _BLOCK_B_CANDIDATES:
+        if bb > bp and bb != SUBLANE:
+            continue
+        for bn in _BLOCK_N_CANDIDATES:
+            if bn > np_ and bn != LANE:
+                continue
+            if words_fn(bb, bn, d_in, k) * _WORD <= budget:
+                out.append((bb, bn))
+    if not out:
+        out.append((SUBLANE, LANE))
+    return out
+
+
+def block_candidates(b: int, d_in: int, n_out: int, k: int, *,
+                     backend: str | None = None) -> list[tuple[int, int]]:
+    """Forward-kernel candidates (see _aligned_candidates / fwd_vmem_words)."""
+    return _aligned_candidates(fwd_vmem_words, b, d_in, n_out, k, backend)
+
+
+def dw_block_candidates(b: int, d_in: int, n_out: int, k: int, *,
+                        backend: str | None = None) -> list[tuple[int, int]]:
+    """dw-kernel candidates (see _aligned_candidates / dw_vmem_words)."""
+    return _aligned_candidates(dw_vmem_words, b, d_in, n_out, k, backend)
+
+
+def _fit_block_b(words_fn, block_n: int, b: int, d_in: int, k: int, *,
+                 backend: str | None = None, cap: int | None = None) -> int:
+    """Largest aligned batch tile fitting ``words_fn``'s budget at a FORCED
+    neuron tile (any ``block_n``, aligned or not). Floors at the 8-row
+    minimum — a caller-forced neuron tile is honored even over budget."""
+    budget = vmem_budget_bytes(backend)
+    bp = _ceil_to(max(b, 1), SUBLANE)
+    best = SUBLANE
+    for bb in _BLOCK_B_CANDIDATES:
+        if (bb > bp and bb != SUBLANE) or (cap is not None and bb > cap):
+            continue
+        if words_fn(bb, block_n, d_in, k) * _WORD <= budget:
+            best = max(best, bb)
+    return best
+
+
+def _fit_block_n(words_fn, block_b: int, n_out: int, d_in: int, k: int, *,
+                 backend: str | None = None, cap: int | None = None) -> int:
+    """Mirror of _fit_block_b: largest aligned neuron tile fitting the
+    budget at a FORCED batch tile, flooring at the 128-lane minimum."""
+    budget = vmem_budget_bytes(backend)
+    np_ = _ceil_to(max(n_out, 1), LANE)
+    best = LANE
+    for bn in _BLOCK_N_CANDIDATES:
+        if (bn > np_ and bn != LANE) or (cap is not None and bn > cap):
+            continue
+        if words_fn(block_b, bn, d_in, k) * _WORD <= budget:
+            best = max(best, bn)
+    return best
+
+
+def default_blocks(b: int, d_in: int, n_out: int, k: int, *,
+                   backend: str | None = None) -> tuple[int, int]:
+    """Untimed default block shape: the legacy 128x128 when it fits the VMEM
+    budget, otherwise the largest fitting candidate (batch dim shrinks first
+    — the ``B_blk * d_in`` x-tile term is what blows the budget at large
+    ``d_in``). The timed search in repro.sparse.autotune refines this."""
+    cands = block_candidates(b, d_in, n_out, k, backend=backend)
+    target = (min(128, _ceil_to(max(b, 1), SUBLANE)),
+              min(128, _ceil_to(max(n_out, 1), LANE)))
+    if target in cands:
+        return target
+    return max(cands, key=lambda c: (min(c[0], target[0]) * min(c[1], target[1]),
+                                     c[0] * c[1]))
+
+
+def default_dw_blocks(b: int, d_in: int, n_out: int, k: int, *,
+                      backend: str | None = None) -> tuple[int, int]:
+    """Largest fitting dw block: stage as much batch per step as the budget
+    allows (fewer accumulation passes over the output block), neuron tile at
+    the legacy 128 when possible."""
+    cands = dw_block_candidates(b, d_in, n_out, k, backend=backend)
+    bn_target = min(128, _ceil_to(max(n_out, 1), LANE))
+    with_bn = [c for c in cands if c[1] == bn_target] or cands
+    return max(with_bn, key=lambda c: c[0])
+
+
+# ---------------------------------------------------------------------------
+# kernels
+# ---------------------------------------------------------------------------
 
 
 def _fwd_kernel(x_ref, w_ref, idx_ref, out_ref):
@@ -48,33 +219,38 @@ def _fwd_kernel(x_ref, w_ref, idx_ref, out_ref):
 def _dw_kernel(dy_ref, x_ref, idx_ref, dw_ref):
     """dw tile: dw[n, k] = sum_b dy[b, n] * x[b, idx[n, k]].
 
-    dy_ref : (B, N_blk), x_ref : (B, d_in), idx_ref : (N_blk, k).
-    Full batch is reduced in one grid step (grid over neuron tiles only).
+    dy_ref : (B_blk, N_blk), x_ref : (B_blk, d_in), idx_ref : (N_blk, k).
+    Grid is (neuron tiles, batch tiles) with batch innermost: the output
+    block stays resident while batch tiles accumulate into it, so the full
+    batch is never staged in VMEM at once (see dw_vmem_words).
     """
+    i = pl.program_id(1)
     dy = dy_ref[...].astype(jnp.float32)
     x = x_ref[...]
     idx = idx_ref[...]
     n_blk, k = idx.shape
     gathered = jnp.take(x, idx.reshape(-1), axis=1).astype(jnp.float32)
     gathered = gathered.reshape(x.shape[0], n_blk, k)
-    dw_ref[...] = jnp.einsum("bn,bnk->nk", dy, gathered).astype(dw_ref.dtype)
+    contrib = jnp.einsum("bn,bnk->nk", dy, gathered).astype(dw_ref.dtype)
+
+    @pl.when(i == 0)
+    def _init():
+        dw_ref[...] = contrib
+
+    @pl.when(i != 0)
+    def _accumulate():
+        dw_ref[...] += contrib
 
 
-def _ceil_to(v: int, m: int) -> int:
-    return -(-v // m) * m
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+# ---------------------------------------------------------------------------
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "block_n", "interpret"))
-def condensed_matmul(
-    x: jax.Array,
-    values: jax.Array,
-    indices: jax.Array,
-    *,
-    block_b: int = 128,
-    block_n: int = 128,
-    interpret: bool = True,
-) -> jax.Array:
-    """Forward condensed matmul via pallas_call. Shapes as in ref.py."""
+def _fwd_tiled(x, values, indices, *, block_b: int, block_n: int,
+               interpret: bool):
+    """General forward: grid over (batch tiles, neuron tiles)."""
     b, d_in = x.shape
     n_out, k = values.shape
     bp, np_ = _ceil_to(max(b, 1), block_b), _ceil_to(n_out, block_n)
@@ -98,34 +274,149 @@ def condensed_matmul(
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _fwd_decode(x, values, indices, *, block_n: int, interpret: bool):
+    """Decode-specialized forward: batch staged whole (padded to the 8-row
+    sublane unit, not a 128-row batch tile), grid over neuron tiles only."""
+    b, d_in = x.shape
+    n_out, k = values.shape
+    bp, np_ = _ceil_to(max(b, 1), SUBLANE), _ceil_to(n_out, block_n)
+    xp = jnp.pad(x, ((0, bp - b), (0, 0)))
+    wp = jnp.pad(values, ((0, np_ - n_out), (0, 0)))
+    ip = jnp.pad(indices.astype(jnp.int32), ((0, np_ - n_out), (0, 0)))
+
+    out = pl.pallas_call(
+        _fwd_kernel,
+        grid=(np_ // block_n,),
+        in_specs=[
+            pl.BlockSpec((bp, d_in), lambda j: (0, 0)),
+            pl.BlockSpec((block_n, k), lambda j: (j, 0)),
+            pl.BlockSpec((block_n, k), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bp, block_n), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, np_), x.dtype),
+        interpret=interpret,
+    )(xp, wp, ip)
+    return out[:b, :n_out]
+
+
+def condensed_matmul(
+    x: jax.Array,
+    values: jax.Array,
+    indices: jax.Array,
+    *,
+    block_b: int | None = None,
+    block_n: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Forward condensed matmul via pallas_call. Shapes as in ref.py.
+
+    ``block_b=None`` auto-selects: decode shapes (B <= SMALL_BATCH_MAX) go to
+    the decode-specialized variant, larger batches get the VMEM-budget
+    default (see default_blocks; repro.sparse.autotune supplies timed
+    choices). ``interpret=None`` resolves from the backend (CPU only).
+    Explicit ``block_b`` forces the general tiled kernel.
+    """
+    b, d_in = x.shape
+    n_out, k = values.shape
+    if interpret is None:
+        interpret = default_interpret()
+    if block_b is None and b <= SMALL_BATCH_MAX:
+        return condensed_matmul_decode(x, values, indices, block_n=block_n,
+                                       interpret=interpret)
+    if block_b is None and block_n is None:
+        block_b, block_n = default_blocks(b, d_in, n_out, k)
+    elif block_b is None:
+        # a forced neuron tile re-sizes the batch tile against the SAME
+        # budget (a 128-sized default could overflow VMEM at large block_n)
+        block_b = _fit_block_b(fwd_vmem_words, block_n, b, d_in, k, cap=128)
+    elif block_n is None:
+        block_n = _fit_block_n(fwd_vmem_words, block_b, n_out, d_in, k,
+                               cap=128)
+    return _fwd_tiled(x, values, indices, block_b=block_b, block_n=block_n,
+                      interpret=interpret)
+
+
+def condensed_matmul_decode(
+    x: jax.Array,
+    values: jax.Array,
+    indices: jax.Array,
+    *,
+    block_n: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Decode-specialized condensed matmul (batch staged whole).
+
+    Bit-identical to the general kernel: the per-row reduction over k is
+    independent of how the batch axis is padded or tiled. Intended for
+    B <= SMALL_BATCH_MAX but correct for any batch that fits VMEM."""
+    b, d_in = x.shape
+    n_out, k = values.shape
+    if interpret is None:
+        interpret = default_interpret()
+    if block_n is None:
+        _, block_n = default_blocks(min(b, SMALL_BATCH_MAX), d_in, n_out, k)
+    return _fwd_decode(x, values, indices, block_n=block_n,
+                       interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n", "interpret"))
+def _dw_tiled(dy, x, indices, *, block_b: int, block_n: int, interpret: bool):
+    b, d_in = x.shape
+    n_out, k = indices.shape
+    bp, np_ = _ceil_to(max(b, 1), block_b), _ceil_to(n_out, block_n)
+    dyp = jnp.pad(dy, ((0, bp - b), (0, np_ - n_out)))
+    xp = jnp.pad(x, ((0, bp - b), (0, 0)))
+    ip = jnp.pad(indices.astype(jnp.int32), ((0, np_ - n_out), (0, 0)))
+
+    # batch tiles innermost (last grid dim iterates fastest): the (block_n, k)
+    # output block stays resident across the accumulation
+    dw = pl.pallas_call(
+        _dw_kernel,
+        grid=(np_ // block_n, bp // block_b),
+        in_specs=[
+            pl.BlockSpec((block_b, block_n), lambda j, i: (i, j)),
+            pl.BlockSpec((block_b, d_in), lambda j, i: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda j, i: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, k), lambda j, i: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, k), values_dtype(dy)),
+        interpret=interpret,
+    )(dyp, xp, ip)
+    return dw[:n_out]
+
+
 def condensed_matmul_dw(
     dy: jax.Array,
     x: jax.Array,
     indices: jax.Array,
     *,
-    block_n: int = 128,
-    interpret: bool = True,
+    block_b: int | None = None,
+    block_n: int | None = None,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Backward-wrt-values kernel. dy: (B, n_out), x: (B, d_in) -> (n_out, k)."""
+    """Backward-wrt-values kernel. dy: (B, n_out), x: (B, d_in) -> (n_out, k).
+
+    Blocked over batch tiles (``block_b``), accumulating into the output
+    block, so large-batch training shapes never stage the full batch in
+    VMEM; the working set per grid step is ``dw_vmem_words`` words. Defaults
+    stage the largest batch tile the VMEM budget allows.
+    """
     b, d_in = x.shape
     n_out, k = indices.shape
-    np_ = _ceil_to(n_out, block_n)
-    dyp = jnp.pad(dy, ((0, 0), (0, np_ - n_out)))
-    ip = jnp.pad(indices.astype(jnp.int32), ((0, np_ - n_out), (0, 0)))
-
-    dw = pl.pallas_call(
-        _dw_kernel,
-        grid=(np_ // block_n,),
-        in_specs=[
-            pl.BlockSpec((b, block_n), lambda j: (0, j)),
-            pl.BlockSpec((b, d_in), lambda j: (0, 0)),
-            pl.BlockSpec((block_n, k), lambda j: (j, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_n, k), lambda j: (j, 0)),
-        out_shape=jax.ShapeDtypeStruct((np_, k), values_dtype(dy)),
-        interpret=interpret,
-    )(dyp, x, ip)
-    return dw[:n_out]
+    if interpret is None:
+        interpret = default_interpret()
+    if block_b is None and block_n is None:
+        block_b, block_n = default_dw_blocks(b, d_in, n_out, k)
+    elif block_b is None:
+        # size the batch tile against the dw budget AT the forced neuron
+        # tile — default_dw_blocks assumes a 128-wide tile and its block_b
+        # could overflow VMEM when combined with a larger caller block_n
+        block_b = _fit_block_b(dw_vmem_words, block_n, b, d_in, k)
+    elif block_n is None:
+        block_n = _fit_block_n(dw_vmem_words, block_b, n_out, d_in, k,
+                               cap=128)
+    return _dw_tiled(dy, x, indices, block_b=block_b, block_n=block_n,
+                     interpret=interpret)
 
 
 def values_dtype(dy: jax.Array):

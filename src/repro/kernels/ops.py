@@ -4,11 +4,18 @@
 forward runs the Pallas kernel; the backward pass computes
 
   dx = scatter-add of dy * values   (jnp; XLA lowers this well on TPU)
-  dw = Pallas dw kernel (gather formulation, no scatter needed)
+  dw = Pallas dw kernel (gather formulation, batch-tiled, no scatter needed)
 
 The condensed path is inference-first (decode / online serving); training uses
 the masked-dense MXU path (repro.sparse.masked), so the jnp dx here is not on
 the training hot path.
+
+Block-shape resolution (when the caller does not force one): the tuned
+winner from repro.sparse.autotune's persistent cache for this backend +
+shape + batch bucket, else the untimed VMEM-budget default inside
+kernels.condensed_matmul (which also routes B <= 8 to the decode-specialized
+variant). ``interpret`` resolves from the backend — interpret-mode only on
+CPU, overridable with REPRO_PALLAS_INTERPRET={0,1}.
 """
 from __future__ import annotations
 
@@ -20,11 +27,24 @@ import jax.numpy as jnp
 from repro.kernels import condensed_matmul as cm
 from repro.kernels import ref
 
-# interpret=True everywhere in this container (CPU); on real TPU the same code
-# runs compiled by flipping this default (or via REPRO_PALLAS_INTERPRET=0).
-import os
 
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+def _resolve_blocks(batch: int, d_in: int, n_out: int, k: int,
+                    block_b, block_n, itemsize: int):
+    """Caller-forced blocks win; else the autotune cache; else (None, None)
+    so kernels.condensed_matmul applies its VMEM-budget default.
+
+    The cache is consulted only when NEITHER dim is forced: a tuned winner
+    was validated as a PAIR, so splicing one of its dims against an
+    arbitrary caller-forced other dim could exceed the VMEM budget — with a
+    half-forced call the remaining dim goes to the kernel module's budget
+    fit instead."""
+    if block_b is not None or block_n is not None:
+        return block_b, block_n
+    from repro.sparse import autotune  # lazy: keeps kernels importable alone
+    tuned = autotune.lookup_blocks(batch, d_in, n_out, k, itemsize=itemsize)
+    if tuned is not None:
+        return tuned["block_b"], tuned["block_n"]
+    return None, None
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
@@ -32,13 +52,13 @@ def condensed_linear(
     x: jax.Array,
     values: jax.Array,
     indices: jax.Array,
-    block_b: int = 128,
-    block_n: int = 128,
+    block_b: int | None = None,
+    block_n: int | None = None,
 ) -> jax.Array:
     """y[b, n] = sum_k x[b, indices[n, k]] * values[n, k]."""
-    return cm.condensed_matmul(
-        x, values, indices, block_b=block_b, block_n=block_n, interpret=INTERPRET
-    )
+    bb, bn = _resolve_blocks(x.shape[0], x.shape[-1], *values.shape,
+                             block_b, block_n, jnp.dtype(x.dtype).itemsize)
+    return cm.condensed_matmul(x, values, indices, block_b=bb, block_n=bn)
 
 
 def _fwd(x, values, indices, block_b, block_n):
@@ -49,7 +69,7 @@ def _fwd(x, values, indices, block_b, block_n):
 def _bwd(block_b, block_n, res, dy):
     x, values, indices = res
     dx = ref.condensed_matmul_dx_ref(dy, values, indices, x.shape[-1]).astype(x.dtype)
-    dw = cm.condensed_matmul_dw(dy, x, indices, block_n=block_n, interpret=INTERPRET)
+    dw = cm.condensed_matmul_dw(dy, x, indices, block_n=block_n)
     return dx, dw.astype(values.dtype), None
 
 

@@ -32,6 +32,18 @@ storage/compute representation differs.
 The generation loop is a single jitted ``lax.scan`` over decode steps with the
 KV/SSM cache donated (no per-token Python dispatch, no cache copies) — the
 serving analogue of the scanned layer stacks in repro.models.model.
+
+Calibration knobs (this machine, not a spec sheet):
+
+  --profile measured  price the --path auto cost model with rates micro-
+                      benchmarked on the live backend (HardwareProfile
+                      .measure(); cached per backend in the autotune cache)
+  --autotune          run the timed (block_b, block_n) search for every
+                      condensed stack shape at this batch bucket; winners
+                      persist in the autotune cache
+                      ($REPRO_AUTOTUNE_CACHE or ~/.cache/repro/autotune.json)
+                      and are picked up by the Pallas kernel wrappers at
+                      trace time
 """
 from __future__ import annotations
 
@@ -51,10 +63,12 @@ PATHS = PLAN.PATHS
 
 
 def build_plan(cfg, registry, params, masks, path: str, *,
-               batch_size: int = 1, mask_versions=None) -> PLAN.Plan:
+               batch_size: int = 1, mask_versions=None,
+               profile: PLAN.HardwareProfile = PLAN.DEFAULT_PROFILE) -> PLAN.Plan:
     """Per-stack execution plan for ``path`` at the request batch shape."""
     return PLAN.build_plan(cfg, registry, params, masks, path=path,
-                           batch_size=batch_size, mask_versions=mask_versions)
+                           batch_size=batch_size, mask_versions=mask_versions,
+                           profile=profile)
 
 
 def build_serving_masks(cfg, registry, params, masks, path: str,
@@ -140,6 +154,18 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--path", choices=PATHS, default="masked",
                     help="serving representation for sparse linears")
+    ap.add_argument("--profile", choices=("default", "measured"),
+                    default="default",
+                    help="cost-model hardware profile for --path auto: "
+                         "'measured' microbenchmarks HBM/matmul/gather rates "
+                         "on this machine (cached per backend in the "
+                         "autotune cache file) instead of the built-in "
+                         "v5e-like constants")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the timed kernel block-shape search for every "
+                         "condensed stack shape at this batch bucket before "
+                         "serving (results persist in the autotune cache "
+                         "and are picked up by the Pallas kernel wrappers)")
     args = ap.parse_args(argv)
 
     cfg = (configs.get_smoke_config if args.smoke else configs.get_config)(args.arch)
@@ -152,11 +178,34 @@ def main(argv=None):
     if args.path not in ("masked", "auto") and not reg:
         raise SystemExit(f"{args.arch} has no sparse stacks — only "
                          f"--path masked/auto")
+    profile = PLAN.DEFAULT_PROFILE
+    if args.profile == "measured":
+        profile = PLAN.HardwareProfile.measure()
+        print(f"[serve] calibrated profile {profile.name}: "
+              f"hbm {profile.hbm_bytes_per_s / 1e9:.1f} GB/s, "
+              f"matmul {profile.mxu_flops_per_s / 1e9:.1f} GFLOP/s, "
+              f"gather {profile.gather_flops_per_s / 1e9:.1f} GFLOP/s")
+    if args.autotune and args.path == "masked":
+        print("[serve] --autotune skipped: --path masked never dispatches "
+              "to the condensed kernels (use a condensed-family path or "
+              "auto)")
+    elif args.autotune and reg:
+        from repro.sparse import autotune as AT
+        from repro.sparse import condensed as COND
+        # tune at the SERVING dtype: layers cast condensed values to the
+        # activation dtype, and the cache key includes the itemsize — an f32
+        # tuning pass would never be looked up by a bf16 serving run
+        tuned = AT.tune_registry(reg, COND.export_stats(reg, masks),
+                                 batch=args.batch, dtype=jnp.dtype(cfg.dtype))
+        for name, res in tuned.items():
+            print(f"[serve] autotuned {name}: best "
+                  f"{res.block_b or 'decode'}x{res.block_n} "
+                  f"({res.us:.1f} us vs default {res.default_us:.1f} us)")
     if args.path == "masked" or not reg:
         serving_masks = masks
     else:
         plan = build_plan(cfg, reg, params, masks, args.path,
-                          batch_size=args.batch)
+                          batch_size=args.batch, profile=profile)
         if args.path == "auto":
             print(plan.describe())
         serving_masks = plan.serving_tree

@@ -9,6 +9,7 @@ dry-run uses to lower the condensed decode program without allocation.
 """
 from __future__ import annotations
 
+import functools
 import typing
 
 import jax
@@ -59,9 +60,7 @@ def export_stats(registry, masks: dict,
 def _condense_stack(weight, mask, k: int):
     """vmap dense_to_condensed over the leading stack dims."""
     fn = lambda w, m: topology.dense_to_condensed(w, m, k)
-    for _ in range(weight.ndim - 2):
-        fn = jax.vmap(fn)
-    vals, idx = fn(weight, mask)
+    vals, idx = _vmap_lead(fn, weight.ndim - 2)(weight, mask)
     return {"values": vals, "indices": idx}
 
 
@@ -108,9 +107,7 @@ def _condense_active_stack(weight, mask, k: int, a: int):
         vals, idx = topology.dense_to_condensed(w_sel * m_sel, m_sel, k)
         return vals, idx, jnp.where(sel, out_index, d_out).astype(jnp.int32)
 
-    for _ in range(weight.ndim - 2):
-        fn = jax.vmap(fn)
-    vals, idx, oi = fn(weight, mask)
+    vals, idx, oi = _vmap_lead(fn, weight.ndim - 2)(weight, mask)
     return {"values": vals, "indices": idx, "out_index": oi}
 
 
@@ -119,7 +116,98 @@ def condense_active_stack_leaf(weight, mask, stats: ExportStats) -> dict:
                                   max(stats.max_active, 1))
 
 
-def revalue_stack_leaf(weight, mask, leaf: dict) -> dict:
+# --- jitted donated re-export -----------------------------------------------
+#
+# Plan.refresh runs against a LIVE serving job, so the re-export must not
+# transiently hold two copies of a stack's condensed weights. The helpers
+# below run the re-condense / values-regather as ONE jitted program with the
+# plan's old {values, indices} buffers donated: when the new leaf has the
+# same avals (fan-in k and active-row count unchanged — the common case for
+# a DST step, which rewires at constant fan-in), XLA writes the new arrays
+# into the donated buffers and the old jax.Arrays are invalidated at
+# dispatch. keep_unused=True stops jit from pruning the donated args (the
+# output aliases them by shape/dtype, not dataflow). No weight data ever
+# crosses to the host.
+
+
+def _vmap_lead(fn, n_lead: int):
+    for _ in range(n_lead):
+        fn = jax.vmap(fn)
+    return fn
+
+
+@functools.partial(jax.jit, static_argnames=("k",), donate_argnums=(2, 3),
+                   keep_unused=True)
+def _recondense_donated(weight, mask, old_values, old_indices, *, k: int):
+    fn = lambda w, m: topology.dense_to_condensed(w * m, m, k)
+    vals, idx = _vmap_lead(fn, weight.ndim - 2)(weight, mask)
+    return {"values": vals.astype(old_values.dtype), "indices": idx}
+
+
+@functools.partial(jax.jit, static_argnames=("k", "a"),
+                   donate_argnums=(2, 3, 4), keep_unused=True)
+def _recondense_active_donated(weight, mask, old_values, old_indices,
+                               old_out_index, *, k: int, a: int):
+    leaf = _condense_active_stack(weight, mask, k, a)
+    leaf["values"] = leaf["values"].astype(old_values.dtype)
+    return leaf
+
+
+def recondense_stack_leaf(weight, mask, stats: ExportStats, old_leaf: dict,
+                          *, over_active: bool = False,
+                          donate: bool = True) -> dict:
+    """Re-condense one stack for Plan.refresh, reusing ``old_leaf``'s device
+    buffers when the new leaf's avals match (see block comment above).
+
+    CAUTION (donate=True): the arrays in ``old_leaf`` are invalidated —
+    callers must not read them afterwards. Falls back to a fresh (non-
+    donating) export when the realized fan-in / active count changed shape.
+    """
+    k = max(stats.k, 1)
+    if over_active:
+        a = max(stats.max_active, 1)
+        shape = (*weight.shape[:-2], a, k)
+        if (donate and "out_index" in old_leaf
+                and old_leaf["values"].shape == shape
+                and old_leaf["values"].dtype == weight.dtype):
+            return _recondense_active_donated(
+                weight, mask, old_leaf["values"], old_leaf["indices"],
+                old_leaf["out_index"], k=k, a=a)
+        return condense_active_stack_leaf(weight, mask, stats)
+    shape = (*weight.shape[:-2], weight.shape[-1], k)
+    if (donate and "out_index" not in old_leaf
+            and old_leaf["values"].shape == shape
+            and old_leaf["values"].dtype == weight.dtype):
+        return _recondense_donated(weight, mask, old_leaf["values"],
+                                   old_leaf["indices"], k=k)
+    return condense_stack_leaf(weight, mask, stats)
+
+
+def _gather_at_indices(weight, mask, indices, out_index=None):
+    def fn(w, m, idx, oi=None):
+        wm_t = (w * m).T                                     # (d_out, d_in)
+        if oi is not None:  # select surviving columns (clip: padding dropped)
+            wm_t = jnp.take(wm_t, jnp.minimum(oi, wm_t.shape[0] - 1), axis=0)
+        return jnp.take_along_axis(wm_t, idx, axis=1)
+
+    n_lead = weight.ndim - 2
+    if out_index is None:
+        return _vmap_lead(fn, n_lead)(weight, mask, indices)
+    return _vmap_lead(fn, n_lead)(weight, mask, indices, out_index)
+
+
+@functools.partial(jax.jit, donate_argnums=(2,), keep_unused=True)
+def _revalue_donated(weight, mask, old_values, indices):
+    return _gather_at_indices(weight, mask, indices).astype(old_values.dtype)
+
+
+@functools.partial(jax.jit, donate_argnums=(2,), keep_unused=True)
+def _revalue_active_donated(weight, mask, old_values, indices, out_index):
+    return _gather_at_indices(weight, mask, indices,
+                              out_index).astype(old_values.dtype)
+
+
+def revalue_stack_leaf(weight, mask, leaf: dict, *, donate: bool = False) -> dict:
     """Values-only refresh of a condensed(-over-active) leaf under UNCHANGED
     topology: re-gather ``weight * mask`` at the stored indices, reusing the
     indices (and out_index) arrays verbatim.
@@ -129,26 +217,30 @@ def revalue_stack_leaf(weight, mask, leaf: dict) -> dict:
     ROWS may re-gather garbage from a clipped column but are dropped by the
     out-of-range out_index at scatter time. This skips the argsort and the
     stats host sync — the cheap path Plan.refresh uses for stacks whose mask
-    version did NOT move while the weights kept training.
+    version did NOT move while the weights kept training. No host transfer
+    of weight data happens either way: the regather is a device program.
+
+    ``donate=True`` runs it as one jitted program with the OLD values buffer
+    donated: the regathered values are written in place (the returned array
+    aliases ``leaf["values"]``'s storage, which is invalidated), so a live
+    serving job never holds two copies of a stack's values. The indices /
+    out_index objects are returned verbatim in both modes.
     """
     out_index = leaf.get("out_index")
-
-    def fn(w, m, idx, oi=None):
-        wm_t = (w * m).T                                     # (d_out, d_in)
-        if oi is not None:  # select surviving columns (clip: padding dropped)
-            wm_t = jnp.take(wm_t, jnp.minimum(oi, wm_t.shape[0] - 1), axis=0)
-        return jnp.take_along_axis(wm_t, idx, axis=1)
-
-    n_lead = weight.ndim - 2
-    for _ in range(n_lead):
-        fn = jax.vmap(fn)
+    if donate:
+        if out_index is None:
+            values = _revalue_donated(weight, mask, leaf["values"],
+                                      leaf["indices"])
+        else:
+            values = _revalue_active_donated(weight, mask, leaf["values"],
+                                             leaf["indices"], out_index)
+    else:
+        values = _gather_at_indices(weight, mask, leaf["indices"],
+                                    out_index).astype(leaf["values"].dtype)
     if out_index is None:
-        values = fn(weight, mask, leaf["indices"])
-        return {"values": values.astype(leaf["values"].dtype),
-                "indices": leaf["indices"]}
-    values = fn(weight, mask, leaf["indices"], out_index)
-    return {"values": values.astype(leaf["values"].dtype),
-            "indices": leaf["indices"], "out_index": out_index}
+        return {"values": values, "indices": leaf["indices"]}
+    return {"values": values, "indices": leaf["indices"],
+            "out_index": out_index}
 
 
 def export_condensed_over_active(cfg, registry, params: dict, masks: dict,

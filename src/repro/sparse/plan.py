@@ -41,6 +41,12 @@ PATHS = REPRESENTATIONS + ("auto",)
 _ABLATION_EPS = 1e-6
 
 
+def _max_active_fraction(stack, stats: "COND.ExportStats") -> float:
+    """Exported-row fraction pricing condensed_over_active: the leaf carries
+    max_active rows per replica (stack-wide max, padding included)."""
+    return max(stats.max_active, 1) / max(stack.d_out, 1)
+
+
 @dataclasses.dataclass(frozen=True)
 class HardwareProfile:
     """Throughput balance the cost model prices representations against.
@@ -48,13 +54,108 @@ class HardwareProfile:
     Defaults are TPU-v5e-like and deliberately coarse: the model only needs
     the RATIOS right (MXU ~50x the gather unit, arithmetic-intensity knee
     around B~100 for 10%-dense stacks) to reproduce the paper's batch-1 vs
-    batch-256 crossover. Real-hardware calibration is a follow-up (see
-    ROADMAP: TPU block-size validation).
+    batch-256 crossover. ``HardwareProfile.measure()`` replaces all three
+    constants with rates microbenchmarked on the live backend, so the auto
+    crossover batch is derived from THIS machine (serve.py --profile
+    measured; benchmarks/kernel_autotune.py validates predicted-vs-measured
+    crossover).
     """
     name: str = "tpu-v5e-like"
     hbm_bytes_per_s: float = 8.19e11     # ~819 GB/s HBM
     mxu_flops_per_s: float = 1.97e14     # dense MXU matmul throughput
     gather_flops_per_s: float = 3.9e12   # VPU gather-multiply-accumulate
+
+    @classmethod
+    def measure(cls, *, stream_mb: float = 96.0,
+                matmul_shape: tuple[int, int, int] = (128, 2048, 1024),
+                gather_shape: tuple[int, int, int, int] = (8, 2048, 1024, 205),
+                reps: int = 5, use_cache: bool = True,
+                save: bool = True) -> "HardwareProfile":
+        """Microbenchmark the three cost-model rates on the live backend.
+
+        * ``hbm_bytes_per_s``    — streaming ``x + 1`` over ``stream_mb`` of
+                                   f32 (reads + writes both counted; the
+                                   default comfortably exceeds CPU last-level
+                                   caches so the rate is main-memory, and the
+                                   MEDIAN rep is used — a buffer that half
+                                   fits LLC makes the fastest rep a cache
+                                   burst, not the steady-state rate a serving
+                                   step streams weights at);
+        * ``mxu_flops_per_s``    — f32 matmul at ``matmul_shape = (b, d_in,
+                                   d_out)``, a rectangular serving-batch
+                                   shape rather than a peak-friendly square;
+        * ``gather_flops_per_s`` — the condensed gather-MAC in its jnp
+                                   formulation (kernels.ref) at
+                                   ``gather_shape = (b, d_in, n_out, k)``.
+                                   The default sits at the top of the batch-8
+                                   bucket at ~10% density in the same size
+                                   class as the matmul shape: the regime
+                                   where the masked/condensed crossover is
+                                   decided (a single scalar rate cannot also
+                                   capture the cache cliff gathers hit at
+                                   much larger batches).
+
+        Each timing is the best of ``reps`` runs after a compile+warmup pass
+        (min is the noise-robust estimator on shared hosts — see
+        autotune._time_us). With ``use_cache`` the measured rates persist per
+        backend in the autotune cache file (see
+        repro.sparse.autotune.cache_path) and later calls return the stored
+        profile without re-measuring; ``measure(use_cache=False)`` forces a
+        fresh measurement, and ``save=False`` keeps it out of the cache.
+        """
+        import jax.random as jrandom
+
+        from repro.kernels import ref as REF
+        from repro.sparse import autotune as AT  # lazy: no module cycle
+
+        backend = jax.default_backend()
+        # the cache entry records its measurement settings: a profile
+        # calibrated with different shapes/reps (e.g. a quick low-fidelity
+        # test run) must not be silently substituted for this request
+        params = {"stream_mb": stream_mb, "matmul_shape": list(matmul_shape),
+                  "gather_shape": list(gather_shape), "reps": reps}
+        if use_cache:
+            cached = AT.cached_profile(backend)
+            if cached and cached.get("params") == params:
+                return cls(name=cached["name"],
+                           hbm_bytes_per_s=cached["hbm_bytes_per_s"],
+                           mxu_flops_per_s=cached["mxu_flops_per_s"],
+                           gather_flops_per_s=cached["gather_flops_per_s"])
+
+        import statistics
+
+        n = max(int(stream_mb * 2**20 / 4), 1024)
+        xs = jnp.full((n,), 1.5, jnp.float32)
+        t_stream = AT._time_us(jax.jit(lambda x: x + 1.0), xs, reps=reps,
+                               agg=statistics.median)
+        hbm = 8.0 * n / (t_stream * 1e-6)            # 4B read + 4B write
+
+        key = jrandom.PRNGKey(0)
+        mb, md_in, md_out = matmul_shape
+        a = jrandom.normal(key, (mb, md_in), jnp.float32)
+        b_ = jrandom.normal(jrandom.fold_in(key, 1), (md_in, md_out),
+                            jnp.float32)
+        t_mm = AT._time_us(jax.jit(jnp.matmul), a, b_, reps=reps)
+        mxu = 2.0 * mb * md_in * md_out / (t_mm * 1e-6)
+
+        gb, gd, gn, gk = gather_shape
+        x = jrandom.normal(jrandom.fold_in(key, 2), (gb, gd), jnp.float32)
+        vals = jrandom.normal(jrandom.fold_in(key, 3), (gn, gk), jnp.float32)
+        idx = jrandom.randint(jrandom.fold_in(key, 4), (gn, gk), 0, gd)
+        t_g = AT._time_us(jax.jit(REF.condensed_matmul_ref), x, vals, idx,
+                          reps=reps)
+        gather = 2.0 * gb * gn * gk / (t_g * 1e-6)
+
+        prof = cls(name=f"measured-{backend}", hbm_bytes_per_s=hbm,
+                   mxu_flops_per_s=mxu, gather_flops_per_s=gather)
+        if save:
+            AT.store_profile({"name": prof.name,
+                              "hbm_bytes_per_s": prof.hbm_bytes_per_s,
+                              "mxu_flops_per_s": prof.mxu_flops_per_s,
+                              "gather_flops_per_s": prof.gather_flops_per_s,
+                              "params": params},
+                             backend=backend)
+        return prof
 
 
 DEFAULT_PROFILE = HardwareProfile()
@@ -75,7 +176,8 @@ class StackDecision:
 
 def stack_costs(stack, *, batch_size: int, itemsize: int, k: int,
                 active_fraction: float,
-                profile: HardwareProfile = DEFAULT_PROFILE) -> dict[str, float]:
+                profile: HardwareProfile = DEFAULT_PROFILE,
+                max_active_fraction: float | None = None) -> dict[str, float]:
     """Estimated seconds per serving step for each representation.
 
     Each representation's time is the roofline max of its HBM-byte term and
@@ -91,16 +193,25 @@ def stack_costs(stack, *, batch_size: int, itemsize: int, k: int,
                    n_out bools). A true column-gathered kernel that delivers
                    the active-fraction saving is a ROADMAP follow-up — do
                    not price savings the code doesn't deliver.
-    * condensed_over_active — the condensed terms scaled by the active
-                   fraction (gather over surviving rows only; the kernel
-                   really does run over a <= n_out rows).
+    * condensed_over_active — the condensed terms scaled by the EXPORTED row
+                   fraction plus the 4-byte out_index per row. The exported
+                   leaf holds max_active rows per replica (stack-wide max,
+                   padding included) and the kernel runs over all of them,
+                   so the pricing fraction is ``max_active_fraction`` when
+                   the caller has realized stats (falling back to the mean
+                   ``active_fraction`` otherwise) — matching what
+                   Plan.weight_bytes reports; the mean would under-price the
+                   path under uneven ablation.
     """
     b = max(int(batch_size), 1)
     n = stack.n_replicas
     act = min(max(active_fraction, 0.0), 1.0)
+    row_frac = act if max_active_fraction is None else \
+        min(max(max_active_fraction, 0.0), 1.0)
     dense_bytes = n * stack.d_in * stack.d_out * itemsize
     mask_bytes = n * stack.d_in * stack.d_out          # bool mask, 1 byte
     cond_bytes = n * stack.d_out * k * (itemsize + 4)  # values + int32 idx
+    oi_bytes = n * stack.d_out * 4                     # int32 out_index/row
     dense_flops = 2.0 * b * n * stack.d_in * stack.d_out
     gather_flops = 2.0 * b * n * stack.d_out * k
     return {
@@ -111,8 +222,8 @@ def stack_costs(stack, *, batch_size: int, itemsize: int, k: int,
         "structured": max((dense_bytes + n * stack.d_out) / profile.hbm_bytes_per_s,
                           dense_flops / profile.mxu_flops_per_s),
         "condensed_over_active": max(
-            act * cond_bytes / profile.hbm_bytes_per_s,
-            act * gather_flops / profile.gather_flops_per_s),
+            row_frac * (cond_bytes + oi_bytes) / profile.hbm_bytes_per_s,
+            row_frac * gather_flops / profile.gather_flops_per_s),
     }
 
 
@@ -123,16 +234,21 @@ def select_representation(stack, *, batch_size: int, itemsize: int,
 
     ``structured`` is never auto-selected: it keeps active columns dense, so
     it is only output-equivalent for ablation-only masks (Fig. 4 ablation, on
-    request via a fixed path). The exact candidates are masked, and the
-    gather family — plain condensed when every neuron is active, condensed-
-    over-active once ablation has created dead rows to drop.
+    request via a fixed path). The exact candidates are masked, plain
+    condensed, and — once ablation has created dead rows to drop —
+    condensed-over-active. Plain condensed stays a candidate even with
+    ablation: under UNEVEN ablation the exported condensed-over-active leaf
+    still carries max_active rows (plus out_index bytes) and can price
+    ABOVE plain condensed, which is exact for any mask.
     """
     costs = stack_costs(stack, batch_size=batch_size, itemsize=itemsize,
                         k=max(stats.k, 1),
-                        active_fraction=stats.active_fraction, profile=profile)
+                        active_fraction=stats.active_fraction, profile=profile,
+                        max_active_fraction=_max_active_fraction(stack, stats))
     has_ablation = stats.active_fraction < 1.0 - _ABLATION_EPS
-    gather_rep = "condensed_over_active" if has_ablation else "condensed"
-    rep = min(("masked", gather_rep), key=lambda r: costs[r])
+    cands = ("masked", "condensed", "condensed_over_active") if has_ablation \
+        else ("masked", "condensed")
+    rep = min(cands, key=lambda r: costs[r])
     return StackDecision(name=stack.name, representation=rep, est_s=costs,
                          stats=stats)
 
@@ -159,7 +275,8 @@ def _decide(stack, path: str, *, batch_size: int, itemsize: int,
                                      profile=profile)
     costs = stack_costs(stack, batch_size=batch_size, itemsize=itemsize,
                         k=max(stats.k, 1),
-                        active_fraction=stats.active_fraction, profile=profile)
+                        active_fraction=stats.active_fraction, profile=profile,
+                        max_active_fraction=_max_active_fraction(stack, stats))
     return StackDecision(name=stack.name, representation=path, est_s=costs,
                          stats=stats)
 
@@ -194,7 +311,7 @@ class Plan:
         return self.decisions[name].representation
 
     def refresh(self, params: dict, masks: dict, mask_versions: dict, *,
-                refresh_values: bool = True) -> list[str]:
+                refresh_values: bool = True, donate: bool = True) -> list[str]:
         """Incremental re-export: re-condense ONLY stacks whose version moved.
 
         ``mask_versions`` is the trainer's per-stack counter pytree (host ints
@@ -213,6 +330,17 @@ class Plan:
         read the live weights from ``params`` at execution time. Pass
         ``refresh_values=False`` only when params are frozen (serving a fixed
         checkpoint).
+
+        Memory/host-transfer contract (a live serving job refreshes in
+        place): the re-condense and the regather run as jitted device
+        programs with the plan's OLD {values, indices} buffers DONATED —
+        whenever the new leaf's shapes match (topology rewired at unchanged
+        fan-in, or values-only), the new arrays are written into the old
+        buffers, so the refresh never doubles the plan's weight footprint.
+        No weight data is fetched to the host: the only device_get traffic
+        is the version counters and (for changed stacks) the per-stack
+        scalar stats. ``donate=False`` preserves the old leaf arrays for
+        callers that still hold references to them.
         """
         versions = _host_versions(mask_versions)
         by_name = {s.name: s for s in self.registry}
@@ -226,12 +354,21 @@ class Plan:
                 dec = _decide(s, self.path, batch_size=self.batch_size,
                               itemsize=itemsize, stats=stats[s.name],
                               profile=self.profile)
+                old_rep = self.decisions[s.name].representation
+                old_leaf = REG.get_path(self.serving_tree, s.path)
+                weight = REG.get_path(params, s.path)
+                mask = REG.get_path(masks, s.path)
+                rep = dec.representation
+                if (rep in ("condensed", "condensed_over_active")
+                        and rep == old_rep):
+                    leaf = COND.recondense_stack_leaf(
+                        weight, mask, stats[s.name], old_leaf,
+                        over_active=(rep == "condensed_over_active"),
+                        donate=donate)
+                else:
+                    leaf = _build_leaf(rep, weight, mask, stats[s.name])
                 self.decisions[s.name] = dec
-                REG._set_path(self.serving_tree, s.path,
-                              _build_leaf(dec.representation,
-                                          REG.get_path(params, s.path),
-                                          REG.get_path(masks, s.path),
-                                          stats[s.name]))
+                REG._set_path(self.serving_tree, s.path, leaf)
                 self.mask_versions[s.name] = versions[s.name]
                 self.export_calls += 1
         if refresh_values:
@@ -245,7 +382,8 @@ class Plan:
                 REG._set_path(self.serving_tree, s.path,
                               COND.revalue_stack_leaf(
                                   REG.get_path(params, s.path),
-                                  REG.get_path(masks, s.path), leaf))
+                                  REG.get_path(masks, s.path), leaf,
+                                  donate=donate))
                 self.value_refreshes += 1
         return [s.name for s in changed]
 

@@ -1,9 +1,18 @@
 import os
 import sys
+import tempfile
 
 # Tests run on the single host CPU device (the 512-device forcing is ONLY in
 # repro.launch.dryrun, which must never be imported here).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Hermetic autotune cache: the kernel-block/profile cache is PERSISTENT by
+# design (~/.cache/repro/autotune.json), but tests must neither read a
+# developer's tuned entries (block-shape resolution would differ from a clean
+# checkout) nor pollute them. Tests that exercise the cache itself repoint
+# this again via monkeypatch + autotune.reset_cache_state().
+os.environ["REPRO_AUTOTUNE_CACHE"] = os.path.join(
+    tempfile.mkdtemp(prefix="repro-autotune-test-"), "autotune.json")
 
 import jax
 

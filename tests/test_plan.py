@@ -305,12 +305,17 @@ def test_refresh_recondenses_only_changed_stacks(smoke_setup):
 def test_refresh_values_regathers_unchanged_stacks_without_resort(smoke_setup):
     """Default refresh: unchanged-topology stacks get a values-only regather
     (indices reused verbatim, NOT counted as a re-condense) so the serving
-    snapshot stays coherent with weights that kept training."""
+    snapshot stays coherent with weights that kept training. The old values
+    buffers are DONATED (refresh runs against a live serving job), so values
+    are snapshotted to host numpy before refreshing."""
     cfg, reg, params, masks, _ = smoke_setup
     versions = {s.name: 0 for s in reg}
     plan = PLAN.build_plan(cfg, reg, params, masks, batch_size=1, path="auto",
                            mask_versions=versions)
-    before = {s.name: REG.get_path(plan.serving_tree, s.path) for s in reg}
+    before_idx = {s.name: REG.get_path(plan.serving_tree, s.path)["indices"]
+                  for s in reg}
+    before_vals = {s.name: np.array(
+        REG.get_path(plan.serving_tree, s.path)["values"]) for s in reg}
     target = reg[1]
     new_versions = dict(versions)
     new_versions[target.name] = 1
@@ -326,9 +331,9 @@ def test_refresh_values_regathers_unchanged_stacks_without_resort(smoke_setup):
         leaf = REG.get_path(plan.serving_tree, s.path)
         if s.name != target.name:
             # indices reused verbatim; same params -> identical values
-            assert leaf["indices"] is before[s.name]["indices"]
+            assert leaf["indices"] is before_idx[s.name]
             np.testing.assert_array_equal(np.array(leaf["values"]),
-                                          np.array(before[s.name]["values"]))
+                                          before_vals[s.name])
 
 
 def test_refresh_keeps_snapshot_coherent_when_params_train_on(smoke_setup):
@@ -405,3 +410,216 @@ def test_plan_weight_bytes_orders_representations(smoke_setup):
     for s in reg:
         dec = coa.decisions[s.name]
         assert dec.stats.max_active < s.d_out
+
+
+# ---------------------------------------------------------------------------
+# jitted donated refresh: no 2x weight footprint, no host weight traffic
+# ---------------------------------------------------------------------------
+
+def _fresh_constant_fan_in_masks(reg, masks, seed=99):
+    """New random topology at the SAME realized fan-in k per stack (a DST
+    rewire step: indices move, shapes don't)."""
+    from repro.core import topology
+    out = {}
+    for s in reg:
+        m = REG.get_path(masks, s.path)
+        k = int(np.array(m).sum(axis=-2).max())
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), hash(s.name) % 2**31)
+        fn = lambda kk: topology.random_constant_fan_in_mask(kk, s.d_in,
+                                                             s.d_out, k)
+        for _ in range(len(s.lead)):
+            fn = jax.vmap(fn)
+        keys = jax.random.split(key, max(s.n_replicas, 1)).reshape(
+            *(s.lead or (1,)), 2)
+        if not s.lead:
+            keys = keys[0]
+        REG._set_path(out, s.path, fn(keys).reshape(*s.lead, s.d_in, s.d_out))
+    return out
+
+
+def test_refresh_values_donates_old_buffers(smoke_setup):
+    """Values-only regather writes INTO the old values buffer (donation):
+    the new array reuses the old storage and the old jax.Array is deleted —
+    a live refresh never holds two copies of a stack's values."""
+    cfg, reg, params, masks, prompts = smoke_setup
+    plan = PLAN.build_plan(cfg, reg, params, masks, batch_size=1, path="auto",
+                           mask_versions={s.name: 0 for s in reg})
+    old = {s.name: REG.get_path(plan.serving_tree, s.path)["values"]
+           for s in reg}
+    old_ptrs = {n: v.unsafe_buffer_pointer() for n, v in old.items()}
+
+    new_params = jax.tree.map(lambda x: x, params)
+    for s in reg:
+        w = REG.get_path(new_params, s.path)
+        REG._set_path(new_params, s.path, w * 1.5)
+    assert plan.refresh(new_params, masks, {s.name: 0 for s in reg}) == []
+
+    for s in reg:
+        leaf = REG.get_path(plan.serving_tree, s.path)
+        assert old[s.name].is_deleted()
+        assert leaf["values"].unsafe_buffer_pointer() == old_ptrs[s.name]
+    # and the donated-regather snapshot still serves the new weights exactly
+    out_masked = serve.generate(cfg, new_params, masks, prompts, gen_len=4)
+    out_plan = serve.generate(cfg, new_params, plan.serving_tree, prompts,
+                              gen_len=4)
+    np.testing.assert_array_equal(np.array(out_masked), np.array(out_plan))
+
+
+def test_refresh_recondense_donates_on_same_shape_topology_change(smoke_setup):
+    """A DST rewire (new indices, same fan-in k, no ablation) re-condenses
+    under jit with BOTH old {values, indices} buffers donated: new leaf
+    arrays alias the old storage."""
+    cfg, reg, params, masks, prompts = smoke_setup
+    plan = PLAN.build_plan(cfg, reg, params, masks, batch_size=1, path="auto",
+                           mask_versions={s.name: 0 for s in reg})
+    old = {s.name: REG.get_path(plan.serving_tree, s.path) for s in reg}
+    old_ptrs = {n: {kk: l[kk].unsafe_buffer_pointer()
+                    for kk in ("values", "indices")} for n, l in old.items()}
+
+    new_masks = _fresh_constant_fan_in_masks(reg, masks)
+    changed = plan.refresh(params, new_masks, {s.name: 1 for s in reg})
+    assert sorted(changed) == sorted(s.name for s in reg)
+    assert plan.export_calls == 2 * len(reg)
+
+    for s in reg:
+        leaf = REG.get_path(plan.serving_tree, s.path)
+        assert plan.representation_of(s.name) == "condensed"
+        for kk in ("values", "indices"):
+            assert old[s.name][kk].is_deleted()
+            assert leaf[kk].unsafe_buffer_pointer() == old_ptrs[s.name][kk]
+    # token-identical to a fresh export of the new masks
+    out_masked = serve.generate(cfg, params, new_masks, prompts, gen_len=4)
+    out_plan = serve.generate(cfg, params, plan.serving_tree, prompts,
+                              gen_len=4)
+    np.testing.assert_array_equal(np.array(out_masked), np.array(out_plan))
+
+
+def test_refresh_donate_false_preserves_old_leaves(smoke_setup):
+    cfg, reg, params, masks, _ = smoke_setup
+    plan = PLAN.build_plan(cfg, reg, params, masks, batch_size=1, path="auto",
+                           mask_versions={s.name: 0 for s in reg})
+    old = {s.name: REG.get_path(plan.serving_tree, s.path)["values"]
+           for s in reg}
+    plan.refresh(params, masks, {s.name: 0 for s in reg}, donate=False)
+    for s in reg:
+        assert not old[s.name].is_deleted()
+        np.testing.assert_array_equal(
+            np.array(old[s.name]),
+            np.array(REG.get_path(plan.serving_tree, s.path)["values"]))
+
+
+def test_refresh_no_host_device_get_for_weight_data(smoke_setup, monkeypatch):
+    """The refresh host-transfer contract: values-only regather fetches ONE
+    payload (the version counters — no weight data, no stats); a changed-
+    stack refresh adds exactly one more (the fused per-stack scalar stats).
+    Nothing weight-sized ever crosses to the host."""
+    cfg, reg, params, masks, _ = smoke_setup
+    plan = PLAN.build_plan(cfg, reg, params, masks, batch_size=1, path="auto",
+                           mask_versions={s.name: 0 for s in reg})
+
+    fetched = []
+    orig = jax.device_get
+
+    def counting_device_get(tree):
+        fetched.append(sum(getattr(l, "nbytes", 8)
+                           for l in jax.tree_util.tree_leaves(tree)))
+        return orig(tree)
+
+    monkeypatch.setattr(jax, "device_get", counting_device_get)
+
+    # values-only regather: one device_get (versions), a few bytes
+    plan.refresh(params, masks, {s.name: 0 for s in reg})
+    assert len(fetched) == 1
+    assert fetched[0] < 1024
+
+    # changed-stack re-condense: versions + fused stats, still no weights
+    fetched.clear()
+    new_masks = _fresh_constant_fan_in_masks(reg, masks, seed=7)
+    plan.refresh(params, new_masks, {s.name: 1 for s in reg})
+    assert len(fetched) == 2
+    assert all(n < 1024 for n in fetched)
+
+
+# ---------------------------------------------------------------------------
+# measured hardware profile
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def tmp_autotune_cache(tmp_path, monkeypatch):
+    from repro.sparse import autotune as AT
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "autotune.json"))
+    AT.reset_cache_state()
+    yield AT
+    AT.reset_cache_state()
+
+
+_QUICK_MEASURE = dict(stream_mb=2.0, matmul_shape=(16, 128, 128),
+                      gather_shape=(8, 256, 256, 16), reps=2)
+
+
+def test_hardware_profile_measure_rates_sane(tmp_autotune_cache):
+    prof = PLAN.HardwareProfile.measure(use_cache=False, save=False,
+                                        **_QUICK_MEASURE)
+    assert prof.name == f"measured-{jax.default_backend()}"
+    for rate in (prof.hbm_bytes_per_s, prof.mxu_flops_per_s,
+                 prof.gather_flops_per_s):
+        assert np.isfinite(rate) and rate > 0
+    # a dense matmul unit beats the gather formulation per FLOP everywhere
+    assert prof.mxu_flops_per_s > prof.gather_flops_per_s
+
+
+def test_measured_profile_drives_plan_and_stays_exact(smoke_setup,
+                                                      tmp_autotune_cache):
+    cfg, reg, params, masks, _ = smoke_setup
+    prof = PLAN.HardwareProfile.measure(use_cache=False, save=False,
+                                        **_QUICK_MEASURE)
+    for batch in (1, 256):
+        plan = PLAN.build_plan(cfg, reg, params, masks, batch_size=batch,
+                               path="auto", profile=prof)
+        for dec in plan.decisions.values():
+            assert dec.representation in ("masked", "condensed",
+                                          "condensed_over_active")
+        static = PLAN.plan_for_shape(cfg, reg, batch_size=batch, profile=prof)
+        assert set(static) == {s.name for s in reg}
+
+
+def test_hardware_profile_measure_persists_and_caches(tmp_autotune_cache,
+                                                      monkeypatch):
+    AT = tmp_autotune_cache
+    prof = PLAN.HardwareProfile.measure(use_cache=True, **_QUICK_MEASURE)
+    stored = AT.cached_profile()
+    assert stored is not None
+    assert stored["hbm_bytes_per_s"] == prof.hbm_bytes_per_s
+    # second call must come from the cache: timing is forbidden
+    def _no_timing(*a, **kw):
+        raise AssertionError("measure() re-timed despite a cached profile")
+    monkeypatch.setattr(AT, "_time_us", _no_timing)
+    prof2 = PLAN.HardwareProfile.measure(use_cache=True, **_QUICK_MEASURE)
+    assert prof2 == prof
+
+
+def test_coa_priced_at_exported_rows_not_mean_activity(smoke_setup):
+    """Uneven ablation (mean activity low but max_active == d_out): the
+    exported leaf still carries d_out rows per replica, so the cost model
+    must not price condensed_over_active below plain condensed."""
+    cfg, reg, params, masks, _ = smoke_setup
+    s = reg[0]
+    costs = PLAN.stack_costs(s, batch_size=4, itemsize=4, k=8,
+                             active_fraction=0.5, max_active_fraction=1.0)
+    assert costs["condensed_over_active"] >= costs["condensed"]
+    # and with genuinely shrunk rows the discount tracks the ROW fraction
+    half = PLAN.stack_costs(s, batch_size=4, itemsize=4, k=8,
+                            active_fraction=0.5, max_active_fraction=0.5)
+    assert half["condensed_over_active"] < costs["condensed_over_active"]
+
+
+def test_auto_prefers_plain_condensed_under_uneven_ablation(smoke_setup):
+    """Uneven ablation where one replica stays fully active: the exported
+    condensed-over-active leaf is the full d_out rows PLUS out_index bytes,
+    so plain condensed (exact for any mask) must win the auto choice."""
+    cfg, reg, params, masks, _ = smoke_setup
+    s = reg[0]
+    stats = COND.ExportStats(k=8, max_active=s.d_out, active_fraction=0.5)
+    dec = PLAN.select_representation(s, batch_size=1, itemsize=4, stats=stats)
+    assert dec.representation == "condensed"
+    assert dec.est_s["condensed"] <= dec.est_s["condensed_over_active"]
