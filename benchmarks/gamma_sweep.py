@@ -1,7 +1,6 @@
 """Paper Fig. 8 / App. E: sensitivity of SRigL to the gamma_sal threshold."""
 import time
 
-from benchmarks.accuracy import train_one
 
 
 def run(steps: int = 60):

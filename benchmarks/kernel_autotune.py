@@ -210,6 +210,7 @@ def crossover_rows(shapes, reps: int, retries: int = 2) -> list[dict]:
                     "hbm_bytes_per_s": prof.hbm_bytes_per_s,
                     "mxu_flops_per_s": prof.mxu_flops_per_s,
                     "gather_flops_per_s": prof.gather_flops_per_s,
+                    "gather_flops_per_s_large": prof.gather_flops_per_s_large,
                 },
                 "sweep_us": table,
             }
@@ -269,7 +270,9 @@ def main(argv=None):
     print(f"[kernel_autotune] measured profile: "
           f"hbm {measured.hbm_bytes_per_s / 1e9:.2f} GB/s, "
           f"matmul {measured.mxu_flops_per_s / 1e9:.2f} GFLOP/s, "
-          f"gather {measured.gather_flops_per_s / 1e9:.2f} GFLOP/s")
+          f"gather {measured.gather_flops_per_s / 1e9:.2f}->"
+          f"{(measured.gather_flops_per_s_large or 0) / 1e9:.2f} GFLOP/s "
+          f"(b={measured.gather_small_batch}->{measured.gather_large_batch})")
 
     crossings = crossover_rows(xshapes, reps)
     for r in crossings:
@@ -301,6 +304,9 @@ def main(argv=None):
                 "hbm_bytes_per_s": measured.hbm_bytes_per_s,
                 "mxu_flops_per_s": measured.mxu_flops_per_s,
                 "gather_flops_per_s": measured.gather_flops_per_s,
+                "gather_flops_per_s_large": measured.gather_flops_per_s_large,
+                "gather_batch_points": [measured.gather_small_batch,
+                                        measured.gather_large_batch],
             },
         },
         "tuned_blocks": tuned,

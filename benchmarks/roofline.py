@@ -13,8 +13,6 @@ import json
 import os
 
 from repro import configs
-from repro.launch import hlo_analysis as H
-from repro.sparse import registry as REG
 
 
 def param_counts(cfg):

@@ -15,6 +15,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
 Use --quick to cut the training-based benchmarks' budgets; --only <name>.
 """
 import argparse
+import importlib
 import sys
 import traceback
 
@@ -25,37 +26,50 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args(argv)
 
-    from benchmarks import (accuracy, ablation_bench, condensed_bench,
-                            flops_table, gamma_sweep, kernel_autotune,
-                            roofline, serve_paths, variance)
-
     steps = 30 if args.quick else 80
+    # (suite name, entry module, runner taking the imported module) — modules
+    # import lazily per suite so one broken import SKIPS that suite (with a
+    # note) instead of aborting the whole run
     suites = [
-        ("variance", lambda: variance.run(n_samples=500 if args.quick else 2000)),
-        ("flops_table", flops_table.run),
-        ("condensed_bench", lambda: condensed_bench.run(batch=1)
-                                    + condensed_bench.run(batch=256)),
-        ("serve_paths", lambda: serve_paths.run(
-            batches=(1, 32) if args.quick else (1, 32, 256))),
-        ("kernel_autotune", lambda: kernel_autotune.run(smoke=True)),
-        ("ablation_bench", lambda: ablation_bench.run(steps=min(steps, 40))),
-        ("accuracy", lambda: accuracy.run(steps=steps)),
-        ("gamma_sweep", lambda: gamma_sweep.run(steps=min(steps, 60))),
-        ("roofline", roofline.run),
+        ("variance", "variance",
+         lambda m: m.run(n_samples=500 if args.quick else 2000)),
+        ("flops_table", "flops_table", lambda m: m.run()),
+        ("condensed_bench", "condensed_bench",
+         lambda m: m.run(batch=1) + m.run(batch=256)),
+        ("serve_paths", "serve_paths",
+         lambda m: m.run(batches=(1, 32) if args.quick else (1, 32, 256))),
+        ("kernel_autotune", "kernel_autotune", lambda m: m.run(smoke=True)),
+        ("ablation_bench", "ablation_bench",
+         lambda m: m.run(steps=min(steps, 40))),
+        ("accuracy", "accuracy", lambda m: m.run(steps=steps)),
+        ("gamma_sweep", "gamma_sweep",
+         lambda m: m.run(steps=min(steps, 60))),
+        ("roofline", "roofline", lambda m: m.run()),
     ]
 
     print("name,us_per_call,derived")
     failures = 0
-    for name, fn in suites:
+    skipped = []
+    for name, module, fn in suites:
         if args.only and args.only != name:
             continue
         try:
-            for row_name, us, derived in fn():
+            mod = importlib.import_module(f"benchmarks.{module}")
+        except Exception as e:  # noqa: BLE001 — skip the suite, keep the run
+            skipped.append(name)
+            print(f"{name},0.0,SKIPPED(import failed: "
+                  f"{type(e).__name__}: {str(e)[:120]})")
+            continue
+        try:
+            for row_name, us, derived in fn(mod):
                 print(f"{row_name},{us:.1f},{derived}")
         except Exception:  # noqa: BLE001
             failures += 1
             traceback.print_exc()
             print(f"{name},0.0,FAILED")
+    if skipped:
+        print(f"# skipped (import failures, not counted as suite failures): "
+              f"{', '.join(skipped)}")
     return 1 if failures else 0
 
 

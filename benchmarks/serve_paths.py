@@ -1,15 +1,17 @@
-"""Serving-path decode throughput: all four representations + the auto plan.
+"""Serving-path decode throughput: all four formats + the auto plan, driven
+through the programmatic ``ServingEngine`` API.
 
 Reproduces the *shape* of the paper's Fig. 6/7 claim (real-world inference
 acceleration from constant fan-in sparsity) on the smoke LM: for each batch
-size in {1, 32, 256}, run the jitted lax.scan greedy-decode loop through each
-serving representation (masked / condensed / structured /
-condensed_over_active) plus the cost-model ``auto`` plan, and report
-tokens/second. The auto rows also record which representation the plan chose
-per stack — the expected trajectory is condensed at B=1 flipping to masked by
-B=256 (paper Sec. 4.4 crossover) — and which hardware profile priced the
-decision (``--profile measured`` calibrates the cost model on this machine
-via ``plan.HardwareProfile.measure()`` instead of the v5e-like defaults).
+size in {1, 32, 256}, submit one request per serving path (masked /
+condensed / structured / condensed_over_active / auto) to a
+``repro.launch.engine.ServingEngine`` and report decode tokens/second from
+the engine's own timings. The auto rows also record which FORMAT the plan
+chose per stack — the expected trajectory is condensed at B=1 flipping to
+masked by B=256 (paper Sec. 4.4 crossover) — and which hardware profile
+priced the decision (``--profile measured`` calibrates the cost model on
+this machine via ``plan.HardwareProfile.measure()``, including the
+two-point gather calibration, instead of the v5e-like defaults).
 
 Timing discipline: ``--warmup`` un-timed passes absorb jit compilation and
 dispatch-cache warming, then ``us_per_tok`` / ``tok_s`` are the MEDIAN of
@@ -17,7 +19,9 @@ dispatch-cache warming, then ``us_per_tok`` / ``tok_s`` are the MEDIAN of
 jitter into the trajectory JSON).
 
 Besides the CSV rows, ``main`` emits machine-readable
-``BENCH_serve_paths.json`` so the perf trajectory is tracked across PRs.
+``BENCH_serve_paths.json`` (``schema_version`` stamped — v2 renamed the
+per-row representation record to ``formats``) so the perf trajectory is
+tracked across PRs.
 
 CPU caveat (same as condensed_bench): the Pallas kernel runs in interpret
 mode here, so absolute condensed timings do not transfer to the TPU/GPU
@@ -34,10 +38,14 @@ import statistics
 import jax
 
 from repro import configs
-from repro.launch import serve
+from repro.launch.engine import ServingEngine
 from repro.models import model as M
 from repro.sparse import plan as PLAN
 from repro.sparse import registry as REG
+
+# v2: rows record per-stack "formats" (typed representation names) instead
+# of a bare path string; engine plan-key metadata (batch bucket) added
+SCHEMA_VERSION = 2
 
 BATCHES = (1, 32, 256)
 PROMPT_LEN = 8
@@ -59,23 +67,30 @@ def run(batches=BATCHES, arch: str = "qwen3-1.7b", results: list | None = None,
     for batch in batches:
         prompts = jax.random.randint(key, (batch, PROMPT_LEN), 0, cfg.vocab_size)
         for path in PLAN.PATHS:
+            engine = ServingEngine(cfg, params, masks, reg, path=path,
+                                   profile=profile)
+            pkey = engine.plan_key(batch)
             if path == "masked":
-                sm, reps_chosen, ratio = masks, {s.name: "masked" for s in reg}, 1.0
+                formats_chosen = {s.name: "masked" for s in reg}
+                ratio = 1.0
             else:
-                plan = serve.build_plan(cfg, reg, params, masks, path,
-                                        batch_size=batch, profile=profile)
-                sm = plan.serving_tree
-                reps_chosen = {n: d.representation
-                               for n, d in plan.decisions.items()}
+                plan = engine.plan_for(pkey)
+                formats_chosen = {n: d.representation
+                                  for n, d in plan.decisions.items()}
                 sb, db = plan.weight_bytes()
                 ratio = sb / db
+
+            def timed_pass():
+                rid = engine.submit(prompts, GEN_LEN)
+                engine.step()
+                [res] = engine.retire(rid)
+                return res.tok_s
+
             # warmup passes absorb jit compile + dispatch-cache effects...
             for _ in range(max(warmup, 1)):
-                serve.serve_once(cfg, params, sm, prompts, GEN_LEN, path,
-                                 quiet=True)
+                timed_pass()
             # ...then report the median of the timed passes
-            toks = [serve.serve_once(cfg, params, sm, prompts, GEN_LEN, path,
-                                     quiet=True)[1] for _ in range(max(reps, 1))]
+            toks = [timed_pass() for _ in range(max(reps, 1))]
             tok_s = statistics.median(toks)
             # decode-only per-token cost (prefill excluded — the claim under
             # benchmark is decode throughput, and interpret-mode prefill would
@@ -86,11 +101,12 @@ def run(batches=BATCHES, arch: str = "qwen3-1.7b", results: list | None = None,
             if results is not None:
                 results.append({
                     "arch": arch, "batch": batch, "path": path,
+                    "plan_key_bucket": pkey.batch_bucket,
                     "tok_s": round(tok_s, 2),
                     "us_per_tok": round(1e6 / tok_s, 2),
                     "tok_s_spread": [round(t, 2) for t in sorted(toks)],
                     "weight_bytes_ratio": round(ratio, 4),
-                    "representations": reps_chosen,
+                    "formats": formats_chosen,
                     # the profile only prices the auto rows' decisions, but is
                     # recorded on every row for a self-describing artifact
                     "profile": profile.name,
@@ -125,6 +141,7 @@ def main(argv=None):
     if args.out:
         payload = {
             "benchmark": "serve_paths",
+            "schema_version": SCHEMA_VERSION,
             "arch": args.arch,
             "prompt_len": PROMPT_LEN,
             "gen_len": GEN_LEN,

@@ -60,66 +60,89 @@ def main():
     print(f"condensed-vs-masked max err: {err:.2e}  (fan-in k={k}, "
           f"{vals.size}/{w.size} weights stored = {vals.size/w.size:.1%})")
 
-    # 5. serve the trained model through an execution PLAN (paper Sec. 4.4):
-    #    repro.sparse.plan picks a representation PER STACK from a bytes/FLOPs
-    #    cost model over the request batch — condensed gather at decode (B=1),
-    #    masked-dense MXU at large batch, and the composed condensed-over-
-    #    active once training has ablated neurons (the combined Fig. 4 point).
+    # 5. serve the trained model through the programmatic ENGINE (paper
+    #    Sec. 4.4): ServingEngine.submit/step/retire admits requests, groups
+    #    them by PLAN KEY — the request's batch bucket (shared with the
+    #    kernel-autotune cache keys) crossed with the per-stack FORMAT the
+    #    cost model picks at that bucket (repro.sparse.formats: MaskedDense /
+    #    Condensed / StructuredFanIn / CondensedOverActive, the four Fig. 4
+    #    points) — and decodes each group with one jitted scan program.
     #    Greedy decode is token-identical to masked-dense for every exact
-    #    representation the plan can choose.
+    #    format the plan can choose, and fusing requests into a group slab
+    #    never changes a stream's tokens (greedy argmax is batch-independent).
     #    (CLI equivalent:
     #       PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
     #           --smoke --path auto)
     from repro.launch import serve
+    from repro.launch.engine import ServingEngine
+    engine = ServingEngine(cfg, state.params, state.masks, registry,
+                           path="auto", mask_versions=state.mask_versions)
     prompts = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
                                  cfg.vocab_size)
-    plan = serve.build_plan(cfg, registry, state.params, state.masks, "auto",
-                            batch_size=2, mask_versions=state.mask_versions)
-    print(plan.describe())
+    rid_a = engine.submit(prompts, gen_len=8)            # batch-2 request
+    rid_b = engine.submit(prompts[:1], gen_len=8)        # batch-1 request
+    groups = engine.pending_groups()
+    print(f"serve: {len(groups)} plan-key group(s): "
+          f"{[k.describe() for k in groups]}")
+    print(engine.plan_for(engine.plan_key(2)).describe())
+    engine.step()
+    [res_a] = engine.retire(rid_a)
+    [res_b] = engine.retire(rid_b)
     out_masked = serve.generate(cfg, state.params, state.masks, prompts, 8)
-    out_plan = serve.generate(cfg, state.params, plan.serving_tree, prompts, 8)
-    same = bool(jnp.all(out_masked == out_plan))
-    print(f"serve: planned decode tokens == masked decode tokens: {same}")
-    print(f"serve: first stream: {out_plan[0, 8:].tolist()}")
+    same = bool(jnp.all(out_masked == res_a.tokens))
+    print(f"serve: engine decode tokens == masked decode tokens: {same} "
+          f"(batch-1 group: {res_b.tok_s:.1f} tok/s)")
+    print(f"serve: first stream: {res_a.tokens[0, 8:].tolist()}")
 
-    # 6. incremental export: keep training, then refresh the plan — only
-    #    stacks whose mask-version counter moved are re-condensed, so a live
-    #    training job can serve without a full re-export every delta_t steps.
-    #    The refresh runs as jitted device programs with the plan's OLD
-    #    {values, indices} buffers donated: new arrays are written into the
-    #    old storage whenever shapes match, so serving weight memory never
-    #    doubles during a refresh (and no weight data touches the host).
+    # 6. incremental export: keep training, then refresh the engine — only
+    #    stacks whose mask-version counter moved are re-condensed (per cached
+    #    plan), so a live training job can serve without a full re-export
+    #    every delta_t steps. The refresh runs as jitted device programs with
+    #    the old format buffers DONATED (formats.Condensed.donate_refresh):
+    #    new arrays are written into the old storage whenever shapes match,
+    #    so serving weight memory never doubles during a refresh (and no
+    #    weight data touches the host).
     for i in range(60, 70):
         batch = jax.tree.map(jnp.asarray, data.batch(i))
         state, _ = step(state, batch)
         if bool(sched.is_update_step(i + 1)):
             state = dst(state, batch)
-    changed = plan.refresh(state.params, state.masks, state.mask_versions)
-    print(f"serve: plan.refresh re-condensed {len(changed)}/{len(registry)} "
-          f"stacks: {changed}; values-only regathers (topology unchanged, "
-          f"weights trained on): {plan.value_refreshes}")
+    changed = engine.refresh(state.params, state.masks, state.mask_versions)
+    for key, names in changed.items():
+        plan = engine.plan_for(key)
+        print(f"serve: refresh[{key.describe()}] re-condensed "
+              f"{len(names)}/{len(registry)} stacks: {names}; values-only "
+              f"regathers (topology unchanged, weights trained on): "
+              f"{plan.value_refreshes}")
 
     # 7. calibration: replace the cost model's built-in v5e-like constants
-    #    with rates measured on THIS machine (HBM stream, matmul, gather —
+    #    with rates measured on THIS machine (HBM stream, matmul, and the
+    #    gather at TWO batch points — the activation-traffic cache cliff
+    #    makes one scalar gather rate mispredict large-batch crossovers;
     #    cached per backend in the autotune cache file), and let the timed
-    #    block-shape search pick the Pallas kernel tiles for the decode
-    #    shape. `--path auto --profile measured` / `--autotune` on the serve
-    #    CLI do the same; benchmarks/kernel_autotune.py validates that the
+    #    block-shape search pick the Pallas kernel tiles for every condensed
+    #    dispatch shape (engine.autotune derives the cache keys from the
+    #    formats' tuning_key — exactly what the kernel wrappers look up).
+    #    `--path auto --profile measured` / `--autotune` on the serve CLI do
+    #    the same; benchmarks/kernel_autotune.py validates that the
     #    calibrated model's predicted masked/condensed crossover batch lands
     #    in the measured bucket.
     from repro.sparse import autotune, plan as PLAN
     prof = PLAN.HardwareProfile.measure()
     print(f"calibrated {prof.name}: hbm {prof.hbm_bytes_per_s / 1e9:.1f} GB/s "
           f"matmul {prof.mxu_flops_per_s / 1e9:.1f} GFLOP/s "
-          f"gather {prof.gather_flops_per_s / 1e9:.1f} GFLOP/s "
-          f"(cache: {autotune.cache_path()})")
-    plan_m = serve.build_plan(cfg, registry, state.params, state.masks,
-                              "auto", batch_size=2, profile=prof)
-    print(plan_m.describe())
-    res = autotune.autotune_blocks(2, s0.d_in, s0.d_out, k)
-    print(f"autotuned {s0.name} @ b=2: best "
-          f"{res.block_b or 'decode'}x{res.block_n} "
-          f"({res.us:.0f} us vs 128x128 default {res.default_us:.0f} us)")
+          f"gather {prof.gather_flops_per_s / 1e9:.1f}->"
+          f"{(prof.gather_flops_per_s_large or 0) / 1e9:.1f} GFLOP/s "
+          f"(b={prof.gather_small_batch}->{prof.gather_large_batch}; "
+          f"cache: {autotune.cache_path()})")
+    engine_m = ServingEngine(cfg, state.params, state.masks, registry,
+                             path="auto", profile=prof)
+    print(engine_m.plan_for(engine_m.plan_key(2)).describe())
+    tuned = engine_m.autotune(2)
+    for name, res in tuned.items():
+        print(f"autotuned {name} @ b=2: best "
+              f"{res.block_b or 'decode'}x{res.block_n} "
+              f"({res.us:.0f} us vs 128x128 default {res.default_us:.0f} us)")
 
 
 if __name__ == "__main__":

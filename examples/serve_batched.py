@@ -7,7 +7,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.launch.serve import generate

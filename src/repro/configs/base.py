@@ -8,7 +8,7 @@ jit'd functions.
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal, Sequence
+from typing import Literal
 
 
 @dataclasses.dataclass(frozen=True)

@@ -33,15 +33,22 @@ def _resolve_blocks(batch: int, d_in: int, n_out: int, k: int,
     """Caller-forced blocks win; else the autotune cache; else (None, None)
     so kernels.condensed_matmul applies its VMEM-budget default.
 
-    The cache is consulted only when NEITHER dim is forced: a tuned winner
-    was validated as a PAIR, so splicing one of its dims against an
+    The cache key is derived through the format protocol
+    (``formats.shape_tuning_key`` — the same derivation the formats'
+    ``tuning_key`` methods and ``autotune.tune_registry`` use, so a tuned
+    entry written under a format's key is exactly what this dispatch reads
+    back). The cache is consulted only when NEITHER dim is forced: a tuned
+    winner was validated as a PAIR, so splicing one of its dims against an
     arbitrary caller-forced other dim could exceed the VMEM budget — with a
     half-forced call the remaining dim goes to the kernel module's budget
     fit instead."""
     if block_b is not None or block_n is not None:
         return block_b, block_n
-    from repro.sparse import autotune  # lazy: keeps kernels importable alone
-    tuned = autotune.lookup_blocks(batch, d_in, n_out, k, itemsize=itemsize)
+    # lazy imports: keep kernels importable alone
+    from repro.sparse import autotune
+    from repro.sparse import formats
+    tuned = autotune.lookup_entry(
+        formats.shape_tuning_key(d_in, n_out, k, batch, itemsize=itemsize))
     if tuned is not None:
         return tuned["block_b"], tuned["block_n"]
     return None, None

@@ -23,7 +23,6 @@ Usage:
                                 [--multi-pod] [--out results.jsonl]
 """
 import argparse
-import functools
 import json
 import sys
 import time
@@ -154,6 +153,21 @@ def lower_serve_plan(cfg, shape, mesh):
     return lower_serve_planned(cfg, shape, mesh, reps)
 
 
+def lower_serve_engine(cfg, shape, mesh):
+    """Decode for one ServingEngine GROUP, lowered abstractly: the plan key
+    a request of this shape's batch would group under (batch bucket x
+    format signature — repro.launch.engine.abstract_plan_key, no
+    allocation), and the planned decode program for that group's serving
+    tree. Proves every group program the engine would dispatch compiles and
+    fits before a single weight is exported."""
+    from repro.launch import engine as ENG
+    registry = REG.build_registry(cfg)
+    key, reps = ENG.abstract_plan_key(cfg, registry, shape.global_batch)
+    print(f"[dryrun] engine group {key.describe()} for batch "
+          f"{shape.global_batch}")
+    return lower_serve_planned(cfg, shape, mesh, reps)
+
+
 def lower_serve(cfg, shape, mesh):
     if shape.kind == "prefill":
         # larger attention chunks for long-prompt prefill: fewer unrolled
@@ -198,7 +212,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, quiet: bool = False,
     n_chips = mesh.size
     lower_fn = {"train": lower_train, "serve": lower_serve, "dst": lower_dst,
                 "serve_cond": lower_serve_condensed,
-                "serve_plan": lower_serve_plan}[
+                "serve_plan": lower_serve_plan,
+                "serve_engine": lower_serve_engine}[
         (("train" if shape.kind == "train" else "serve") if program == "auto"
          else program)]
     t0 = time.time()

@@ -1,0 +1,394 @@
+"""Programmatic serving engine: submit / step / retire over execution plans.
+
+``ServingEngine`` is the API the serve CLI, the benchmarks and the examples
+drive; it owns the pieces that used to be hand-wired per caller:
+
+* **Admission** — ``submit(prompts, gen_len)`` queues a request (a batch of
+  prompt streams) and returns its id.
+* **Grouping by plan key** — pending requests are grouped by ``PlanKey``:
+  the request's BATCH BUCKET (``autotune.BATCH_BUCKETS`` — the same buckets
+  that key the kernel autotune cache, so a group's tuned blocks and its
+  plan are calibrated for each other) crossed with the per-stack FORMAT
+  signature the cost model picks at that bucket. One execution ``Plan``
+  (serving pytree of ``repro.sparse.formats`` objects) is built lazily per
+  key and shared by every request the key ever groups.
+* **Execution** — ``step()`` runs each group through the jitted
+  prefill + ``lax.scan`` greedy-decode programs (cache donated). Requests
+  in a group with the same (prompt_len, gen_len) are CONCATENATED along the
+  batch axis and decoded as one program dispatch — mixed-batch serving, the
+  ROADMAP item this engine exists for. Greedy decode is batch-independent,
+  so a request's tokens are identical whether it runs alone or fused into a
+  group slab.
+* **Retirement** — ``retire()`` pops finished ``Result``s (tokens +
+  timings); ``refresh(params, masks, mask_versions)`` propagates a training
+  job's incremental export into every cached plan.
+
+``repro.launch.serve`` is a thin CLI over this module; the jitted
+prefill/decode primitives and the ``generate``/``serve_once`` helpers live
+here so every consumer shares one compile cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.sparse import autotune as AT
+from repro.sparse import condensed as COND
+from repro.sparse import plan as PLAN
+from repro.sparse import registry as REG
+
+
+# ---------------------------------------------------------------------------
+# jitted execution primitives (module-level: one compile cache for all users)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _prefill(cfg, params, masks, batch, cache):
+    # module-level jit (not a per-call lambda) so repeated serve calls on the
+    # same cfg/shapes hit the compile cache — benchmark warm-up relies on it
+    return M.prefill_step(cfg, params, masks, batch, cache)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "gen_len"),
+                   donate_argnums=(3,))
+def _decode_loop(cfg, params, masks, cache, first_tok, gen_len: int):
+    """Greedy decode of ``gen_len`` tokens as one scanned program.
+
+    first_tok: (B, 1) int32 — argmax of the prefill logits. The cache is
+    donated: each scan step's cache update aliases the input buffers, so
+    serving memory stays at one cache regardless of generation length.
+    Returns (B, gen_len) generated tokens (first_tok first).
+    """
+    def body(carry, _):
+        cur, cache = carry
+        logits, cache = M.decode_step(cfg, params, masks, {"tokens": cur}, cache)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        return (nxt, cache), cur[:, 0]
+
+    (_, cache), toks = jax.lax.scan(body, (first_tok, cache), None,
+                                    length=gen_len)
+    return toks.T, cache
+
+
+def _timed_serve(cfg, params, masks, prompts, gen_len: int):
+    """One timed prefill+decode pass (the shared execution primitive).
+    Returns (tokens (B, T+gen_len), prefill_s, decode_s, decode_tok_per_s)."""
+    b, t = prompts.shape
+    cache = M.init_cache(cfg, b, max_len=t + gen_len)
+
+    t0 = time.perf_counter()
+    logits, cache = _prefill(cfg, params, masks, {"tokens": prompts}, cache)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    first = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    t0 = time.perf_counter()
+    toks, _ = _decode_loop(cfg, params, masks, cache, first, gen_len)
+    toks.block_until_ready()
+    t_decode = time.perf_counter() - t0
+
+    tok_s = b * gen_len / max(t_decode, 1e-9)
+    return jnp.concatenate([prompts, toks], axis=1), t_prefill, t_decode, tok_s
+
+
+def serve_once(cfg, params, masks, prompts, gen_len: int, path_name: str,
+               quiet: bool = False):
+    """One timed prefill+decode pass. Returns (tokens, decode_tok_per_s)."""
+    out, t_prefill, t_decode, tok_s = _timed_serve(cfg, params, masks,
+                                                   prompts, gen_len)
+    if not quiet:
+        b, t = prompts.shape
+        print(f"[serve:{path_name}] prefill {b}x{t} in {t_prefill:.3f}s | "
+              f"decode {b}x{gen_len} in {t_decode:.3f}s ({tok_s:.1f} tok/s)")
+    return out, tok_s
+
+
+def generate(cfg, params, masks, prompts: jax.Array, gen_len: int):
+    """prompts: (B, T) int32. Greedy decode. Returns (B, T+gen_len)."""
+    out, _ = serve_once(cfg, params, masks, prompts, gen_len, "generate",
+                        quiet=True)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# requests / plan keys / results
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    """What makes two requests executable under one shared plan.
+
+    ``batch_bucket`` — the autotune bucket the request's batch falls in
+    (shared with the kernel tuning-cache keys, so the group's plan AND its
+    tuned Pallas blocks come from the same calibration point).
+    ``formats`` — the per-stack format signature the cost model picks at
+    that bucket (registry order); a fixed ``path`` forces it uniform.
+    """
+    batch_bucket: int
+    formats: tuple[tuple[str, str], ...]
+
+    def describe(self) -> str:
+        reps = {r for _, r in self.formats}
+        rep = reps.pop() if len(reps) == 1 else "mixed"
+        return f"b<={self.batch_bucket}/{rep}"
+
+
+@dataclasses.dataclass
+class Request:
+    id: int
+    prompts: jax.Array      # (B, T) int32
+    gen_len: int
+
+
+@dataclasses.dataclass
+class Result:
+    id: int
+    tokens: jax.Array       # (B, T + gen_len) — prompt followed by greedy tokens
+    plan_key: PlanKey
+    prefill_s: float
+    decode_s: float
+    tok_s: float            # decode throughput of the slab this request ran in
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupReport:
+    """What one ``step()`` did for one plan-key group."""
+    key: PlanKey
+    request_ids: tuple[int, ...]
+    n_slabs: int            # distinct (prompt_len, gen_len) program dispatches
+    total_batch: int
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+class ServingEngine:
+    """Plan-keyed batch serving over a trained (params, masks) pair.
+
+    >>> eng = ServingEngine(cfg, params, masks, registry, path="auto")
+    >>> rid = eng.submit(prompts, gen_len=16)
+    >>> eng.step()
+    >>> [res] = eng.retire()
+
+    ``path`` is any ``repro.sparse.plan.PATHS`` entry; ``"auto"`` lets each
+    group's batch bucket pick per-stack formats by the cost model.
+    ``profile`` prices those decisions (``HardwareProfile.measure()`` for a
+    machine-calibrated one). Plans are built lazily per ``PlanKey`` at the
+    BUCKET batch size and cached for the engine's lifetime; ``refresh``
+    keeps them coherent with a live training job.
+    """
+
+    def __init__(self, cfg, params, masks, registry=None, *,
+                 path: str = "auto",
+                 profile: PLAN.HardwareProfile = PLAN.DEFAULT_PROFILE,
+                 mask_versions: dict | None = None):
+        if path not in PLAN.PATHS:
+            raise ValueError(
+                f"unknown serving path {path!r}; expected one of {PLAN.PATHS}")
+        self.cfg = cfg
+        self.params = params
+        self.masks = masks or {}
+        self.registry = list(REG.build_registry(cfg) if registry is None
+                             else registry)
+        self.path = path
+        self.profile = profile
+        self._mask_versions = mask_versions
+        self._itemsize = jnp.dtype(cfg.param_dtype).itemsize
+        self._stats: dict | None = None     # realized stats, computed once
+        self._plans: dict[PlanKey, PLAN.Plan] = {}
+        self._pending: list[Request] = []
+        self._done: dict[int, Result] = {}
+        self._next_id = 0
+
+    # -- stats / keys -------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Realized per-stack export stats (one fused host sync, cached)."""
+        if self._stats is None:
+            self._stats = COND.export_stats(self.registry, self.masks)
+        return self._stats
+
+    def plan_key(self, batch_size: int) -> PlanKey:
+        """The key a request of ``batch_size`` streams groups under: its
+        batch bucket x the per-stack format signature at that bucket."""
+        bucket = AT.batch_bucket(max(int(batch_size), 1))
+        if self.path != "auto":
+            sig = tuple((s.name, self.path) for s in self.registry)
+            return PlanKey(batch_bucket=bucket, formats=sig)
+        stats = self.stats()
+        sig = tuple(
+            (s.name, PLAN.select_representation(
+                s, batch_size=bucket, itemsize=self._itemsize,
+                stats=stats[s.name], profile=self.profile).representation)
+            for s in self.registry)
+        return PlanKey(batch_bucket=bucket, formats=sig)
+
+    def plan_for(self, key: PlanKey) -> PLAN.Plan:
+        """The (lazily built, cached) execution plan serving ``key``."""
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = PLAN.build_plan(
+                self.cfg, self.registry, self.params, self.masks,
+                batch_size=key.batch_bucket, path=self.path,
+                mask_versions=self._mask_versions, profile=self.profile)
+            self._plans[key] = plan
+        return plan
+
+    def serving_tree_for(self, key: PlanKey):
+        """The masks-slot pytree a group executes with. The all-masked fixed
+        path serves the training-layout masks directly (identity — no
+        export, the pre-engine ``--path masked`` fast path)."""
+        if self.path == "masked":
+            return self.masks
+        return self.plan_for(key).serving_tree
+
+    # -- request lifecycle --------------------------------------------------
+
+    def submit(self, prompts, gen_len: int) -> int:
+        """Admit a request: ``prompts`` (B, T) int32, decode ``gen_len``
+        greedy tokens per stream. Returns the request id."""
+        prompts = jnp.asarray(prompts)
+        if prompts.ndim != 2:
+            raise ValueError(f"prompts must be (batch, prompt_len); "
+                             f"got shape {prompts.shape}")
+        if gen_len < 1:
+            raise ValueError("gen_len must be >= 1")
+        rid = self._next_id
+        self._next_id += 1
+        self._pending.append(Request(id=rid, prompts=prompts,
+                                     gen_len=int(gen_len)))
+        return rid
+
+    def pending_groups(self) -> dict[PlanKey, list[int]]:
+        """Predicted grouping of the pending requests (no execution)."""
+        groups: dict[PlanKey, list[int]] = {}
+        for req in self._pending:
+            groups.setdefault(self.plan_key(req.prompts.shape[0]),
+                              []).append(req.id)
+        return groups
+
+    def step(self, quiet: bool = True) -> list[GroupReport]:
+        """Serve every pending request, one plan-key group at a time.
+
+        Within a group, requests sharing (prompt_len, gen_len) are fused
+        into one batch slab and decoded by a single jitted program dispatch;
+        slabs with different shapes reuse the group's plan but compile their
+        own program (shape-polymorphic fusion — padding slabs up to the
+        bucket is the continuous-batching follow-up). Results land in the
+        retire queue.
+        """
+        groups: dict[PlanKey, list[Request]] = {}
+        for req in self._pending:
+            groups.setdefault(self.plan_key(req.prompts.shape[0]),
+                              []).append(req)
+
+        reports = []
+        for key, reqs in groups.items():
+            # requests stay in the pending queue until their slab has
+            # actually executed: an exception mid-step (plan build, compile,
+            # OOM) must not silently drop queued work — unexecuted requests
+            # remain pending for a later step()
+            tree = self.serving_tree_for(key)
+            slabs: dict[tuple[int, int], list[Request]] = {}
+            for req in reqs:
+                slabs.setdefault((req.prompts.shape[1], req.gen_len),
+                                 []).append(req)
+            for (t, gen_len), slab in slabs.items():
+                prompts = jnp.concatenate([r.prompts for r in slab], axis=0)
+                b = prompts.shape[0]
+                out, prefill_s, decode_s, tok_s = _timed_serve(
+                    self.cfg, self.params, tree, prompts, gen_len)
+                row = 0
+                for r in slab:
+                    rb = r.prompts.shape[0]
+                    self._done[r.id] = Result(
+                        id=r.id, tokens=out[row:row + rb], plan_key=key,
+                        prefill_s=prefill_s, decode_s=decode_s, tok_s=tok_s)
+                    row += rb
+                served = {r.id for r in slab}
+                self._pending = [r for r in self._pending
+                                 if r.id not in served]
+                if not quiet:
+                    print(f"[engine] group {key.describe()}: "
+                          f"{len(slab)} request(s) fused at {b}x{t}+{gen_len} "
+                          f"({tok_s:.1f} tok/s)")
+            reports.append(GroupReport(
+                key=key, request_ids=tuple(r.id for r in reqs),
+                n_slabs=len(slabs), total_batch=sum(r.prompts.shape[0]
+                                                    for r in reqs)))
+        return reports
+
+    def retire(self, request_id: int | None = None) -> list[Result]:
+        """Pop finished results (all of them, or one id). Unfinished ids are
+        simply not returned — call ``step()`` first."""
+        if request_id is not None:
+            res = self._done.pop(request_id, None)
+            return [res] if res is not None else []
+        out = [self._done[k] for k in sorted(self._done)]
+        self._done.clear()
+        return out
+
+    # -- live-training coherence -------------------------------------------
+
+    def refresh(self, params, masks, mask_versions, *,
+                donate: bool = True) -> dict[PlanKey, list[str]]:
+        """Propagate a training job's update into every cached plan
+        (incremental: only stacks whose version counter moved re-condense;
+        the rest get values-only regathers — see ``Plan.refresh``). The
+        engine's own (params, masks) references move to the new trees and
+        the realized-stats cache is invalidated."""
+        self.params = params
+        self.masks = masks or {}
+        self._stats = None
+        self._mask_versions = mask_versions
+        return {key: plan.refresh(params, self.masks, mask_versions,
+                                  donate=donate)
+                for key, plan in self._plans.items()}
+
+    # -- calibration --------------------------------------------------------
+
+    def autotune(self, batch_size: int, *, dtype=None,
+                 reps: int = 3) -> dict[str, AT.TuneResult]:
+        """Run the timed kernel block search for every condensed dispatch
+        shape this engine's stacks produce at ``batch_size``'s bucket —
+        keys derive from the formats' ``spec_tuning_key``, i.e. exactly what
+        the Pallas wrappers look up at trace time. Tunes at the SERVING
+        dtype (layers cast condensed values to the activation dtype; an f32
+        tuning pass would never be looked up by a bf16 serving run)."""
+        dtype = jnp.dtype(self.cfg.dtype if dtype is None else dtype)
+        return AT.tune_registry(self.registry, self.stats(),
+                                batch=batch_size, dtype=dtype, reps=reps)
+
+
+# ---------------------------------------------------------------------------
+# allocation-free grouping (dry-run consumer)
+# ---------------------------------------------------------------------------
+
+
+def abstract_plan_key(cfg, registry, batch_size: int, *,
+                      path: str = "auto",
+                      profile: PLAN.HardwareProfile = PLAN.DEFAULT_PROFILE,
+                      ) -> tuple[PlanKey, dict[str, str]]:
+    """The plan key a request of ``batch_size`` would group under, computed
+    from STATIC info only (target densities, no realized masks) — the
+    grouping half of the engine, usable without allocating a model. Returns
+    (key, per-stack representation dict) for ``plan.abstract_serving_tree``.
+    """
+    bucket = AT.batch_bucket(max(int(batch_size), 1))
+    if path != "auto":
+        reps = {s.name: path for s in registry}
+    else:
+        reps = PLAN.plan_for_shape(cfg, registry, batch_size=bucket,
+                                   profile=profile)
+    key = PlanKey(batch_bucket=bucket,
+                  formats=tuple((s.name, reps[s.name]) for s in registry))
+    return key, reps

@@ -1,19 +1,22 @@
-"""Batched serving driver: prefill a batch of prompts, decode greedily.
+"""Serving CLI: a thin wrapper over ``repro.launch.engine.ServingEngine``.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
       --batch 4 --prompt-len 32 --gen 16 --path condensed
 
 Demonstrates the production serving paths (paper Sec. 4.4 — same trained
 weights, multiple execution representations). Representation selection lives
-in repro.sparse.plan; this driver builds a per-stack execution Plan:
+in repro.sparse.plan over the typed formats of repro.sparse.formats; request
+admission/grouping/execution live in repro.launch.engine. This module only
+parses flags, builds the engine, submits ONE request and prints the result:
 
-  --path auto        per-stack bytes/FLOPs cost model over the request batch
-                     shape: condensed gather wins the bandwidth-bound decode
-                     shapes (B=1), masked-dense wins the MXU back at large
-                     batch (B=256), matching the paper's Sec. 4.4 crossover
+  --path auto        per-stack cost model over the request's batch BUCKET
+                     (shared with the autotune cache keys): condensed gather
+                     wins the bandwidth-bound decode shapes (B=1),
+                     masked-dense wins the MXU back at large batch (B=256),
+                     matching the paper's Sec. 4.4 crossover
   --path masked      masked-dense MXU path (bool masks; training layout)
   --path condensed   constant fan-in condensed path: sparse linears run the
-                     Pallas gather kernel over {values, indices}, touching
+                     Pallas gather kernel over Condensed formats, touching
                      only n_out*k weight entries (Alg. 1; bandwidth-bound
                      decode is where the paper's 3.4x/1.7x CPU/GPU wins live)
   --path structured  ablated neurons dropped, active columns dense (Fig. 4
@@ -30,31 +33,31 @@ token-identical: all evaluate the same masked weights, only the
 storage/compute representation differs.
 
 The generation loop is a single jitted ``lax.scan`` over decode steps with the
-KV/SSM cache donated (no per-token Python dispatch, no cache copies) — the
-serving analogue of the scanned layer stacks in repro.models.model.
+KV/SSM cache donated (no per-token Python dispatch, no cache copies) — see
+repro.launch.engine for the primitives.
 
 Calibration knobs (this machine, not a spec sheet):
 
   --profile measured  price the --path auto cost model with rates micro-
                       benchmarked on the live backend (HardwareProfile
-                      .measure(); cached per backend in the autotune cache)
+                      .measure(); two-point gather calibration; cached per
+                      backend in the autotune cache)
   --autotune          run the timed (block_b, block_n) search for every
                       condensed stack shape at this batch bucket; winners
                       persist in the autotune cache
                       ($REPRO_AUTOTUNE_CACHE or ~/.cache/repro/autotune.json)
-                      and are picked up by the Pallas kernel wrappers at
-                      trace time
+                      under the formats' tuning keys and are picked up by
+                      the Pallas kernel wrappers at trace time
 """
 from __future__ import annotations
 
 import argparse
-import functools
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
+from repro.launch.engine import (  # noqa: F401  (re-exported API surface)
+    ServingEngine, _decode_loop, _prefill, generate, serve_once)
 from repro.models import model as M
 from repro.sparse import plan as PLAN
 from repro.sparse import registry as REG
@@ -74,74 +77,15 @@ def build_plan(cfg, registry, params, masks, path: str, *,
 def build_serving_masks(cfg, registry, params, masks, path: str,
                         batch_size: int = 1):
     """Convert the trained (params, masks) pair into the serving pytree for
-    ``path``. Thin wrapper over repro.sparse.plan — the result plugs into the
-    masks slot of prefill/decode_step; repro.models.layers.linear dispatches
-    per-leaf on its structure. ``path="masked"`` returns ``masks`` unchanged
-    (identity, no export) to keep the training-layout fast path allocation-
-    free."""
+    ``path`` (leaves are repro.sparse.formats objects). Thin wrapper over
+    repro.sparse.plan — the result plugs into the masks slot of
+    prefill/decode_step; repro.models.layers.linear dispatches per leaf on
+    its type. ``path="masked"`` returns ``masks`` unchanged (identity, no
+    export) to keep the training-layout fast path allocation-free."""
     if path == "masked":
         return masks
     return build_plan(cfg, registry, params, masks, path,
                       batch_size=batch_size).serving_tree
-
-
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _prefill(cfg, params, masks, batch, cache):
-    # module-level jit (not a per-call lambda) so repeated serve calls on the
-    # same cfg/shapes hit the compile cache — the benchmark warm-up relies on it
-    return M.prefill_step(cfg, params, masks, batch, cache)
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "gen_len"),
-                   donate_argnums=(3,))
-def _decode_loop(cfg, params, masks, cache, first_tok, gen_len: int):
-    """Greedy decode of ``gen_len`` tokens as one scanned program.
-
-    first_tok: (B, 1) int32 — argmax of the prefill logits. The cache is
-    donated: each scan step's cache update aliases the input buffers, so
-    serving memory stays at one cache regardless of generation length.
-    Returns (B, gen_len) generated tokens (first_tok first).
-    """
-    def body(carry, _):
-        cur, cache = carry
-        logits, cache = M.decode_step(cfg, params, masks, {"tokens": cur}, cache)
-        nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-        return (nxt, cache), cur[:, 0]
-
-    (_, cache), toks = jax.lax.scan(body, (first_tok, cache), None,
-                                    length=gen_len)
-    return toks.T, cache
-
-
-def generate(cfg, params, masks, prompts: jax.Array, gen_len: int):
-    """prompts: (B, T) int32. Greedy decode. Returns (B, T+gen_len)."""
-    out, _ = serve_once(cfg, params, masks, prompts, gen_len, "generate",
-                        quiet=True)
-    return out
-
-
-def serve_once(cfg, params, masks, prompts, gen_len: int, path_name: str,
-               quiet: bool = False):
-    """One timed prefill+decode pass. Returns (tokens, decode_tok_per_s)."""
-    b, t = prompts.shape
-    cache = M.init_cache(cfg, b, max_len=t + gen_len)
-
-    t0 = time.perf_counter()
-    logits, cache = _prefill(cfg, params, masks, {"tokens": prompts}, cache)
-    logits.block_until_ready()
-    t_prefill = time.perf_counter() - t0
-
-    first = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-    t0 = time.perf_counter()
-    toks, _ = _decode_loop(cfg, params, masks, cache, first, gen_len)
-    toks.block_until_ready()
-    t_decode = time.perf_counter() - t0
-
-    tok_s = b * gen_len / max(t_decode, 1e-9)
-    if not quiet:
-        print(f"[serve:{path_name}] prefill {b}x{t} in {t_prefill:.3f}s | "
-              f"decode {b}x{gen_len} in {t_decode:.3f}s ({tok_s:.1f} tok/s)")
-    return jnp.concatenate([prompts, toks], axis=1), tok_s
 
 
 def main(argv=None):
@@ -158,9 +102,9 @@ def main(argv=None):
                     default="default",
                     help="cost-model hardware profile for --path auto: "
                          "'measured' microbenchmarks HBM/matmul/gather rates "
-                         "on this machine (cached per backend in the "
-                         "autotune cache file) instead of the built-in "
-                         "v5e-like constants")
+                         "on this machine (two gather batch points; cached "
+                         "per backend in the autotune cache file) instead "
+                         "of the built-in v5e-like constants")
     ap.add_argument("--autotune", action="store_true",
                     help="run the timed kernel block-shape search for every "
                          "condensed stack shape at this batch bucket before "
@@ -184,37 +128,38 @@ def main(argv=None):
         print(f"[serve] calibrated profile {profile.name}: "
               f"hbm {profile.hbm_bytes_per_s / 1e9:.1f} GB/s, "
               f"matmul {profile.mxu_flops_per_s / 1e9:.1f} GFLOP/s, "
-              f"gather {profile.gather_flops_per_s / 1e9:.1f} GFLOP/s")
+              f"gather {profile.gather_flops_per_s / 1e9:.1f}"
+              + (f"->{profile.gather_flops_per_s_large / 1e9:.1f}"
+                 if profile.gather_flops_per_s_large else "")
+              + " GFLOP/s")
+
+    engine = ServingEngine(cfg, params, masks, reg, path=args.path,
+                           profile=profile)
+
     if args.autotune and args.path == "masked":
         print("[serve] --autotune skipped: --path masked never dispatches "
               "to the condensed kernels (use a condensed-family path or "
               "auto)")
     elif args.autotune and reg:
-        from repro.sparse import autotune as AT
-        from repro.sparse import condensed as COND
-        # tune at the SERVING dtype: layers cast condensed values to the
-        # activation dtype, and the cache key includes the itemsize — an f32
-        # tuning pass would never be looked up by a bf16 serving run
-        tuned = AT.tune_registry(reg, COND.export_stats(reg, masks),
-                                 batch=args.batch, dtype=jnp.dtype(cfg.dtype))
+        tuned = engine.autotune(args.batch)
         for name, res in tuned.items():
             print(f"[serve] autotuned {name}: best "
                   f"{res.block_b or 'decode'}x{res.block_n} "
                   f"({res.us:.1f} us vs default {res.default_us:.1f} us)")
-    if args.path == "masked" or not reg:
-        serving_masks = masks
-    else:
-        plan = build_plan(cfg, reg, params, masks, args.path,
-                          batch_size=args.batch, profile=profile)
-        if args.path == "auto":
-            print(plan.describe())
-        serving_masks = plan.serving_tree
 
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
-    out, _ = serve_once(cfg, params, serving_masks, prompts, args.gen, args.path)
-    print("[serve] first stream:", out[0, -args.gen:].tolist())
-    return out
+    rid = engine.submit(prompts, args.gen)
+    if args.path == "auto" and reg:
+        print(engine.plan_for(engine.plan_key(args.batch)).describe())
+    engine.step()
+    [res] = engine.retire(rid)
+    b, t = prompts.shape
+    print(f"[serve:{args.path}] prefill {b}x{t} in {res.prefill_s:.3f}s | "
+          f"decode {b}x{args.gen} in {res.decode_s:.3f}s "
+          f"({res.tok_s:.1f} tok/s)")
+    print("[serve] first stream:", res.tokens[0, -args.gen:].tolist())
+    return res.tokens
 
 
 if __name__ == "__main__":

@@ -27,8 +27,6 @@ hand-written per-arch table to drift out of sync.
 """
 from __future__ import annotations
 
-import jax
-
 from repro.compat import NamedSharding, PartitionSpec as P
 
 
@@ -49,7 +47,18 @@ def _map_with_path(fn, tree, path=()):
     if hasattr(tree, "_fields"):
         return type(tree)(**{k: _map_with_path(fn, getattr(tree, k), path + (k,))
                              for k in tree._fields})
+    if isinstance(tree, _formats().SparseFormat):
+        # serving-format pytree node: map each array field under its field
+        # name (the same path layout the legacy dict leaves had, so the
+        # values/indices rules below keep applying); static fields ride along
+        return tree.map_arrays_with_names(
+            lambda name, leaf: _map_with_path(fn, leaf, path + (name,)))
     return fn(path, tree)
+
+
+def _formats():
+    from repro.sparse import formats  # lazy: keeps launch importable alone
+    return formats
 
 
 # weight-name classes -------------------------------------------------------
@@ -127,6 +136,12 @@ class ShardingRules:
             return P(*([None] * lead + [tp, self.fsdp_ax]))
         if name == "conv_x":  # (L, width, d_inner)
             return P(*([None] * (ndim - 1) + ["model" if self.ssm_tp else None]))
+        if name == "mask" and len(path) >= 2:
+            # MaskedDense serving leaf: same (lead..., d_in, d_out) shape as
+            # its weight, so it shards exactly like the weight (the legacy
+            # bare-bool masked leaf sat AT the stack path and inherited the
+            # weight spec; the format's field must not lose that)
+            return self.param_spec(path[:-1] + (path[-2],), leaf)
         if name in ("values", "indices"):
             # condensed stacks (lead..., d_out, k): neuron axis follows the
             # dense weight's OUT-dim sharding; k local

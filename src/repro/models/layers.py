@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.srigl import apply_mask_for_forward
+from repro.sparse import formats as F
 
 
 # ---------------------------------------------------------------------------
@@ -44,36 +45,26 @@ def linear(x: jax.Array, w: jax.Array, mask=None) -> jax.Array:
 
     Serving-representation dispatch (paper Sec. 4.4 "same weights, multiple
     representations"): the ``mask`` argument selects the execution path. The
-    per-stack choice is made by repro.sparse.plan (a bytes/FLOPs cost model
-    over the request batch shape); this function only dispatches on the leaf.
+    per-stack choice is made by repro.sparse.plan (each format's cost model
+    over the request batch shape); this function only dispatches on the
+    leaf's TYPE:
 
-    * bool array — masked-dense MXU path (training / prefill default).
-    * {"values": (n_out, k), "indices": (n_out, k)} — condensed constant
-      fan-in path via the Pallas kernel (repro.kernels.ops): the dense
-      weight is not read at all, HBM traffic shrinks to n_out*k entries
-      (values + indices), the paper's Alg. 1 decode path.
-    * {"values": (a, k), "indices": (a, k), "out_index": (a,)} — condensed-
-      over-active path (the paper's combined Fig. 4 point): ablated neurons
-      are dropped FIRST, the gather kernel runs over the a <= n_out surviving
-      rows, and the result is scattered back to the dense output layout.
-      Exact for any mask (ablated outputs are exact zeros either way).
-    * {"neuron_active": (n_out,)} — structured-only path (Fig. 4): ablated
-      output neurons are dropped but active columns stay dense. Exact only
-      for ablation-only layers; used by the serving ablation benchmark.
+    * bool array — masked-dense MXU path (training / prefill default), with
+      the straight-through trick so the gradient stays dense (the RigL/SRigL
+      grow criterion needs it).
+    * ``repro.sparse.formats.SparseFormat`` — the format executes itself
+      (``fmt.apply(x, w)``): MaskedDense / Condensed / StructuredFanIn /
+      CondensedOverActive, each one point of PAPER.md Fig. 4 (see the
+      formats module docstring for the mapping).
+    * legacy dict leaf — auto-upgraded through the deprecation shim
+      (``formats.from_legacy_leaf``); a dict with unrecognized keys raises a
+      clear error instead of silently mis-dispatching.
     """
     if isinstance(mask, dict):
-        from repro.kernels import ops
-        if "out_index" in mask:
-            return ops.condensed_over_active_linear_nd(
-                x, mask["values"].astype(x.dtype), mask["indices"],
-                mask["out_index"], w.shape[-1])
-        if "values" in mask:
-            return ops.condensed_linear_nd(
-                x, mask["values"].astype(x.dtype), mask["indices"])
-        if "neuron_active" in mask:
-            return ops.structured_dense(x, w.astype(x.dtype),
-                                        mask["neuron_active"])
-        raise ValueError(f"unknown serving-mask dict keys: {sorted(mask)}")
+        # pre-formats serving trees: upgrade, then dispatch on type
+        mask = F.from_legacy_leaf(mask, d_in=w.shape[-2], d_out=w.shape[-1])
+    if isinstance(mask, F.SparseFormat):
+        return mask.apply(x, w)
     if mask is not None:
         w = apply_mask_for_forward(w, mask)
     return x @ w.astype(x.dtype)

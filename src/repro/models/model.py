@@ -407,8 +407,6 @@ def backbone(cfg, params: Params, masks: Masks, x: jax.Array, *,
         x, _ = jax.lax.scan(body, x, (params["blocks"], _expand_masks(mstack, cfg.n_layers)))
 
     elif cfg.local_global_ratio:  # gemma3
-        r = cfg.local_global_ratio
-        n_groups = cfg.n_layers // (r + 1)
 
         def group_body(carry, xs):
             h = carry

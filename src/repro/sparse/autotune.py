@@ -42,7 +42,10 @@ from repro.kernels import condensed_matmul as cm
 # bucket even when they disagree by up to ~2x.
 BATCH_BUCKETS = (1, 8, 32, 128, 512, 2048)
 
-_CACHE_VERSION = 1
+# v2: profiles record the TWO-POINT gather calibration
+# (gather_flops_per_s_large + the calibration batches) — see
+# plan.HardwareProfile.measure; v1 single-rate entries are discarded
+_CACHE_VERSION = 2
 _STATE: dict = {"path": None, "data": None}
 
 
@@ -98,9 +101,13 @@ def reset_cache_state() -> None:
 
 def kernel_key(d_in: int, n_out: int, k: int, batch: int, *,
                backend: str | None = None, itemsize: int = 4) -> str:
-    backend = backend or jax.default_backend()
-    return (f"{backend}/w{itemsize * 8}/d{d_in}/n{n_out}/k{k}"
-            f"/b{batch_bucket(batch)}")
+    """Cache key for one kernel dispatch shape. The canonical definition
+    lives with the formats (``formats.shape_tuning_key`` — every consumer
+    derives keys from the format protocol's ``tuning_key``); this delegate
+    keeps the long-standing autotune-level name working."""
+    from repro.sparse import formats as F  # lazy: formats imports this module
+    return F.shape_tuning_key(d_in, n_out, k, batch, backend=backend,
+                              itemsize=itemsize)
 
 
 class TuneResult(typing.NamedTuple):
@@ -117,19 +124,25 @@ class TuneResult(typing.NamedTuple):
         return self.default_us / max(self.us, 1e-12)
 
 
-def lookup_blocks(batch: int, d_in: int, n_out: int, k: int, *,
-                  backend: str | None = None,
-                  itemsize: int = 4) -> dict | None:
-    """Cached winner for this shape/bucket, or None (read-only, never times).
-
-    Returns ``{"block_b": int | None, "block_n": int}``; ``block_b=None``
-    means the decode-specialized variant won.
-    """
-    entry = _load()["kernels"].get(
-        kernel_key(d_in, n_out, k, batch, backend=backend, itemsize=itemsize))
+def lookup_entry(key: str | None) -> dict | None:
+    """Cached winner under a ``tuning_key``-derived cache key, or None
+    (read-only, never times). ``None`` keys — formats with no tunable
+    kernel — always miss. Returns ``{"block_b": int | None, "block_n":
+    int}``; ``block_b=None`` means the decode-specialized variant won."""
+    if key is None:
+        return None
+    entry = _load()["kernels"].get(key)
     if not entry:
         return None
     return {"block_b": entry["block_b"], "block_n": entry["block_n"]}
+
+
+def lookup_blocks(batch: int, d_in: int, n_out: int, k: int, *,
+                  backend: str | None = None,
+                  itemsize: int = 4) -> dict | None:
+    """Shape-level convenience over ``lookup_entry`` (same key derivation)."""
+    return lookup_entry(kernel_key(d_in, n_out, k, batch, backend=backend,
+                                   itemsize=itemsize))
 
 
 def store_profile(rates: dict, *, backend: str | None = None) -> None:
@@ -231,29 +244,33 @@ def autotune_blocks(batch: int, d_in: int, n_out: int, k: int, *,
 
 def tune_registry(registry, stats: dict, *, batch: int, dtype=jnp.float32,
                   reps: int = 3, backend: str | None = None) -> dict[str, TuneResult]:
-    """Tune every DISTINCT (d_in, n_out, k, bucket) among ``registry``'s
-    stacks at their realized fan-in (``stats`` from condensed.export_stats).
-    Stacks with ablated neurons are tuned at BOTH row counts — the full
-    d_out (plain condensed) and the exported max_active (condensed-over-
-    active leaves carry (a, k) arrays, and that is the shape
-    kernels.ops looks up at trace time). Already-cached shapes are skipped.
-    Used by ``serve --autotune``."""
+    """Tune every DISTINCT kernel-dispatch shape among ``registry``'s stacks
+    at their realized fan-in (``stats`` from condensed.export_stats).
+
+    Cache keys are derived from the FORMAT protocol's ``spec_tuning_key``
+    (the same derivation ``kernels.ops`` uses at trace time): plain
+    ``Condensed`` keys on the full d_out rows, and stacks with ablated
+    neurons are ALSO tuned under ``CondensedOverActive``'s key — its leaves
+    carry (max_active, k) arrays, and that is the shape the kernel dispatch
+    looks up. Already-cached shapes are skipped. Used by
+    ``serve --autotune``."""
+    from repro.sparse import formats as F  # lazy: formats imports this module
     out: dict[str, TuneResult] = {}
     seen: set[str] = set()
     itemsize = jnp.dtype(dtype).itemsize
     for s in registry:
-        k = max(stats[s.name].k, 1)
-        a = max(stats[s.name].max_active, 1)
-        for label, n_out in ((s.name, s.d_out),) + (
-                ((f"{s.name}@a{a}", a),) if a < s.d_out else ()):
-            key = kernel_key(s.d_in, n_out, k, batch, backend=backend,
-                             itemsize=itemsize)
+        spec = F.spec_for_stack(s, stats[s.name], itemsize)
+        a = spec.max_active
+        cands = [(s.name, F.Condensed, s.d_out)]
+        if a < s.d_out:
+            cands.append((f"{s.name}@a{a}", F.CondensedOverActive, a))
+        for label, cls, n_out in cands:
+            key = cls.spec_tuning_key(spec, batch, backend=backend)
             if key in seen:
                 continue
             seen.add(key)
-            if lookup_blocks(batch, s.d_in, n_out, k, backend=backend,
-                             itemsize=itemsize) is None:
-                out[label] = autotune_blocks(batch, s.d_in, n_out, k,
+            if lookup_entry(key) is None:
+                out[label] = autotune_blocks(batch, s.d_in, n_out, spec.k,
                                              dtype=dtype, reps=reps,
                                              backend=backend)
     return out

@@ -1,30 +1,32 @@
-"""Condensed-representation export: masks -> {values, indices} pytree.
+"""Condensed-representation export: masks -> serving-format pytrees.
 
 The paper's serving story (Sec. 4.4): the SAME trained weights can execute
 as masked-dense (MXU path, training/prefill) or condensed constant fan-in
 (bandwidth path, decode/online inference). This module converts a trained
-(params, masks) pair into the condensed pytree that repro.models.layers
-dispatches on, and provides the abstract (ShapeDtypeStruct) variant the
-dry-run uses to lower the condensed decode program without allocation.
+(params, masks) pair into serving pytrees whose leaves are the typed format
+objects from ``repro.sparse.formats`` (the representation layer proper —
+``apply``/``cost``/``tuning_key``/``donate_refresh`` all live there); what
+stays here is the REGISTRY-LEVEL orchestration: fused per-stack stats with
+one host sync, whole-tree exports, and byte accounting.
+
+The per-leaf helpers (``condense_stack_leaf`` & co.) are kept as thin
+delegates to the format constructors so pre-redesign callers keep working;
+they now return ``SparseFormat`` objects (which still answer
+``leaf["values"]``-style access during the migration).
 """
 from __future__ import annotations
 
-import functools
 import typing
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import distributions as D
-from repro.core import topology
+from repro.sparse import formats as F
 from repro.sparse import registry as REG
 
-
-class ExportStats(typing.NamedTuple):
-    """Realized per-stack structure, measured from the trained masks."""
-    k: int                  # max realized fan-in over all columns/replicas
-    max_active: int         # max active (non-ablated) neurons over replicas
-    active_fraction: float  # mean fraction of active neurons
+# re-exports: these names predate the formats module and are widely imported
+ExportStats = F.ExportStats
 
 
 def export_stats(registry, masks: dict,
@@ -58,228 +60,100 @@ def export_stats(registry, masks: dict,
 
 
 def _condense_stack(weight, mask, k: int):
-    """vmap dense_to_condensed over the leading stack dims."""
+    """Condensed arrays at forced fan-in ``k`` (exactness-test reference)."""
+    from repro.core import topology
     fn = lambda w, m: topology.dense_to_condensed(w, m, k)
-    vals, idx = _vmap_lead(fn, weight.ndim - 2)(weight, mask)
+    vals, idx = F._vmap_lead(fn, weight.ndim - 2)(weight, mask)
     return {"values": vals, "indices": idx}
 
 
-def condense_stack_leaf(weight, mask, stats: ExportStats) -> dict:
-    """Condensed leaf {"values", "indices"} for one stack at realized fan-in."""
-    return _condense_stack(weight * mask, mask, max(stats.k, 1))
+def condense_stack_leaf(weight, mask, stats: ExportStats) -> F.Condensed:
+    """Condensed format for one stack at realized fan-in."""
+    return F.Condensed.export_from_dense(weight, mask, stats)
 
 
-def export_condensed(cfg, registry, params: dict, masks: dict,
-                     stats: dict[str, ExportStats] | None = None) -> dict:
-    """Concrete export after training. k per stack = max realized fan-in."""
-    stats = stats if stats is not None else export_stats(registry, masks)
-    out: dict = {}
-    for s in registry:
-        w = REG.get_path(params, s.path)
-        m = REG.get_path(masks, s.path)
-        REG._set_path(out, s.path, condense_stack_leaf(w, m, stats[s.name]))
-    return out
+def condense_active_stack_leaf(weight, mask,
+                               stats: ExportStats) -> F.CondensedOverActive:
+    return F.CondensedOverActive.export_from_dense(weight, mask, stats)
 
 
-def _condense_active_stack(weight, mask, k: int, a: int):
-    """Condensed-over-active leaf for one stack (vmapped over lead dims).
-
-    Drops ablated output neurons FIRST (Fig. 4's "structured" move), then
-    condenses only the surviving columns to constant fan-in ``k`` — the
-    composed representation of the paper's combined Fig. 4 point. ``a`` is
-    the (static) max active-neuron count across the stack's replicas; rows
-    beyond a replica's realized active count are padding with values 0 and
-    an out-of-range ``out_index`` so the scatter in kernels.ops drops them.
-
-    A neuron is treated as active iff its mask column has any non-zero —
-    derived from the mask itself (not the trainer's neuron_active bookkeeping)
-    so the representation is exact vs masked-dense by construction.
-    """
-    d_out = weight.shape[-1]
-
-    def fn(w, m):
-        col_active = jnp.any(m, axis=0)                      # (d_out,)
-        order = jnp.argsort(~col_active, stable=True).astype(jnp.int32)
-        out_index = order[:a]                                # active cols first
-        sel = col_active[out_index]                          # (a,)
-        w_sel = jnp.take(w, out_index, axis=1)
-        m_sel = jnp.take(m, out_index, axis=1) & sel[None, :]
-        vals, idx = topology.dense_to_condensed(w_sel * m_sel, m_sel, k)
-        return vals, idx, jnp.where(sel, out_index, d_out).astype(jnp.int32)
-
-    vals, idx, oi = _vmap_lead(fn, weight.ndim - 2)(weight, mask)
-    return {"values": vals, "indices": idx, "out_index": oi}
+def structured_stack_leaf(mask, *, d_in: int | None = None,
+                          weight_itemsize: int = 4) -> F.StructuredFanIn:
+    """Structured-only format for one stack. A neuron is active iff its mask
+    column has any non-zero (matches the trainer's neuron_active state after
+    an SRigL update, and degrades gracefully for unstructured masks)."""
+    return F.StructuredFanIn(neuron_active=jnp.any(mask, axis=-2),
+                             d_in=int(d_in if d_in is not None
+                                      else mask.shape[-2]),
+                             weight_itemsize=weight_itemsize)
 
 
-def condense_active_stack_leaf(weight, mask, stats: ExportStats) -> dict:
-    return _condense_active_stack(weight, mask, max(stats.k, 1),
-                                  max(stats.max_active, 1))
-
-
-# --- jitted donated re-export -----------------------------------------------
-#
-# Plan.refresh runs against a LIVE serving job, so the re-export must not
-# transiently hold two copies of a stack's condensed weights. The helpers
-# below run the re-condense / values-regather as ONE jitted program with the
-# plan's old {values, indices} buffers donated: when the new leaf has the
-# same avals (fan-in k and active-row count unchanged — the common case for
-# a DST step, which rewires at constant fan-in), XLA writes the new arrays
-# into the donated buffers and the old jax.Arrays are invalidated at
-# dispatch. keep_unused=True stops jit from pruning the donated args (the
-# output aliases them by shape/dtype, not dataflow). No weight data ever
-# crosses to the host.
-
-
-def _vmap_lead(fn, n_lead: int):
-    for _ in range(n_lead):
-        fn = jax.vmap(fn)
-    return fn
-
-
-@functools.partial(jax.jit, static_argnames=("k",), donate_argnums=(2, 3),
-                   keep_unused=True)
-def _recondense_donated(weight, mask, old_values, old_indices, *, k: int):
-    fn = lambda w, m: topology.dense_to_condensed(w * m, m, k)
-    vals, idx = _vmap_lead(fn, weight.ndim - 2)(weight, mask)
-    return {"values": vals.astype(old_values.dtype), "indices": idx}
-
-
-@functools.partial(jax.jit, static_argnames=("k", "a"),
-                   donate_argnums=(2, 3, 4), keep_unused=True)
-def _recondense_active_donated(weight, mask, old_values, old_indices,
-                               old_out_index, *, k: int, a: int):
-    leaf = _condense_active_stack(weight, mask, k, a)
-    leaf["values"] = leaf["values"].astype(old_values.dtype)
-    return leaf
-
-
-def recondense_stack_leaf(weight, mask, stats: ExportStats, old_leaf: dict,
-                          *, over_active: bool = False,
-                          donate: bool = True) -> dict:
+def recondense_stack_leaf(weight, mask, stats: ExportStats, old_leaf, *,
+                          over_active: bool = False,
+                          donate: bool = True) -> F.SparseFormat:
     """Re-condense one stack for Plan.refresh, reusing ``old_leaf``'s device
-    buffers when the new leaf's avals match (see block comment above).
+    buffers when the new arrays' avals match (see the donated-program notes
+    in repro.sparse.formats).
 
     CAUTION (donate=True): the arrays in ``old_leaf`` are invalidated —
     callers must not read them afterwards. Falls back to a fresh (non-
     donating) export when the realized fan-in / active count changed shape.
+    Accepts legacy dict leaves through the deprecation shim.
     """
-    k = max(stats.k, 1)
-    if over_active:
-        a = max(stats.max_active, 1)
-        shape = (*weight.shape[:-2], a, k)
-        if (donate and "out_index" in old_leaf
-                and old_leaf["values"].shape == shape
-                and old_leaf["values"].dtype == weight.dtype):
-            return _recondense_active_donated(
-                weight, mask, old_leaf["values"], old_leaf["indices"],
-                old_leaf["out_index"], k=k, a=a)
-        return condense_active_stack_leaf(weight, mask, stats)
-    shape = (*weight.shape[:-2], weight.shape[-1], k)
-    if (donate and "out_index" not in old_leaf
-            and old_leaf["values"].shape == shape
-            and old_leaf["values"].dtype == weight.dtype):
-        return _recondense_donated(weight, mask, old_leaf["values"],
-                                   old_leaf["indices"], k=k)
-    return condense_stack_leaf(weight, mask, stats)
+    if isinstance(old_leaf, dict):
+        old_leaf = F.from_legacy_leaf(old_leaf, d_in=weight.shape[-2],
+                                      d_out=weight.shape[-1])
+    cls = F.CondensedOverActive if over_active else F.Condensed
+    if not isinstance(old_leaf, cls):  # representation changed: fresh export
+        return cls.export_from_dense(weight, mask, stats)
+    return old_leaf.donate_refresh(weight, mask, stats, donate=donate)
 
 
-def _gather_at_indices(weight, mask, indices, out_index=None):
-    def fn(w, m, idx, oi=None):
-        wm_t = (w * m).T                                     # (d_out, d_in)
-        if oi is not None:  # select surviving columns (clip: padding dropped)
-            wm_t = jnp.take(wm_t, jnp.minimum(oi, wm_t.shape[0] - 1), axis=0)
-        return jnp.take_along_axis(wm_t, idx, axis=1)
-
-    n_lead = weight.ndim - 2
-    if out_index is None:
-        return _vmap_lead(fn, n_lead)(weight, mask, indices)
-    return _vmap_lead(fn, n_lead)(weight, mask, indices, out_index)
-
-
-@functools.partial(jax.jit, donate_argnums=(2,), keep_unused=True)
-def _revalue_donated(weight, mask, old_values, indices):
-    return _gather_at_indices(weight, mask, indices).astype(old_values.dtype)
-
-
-@functools.partial(jax.jit, donate_argnums=(2,), keep_unused=True)
-def _revalue_active_donated(weight, mask, old_values, indices, out_index):
-    return _gather_at_indices(weight, mask, indices,
-                              out_index).astype(old_values.dtype)
-
-
-def revalue_stack_leaf(weight, mask, leaf: dict, *, donate: bool = False) -> dict:
+def revalue_stack_leaf(weight, mask, leaf, *, donate: bool = False) -> F.SparseFormat:
     """Values-only refresh of a condensed(-over-active) leaf under UNCHANGED
     topology: re-gather ``weight * mask`` at the stored indices, reusing the
-    indices (and out_index) arrays verbatim.
-
-    Exact because padding slots point at inactive rows (dense_to_condensed's
-    invariant), so they re-gather exact zeros; condensed-over-active padding
-    ROWS may re-gather garbage from a clipped column but are dropped by the
-    out-of-range out_index at scatter time. This skips the argsort and the
-    stats host sync — the cheap path Plan.refresh uses for stacks whose mask
-    version did NOT move while the weights kept training. No host transfer
-    of weight data happens either way: the regather is a device program.
-
-    ``donate=True`` runs it as one jitted program with the OLD values buffer
-    donated: the regathered values are written in place (the returned array
-    aliases ``leaf["values"]``'s storage, which is invalidated), so a live
-    serving job never holds two copies of a stack's values. The indices /
-    out_index objects are returned verbatim in both modes.
+    indices (and out_index) arrays verbatim. See
+    ``formats.Condensed.refresh_values`` for the exactness/donation contract.
     """
-    out_index = leaf.get("out_index")
-    if donate:
-        if out_index is None:
-            values = _revalue_donated(weight, mask, leaf["values"],
-                                      leaf["indices"])
-        else:
-            values = _revalue_active_donated(weight, mask, leaf["values"],
-                                             leaf["indices"], out_index)
-    else:
-        values = _gather_at_indices(weight, mask, leaf["indices"],
-                                    out_index).astype(leaf["values"].dtype)
-    if out_index is None:
-        return {"values": values, "indices": leaf["indices"]}
-    return {"values": values, "indices": leaf["indices"],
-            "out_index": out_index}
+    if isinstance(leaf, dict):
+        leaf = F.from_legacy_leaf(leaf, d_in=weight.shape[-2],
+                                  d_out=weight.shape[-1])
+    return leaf.refresh_values(weight, mask, donate=donate)
+
+
+def export_condensed(cfg, registry, params: dict, masks: dict,
+                     stats: dict[str, ExportStats] | None = None) -> dict:
+    """Concrete export after training. k per stack = max realized fan-in.
+    Leaves are ``formats.Condensed`` objects."""
+    return _export_tree(F.Condensed, registry, params, masks, stats)
 
 
 def export_condensed_over_active(cfg, registry, params: dict, masks: dict,
                                  stats: dict[str, ExportStats] | None = None) -> dict:
-    """Composed export: ablated neurons dropped, survivors condensed.
+    """Composed export: ablated neurons dropped, survivors condensed
+    (``formats.CondensedOverActive`` leaves — the paper's combined Fig. 4
+    point, token-identical to masked for ANY mask)."""
+    return _export_tree(F.CondensedOverActive, registry, params, masks, stats)
 
-    Leaf type: {"values": (lead..., a, k), "indices": (lead..., a, k),
-    "out_index": (lead..., a)} — repro.models.layers.linear dispatches these
-    to kernels.ops.condensed_over_active_linear_nd. Token-identical to the
-    masked path for ANY mask (ablated columns contribute exact zeros either
-    way); the byte saving over plain condensed is the ablated-neuron fraction.
-    """
+
+def export_structured(cfg, registry, masks: dict) -> dict:
+    """Structured-only serving pytree (Fig. 4 "structured"):
+    ``formats.StructuredFanIn`` leaves — ablated output neurons dropped,
+    active columns kept dense."""
+    out: dict = {}
+    for s in registry:
+        m = REG.get_path(masks, s.path)
+        REG.set_path(out, s.path, structured_stack_leaf(m, d_in=s.d_in))
+    return out
+
+
+def _export_tree(cls, registry, params, masks, stats):
     stats = stats if stats is not None else export_stats(registry, masks)
     out: dict = {}
     for s in registry:
         w = REG.get_path(params, s.path)
         m = REG.get_path(masks, s.path)
-        REG._set_path(out, s.path, condense_active_stack_leaf(w, m, stats[s.name]))
-    return out
-
-
-def structured_stack_leaf(mask) -> dict:
-    """Structured-only leaf for one stack: {"neuron_active": (lead..., d_out)}.
-
-    A neuron is active iff its mask column has any non-zero (matches the
-    trainer's neuron_active state after an SRigL update, and degrades
-    gracefully for unstructured masks). Single definition shared by
-    export_structured and repro.sparse.plan's leaf builder."""
-    return {"neuron_active": jnp.any(mask, axis=-2)}
-
-
-def export_structured(cfg, registry, masks: dict) -> dict:
-    """Structured-only serving pytree (Fig. 4 "structured"): ablated output
-    neurons dropped, active columns kept dense — repro.models.layers.linear
-    dispatches these dicts to kernels.ops.structured_dense."""
-    out: dict = {}
-    for s in registry:
-        m = REG.get_path(masks, s.path)
-        REG._set_path(out, s.path, structured_stack_leaf(m))
+        REG.set_path(out, s.path, cls.export_from_dense(w, m, stats[s.name]))
     return out
 
 

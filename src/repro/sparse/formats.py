@@ -1,0 +1,753 @@
+"""First-class sparse serving formats: one protocol, four representations.
+
+The paper's serving story (Sec. 4.4, Fig. 4) is that ONE trained constant
+fan-in topology can be *executed* under several storage/compute
+representations, and which one wins is a property of the request shape and
+the hardware balance. This module makes each representation a registered
+pytree dataclass with a single shared protocol, replacing the untyped
+``{"values": ..., "indices": ...}`` dict leaves that every consumer used to
+re-interpret with its own key-sniffing conventions.
+
+Mapping to PAPER.md Fig. 4 (serving-time representations of an SRigL mask):
+
+* ``MaskedDense``          — the training layout: dense weight + bool mask,
+                             dense MXU matmul. Fig. 4's "dense/masked"
+                             baseline point; wins back at large batch.
+* ``StructuredFanIn``      — Fig. 4 "structured": ablated output neurons are
+                             dropped, surviving columns stay dense. Exact
+                             only for ablation-only masks.
+* ``Condensed``            — Fig. 4 "condensed": the constant fan-in gather
+                             layout (Alg. 1). Weight reads shrink to
+                             n_out*k entries; wins the bandwidth-bound
+                             decode shapes.
+* ``CondensedOverActive``  — Fig. 4's combined point: ablated neurons are
+                             dropped FIRST, then the survivors are
+                             condensed. Exact for any mask; the byte/FLOP
+                             saving over plain condensed is the ablated
+                             fraction.
+
+Protocol (every format implements all of it):
+
+* ``apply(x, w)``                    — execute the sparse linear. ``w`` is
+                                       the live dense weight (read by the
+                                       masked/structured formats, ignored by
+                                       the condensed family).
+* ``export_from_dense(w, mask, stats)`` (classmethod) — build the format
+                                       from a trained (weight, mask) pair.
+* ``cost(batch, profile)``           — estimated seconds per serving step
+                                       under ``profile`` (the plan cost
+                                       model); ``estimate_cost`` is the
+                                       allocation-free classmethod variant
+                                       priced from a ``FormatSpec``.
+* ``tuning_key(batch, ...)``         — the autotune-cache key this format's
+                                       kernel dispatch looks up (None for
+                                       formats with no tunable kernel).
+* ``donate_refresh(w, mask, stats)`` — in-place re-export: rebuilds the
+                                       format with ``self``'s old device
+                                       buffers DONATED whenever the new
+                                       arrays have matching avals (a live
+                                       serving job never holds two copies).
+* ``refresh_values(w, mask)``        — cheap values-only refresh under
+                                       unchanged topology (indices reused
+                                       verbatim; no-op for formats that
+                                       read the live weights).
+
+Formats are pytree nodes: their array fields are traced leaves (they flow
+through ``jit``/``lax.scan``/``device_put``/donation like any array) and
+their static fields ride along as hashable aux data. ``from_legacy_leaf``
+upgrades the pre-redesign dict leaves (deprecation shim), so existing
+checkpoints and serialized serving trees keep loading.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import typing
+import warnings
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topology
+from repro.core.srigl import apply_mask_for_forward
+from repro.kernels import ops
+
+
+class ExportStats(typing.NamedTuple):
+    """Realized per-stack structure, measured from the trained masks."""
+    k: int                  # max realized fan-in over all columns/replicas
+    max_active: int         # max active (non-ablated) neurons over replicas
+    active_fraction: float  # mean fraction of active neurons
+
+
+@dataclasses.dataclass(frozen=True)
+class FormatSpec:
+    """Static geometry a format is priced and cache-keyed from (no arrays).
+
+    Built either from a registry ``SparseStack`` + realized ``ExportStats``
+    (``spec_for_stack``) or from a live format instance (``fmt.spec()``) —
+    the allocation-free half of the protocol, used by the plan cost model
+    and the autotune key derivation before any export has happened.
+    """
+    d_in: int
+    d_out: int
+    n_replicas: int
+    itemsize: int           # serving dtype bytes for values/weights
+    k: int                  # constant fan-in
+    max_active: int         # exported row count for condensed-over-active
+    active_fraction: float  # mean active-neuron fraction
+
+
+def spec_for_stack(stack, stats: ExportStats, itemsize: int) -> FormatSpec:
+    """``stack`` is duck-typed (registry.SparseStack or any object with
+    d_in/d_out; n_replicas defaults to 1 — benchmarks price bare shapes)."""
+    return FormatSpec(d_in=stack.d_in, d_out=stack.d_out,
+                      n_replicas=getattr(stack, "n_replicas", 1),
+                      itemsize=itemsize,
+                      k=max(stats.k, 1), max_active=max(stats.max_active, 1),
+                      active_fraction=min(max(stats.active_fraction, 0.0), 1.0))
+
+
+def shape_tuning_key(d_in: int, n_out: int, k: int, batch: int, *,
+                     backend: str | None = None, itemsize: int = 4) -> str:
+    """Canonical autotune-cache key for a condensed kernel dispatch shape.
+
+    Single definition shared by the formats' ``tuning_key`` methods, by
+    ``repro.sparse.autotune`` (which persists entries under it) and by
+    ``repro.kernels.ops`` (which looks blocks up at trace time) — the three
+    can never drift. Batch is bucketed (``autotune.batch_bucket``) so a
+    tuned entry serves every batch in its bucket, and the SAME buckets key
+    the serving engine's request groups.
+    """
+    from repro.sparse import autotune as AT  # lazy: autotune is optional at import
+    backend = backend or jax.default_backend()
+    return (f"{backend}/w{itemsize * 8}/d{d_in}/n{n_out}/k{k}"
+            f"/b{AT.batch_bucket(batch)}")
+
+
+def _gather_rate(profile, batch: int) -> float:
+    """Batch-dependent gather throughput: profiles calibrated at two points
+    (see plan.HardwareProfile.gather_rate) expose the activation-traffic
+    cache cliff; single-rate profiles fall back to their scalar rate."""
+    fn = getattr(profile, "gather_rate", None)
+    if callable(fn):
+        return fn(batch)
+    return profile.gather_flops_per_s
+
+
+def _vmap_lead(fn, n_lead: int):
+    for _ in range(n_lead):
+        fn = jax.vmap(fn)
+    return fn
+
+
+def _realized_stats(mask) -> ExportStats:
+    """Host-syncing fallback when the caller has no precomputed stats."""
+    nnz = jnp.sum(mask.astype(jnp.int32), axis=-2)
+    act = jnp.any(mask, axis=-2)
+    k, a, frac = jax.device_get((
+        jnp.max(nnz), jnp.max(jnp.sum(act.astype(jnp.int32), axis=-1)),
+        jnp.mean(act.astype(jnp.float32))))
+    return ExportStats(k=int(k), max_active=int(a), active_fraction=float(frac))
+
+
+# ---------------------------------------------------------------------------
+# base class
+# ---------------------------------------------------------------------------
+
+
+class SparseFormat:
+    """Base for the four serving formats (see module docstring).
+
+    Subclasses are frozen dataclasses declaring ``_array_fields`` (pytree
+    leaves) and ``_static_fields`` (hashable aux data); registration happens
+    via ``_register``. Legacy dict-style access (``fmt["values"]``,
+    ``"out_index" in fmt``) is kept as a migration convenience — new code
+    should use the attributes.
+    """
+    format_name: typing.ClassVar[str]
+    _array_fields: typing.ClassVar[tuple[str, ...]]
+    _static_fields: typing.ClassVar[tuple[str, ...]] = ()
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (tuple(getattr(self, f) for f in self._array_fields),
+                tuple(getattr(self, f) for f in self._static_fields))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        kw = dict(zip(cls._array_fields, children))
+        kw.update(zip(cls._static_fields, aux))
+        return cls(**kw)
+
+    # -- legacy dict-leaf compatibility ------------------------------------
+    def __getitem__(self, key: str):
+        if key in self._array_fields:
+            return getattr(self, key)
+        raise KeyError(key)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._array_fields
+
+    def to_legacy_dict(self) -> dict:
+        """The pre-redesign dict leaf this format replaces."""
+        return {f: getattr(self, f) for f in self._array_fields}
+
+    def map_arrays_with_names(self, fn):
+        """Rebuild with each array field replaced by ``fn(name, value)`` —
+        used by sharding/checkpoint code that walks trees by path."""
+        return dataclasses.replace(
+            self, **{f: fn(f, getattr(self, f)) for f in self._array_fields})
+
+    # -- protocol (subclass responsibilities) -------------------------------
+    def apply(self, x: jax.Array, w: jax.Array | None = None) -> jax.Array:
+        raise NotImplementedError
+
+    @classmethod
+    def export_from_dense(cls, w, mask, stats: ExportStats | None = None):
+        raise NotImplementedError
+
+    def spec(self) -> FormatSpec:
+        raise NotImplementedError
+
+    def cost(self, batch: int, profile) -> float:
+        """Estimated seconds per serving step for THIS exported instance."""
+        return self.estimate_cost(self.spec(), batch, profile)
+
+    @classmethod
+    def estimate_cost(cls, spec: FormatSpec, batch: int, profile) -> float:
+        raise NotImplementedError
+
+    @classmethod
+    def estimate_weight_bytes(cls, spec: FormatSpec) -> int:
+        """Per-step weight-side HBM traffic this format actually reads."""
+        raise NotImplementedError
+
+    def tuning_key(self, batch: int, *, backend: str | None = None) -> str | None:
+        """Autotune-cache key for this instance's kernel dispatch (None when
+        the format has no tunable kernel)."""
+        return None
+
+    @classmethod
+    def spec_tuning_key(cls, spec: FormatSpec, batch: int, *,
+                        backend: str | None = None) -> str | None:
+        return None
+
+    @classmethod
+    def abstract(cls, lead: tuple[int, ...], d_in: int, d_out: int, k: int,
+                 dtype) -> "SparseFormat":
+        """ShapeDtypeStruct-leaved instance (dry-run / compile-only)."""
+        raise NotImplementedError
+
+    def donate_refresh(self, w, mask, stats: ExportStats | None = None, *,
+                       donate: bool = True) -> "SparseFormat":
+        """Full re-export from (w, mask), reusing ``self``'s device buffers
+        when the new arrays' avals match. CAUTION: with ``donate=True`` and
+        matching avals, ``self``'s arrays are invalidated."""
+        return type(self).export_from_dense(w, mask, stats)
+
+    def refresh_values(self, w, mask, *, donate: bool = True) -> "SparseFormat":
+        """Values-only refresh under unchanged topology (no-op for formats
+        that read the live weights at execution time)."""
+        return self
+
+
+def _register(cls):
+    jax.tree_util.register_pytree_node_class(cls)
+    return cls
+
+
+# ---------------------------------------------------------------------------
+# jitted donated re-export programs (shared by Condensed / CondensedOverActive)
+#
+# A serving plan refreshes against a LIVE job, so the re-export must not
+# transiently hold two copies of a stack's condensed weights. These run the
+# re-condense / values-regather as ONE jitted program with the old buffers
+# donated: when the new leaf has the same avals (fan-in k and active-row
+# count unchanged — the common case for a DST step, which rewires at
+# constant fan-in), XLA writes the new arrays into the donated buffers and
+# the old jax.Arrays are invalidated at dispatch. keep_unused=True stops jit
+# from pruning the donated args (the output aliases them by shape/dtype, not
+# dataflow). No weight data ever crosses to the host.
+# ---------------------------------------------------------------------------
+
+
+def _condense_active_stack(weight, mask, k: int, a: int):
+    """Condensed-over-active arrays for one stack (vmapped over lead dims).
+
+    Drops ablated output neurons FIRST (Fig. 4's "structured" move), then
+    condenses only the surviving columns to constant fan-in ``k``. ``a`` is
+    the (static) max active-neuron count across the stack's replicas; rows
+    beyond a replica's realized active count are padding with values 0 and
+    an out-of-range ``out_index`` so the scatter in kernels.ops drops them.
+
+    A neuron is treated as active iff its mask column has any non-zero —
+    derived from the mask itself (not the trainer's neuron_active
+    bookkeeping) so the representation is exact vs masked-dense by
+    construction.
+    """
+    d_out = weight.shape[-1]
+
+    def fn(w, m):
+        col_active = jnp.any(m, axis=0)                      # (d_out,)
+        order = jnp.argsort(~col_active, stable=True).astype(jnp.int32)
+        out_index = order[:a]                                # active cols first
+        sel = col_active[out_index]                          # (a,)
+        w_sel = jnp.take(w, out_index, axis=1)
+        m_sel = jnp.take(m, out_index, axis=1) & sel[None, :]
+        vals, idx = topology.dense_to_condensed(w_sel * m_sel, m_sel, k)
+        return vals, idx, jnp.where(sel, out_index, d_out).astype(jnp.int32)
+
+    return _vmap_lead(fn, weight.ndim - 2)(weight, mask)
+
+
+@functools.partial(jax.jit, static_argnames=("k",), donate_argnums=(2, 3),
+                   keep_unused=True)
+def _recondense_donated(weight, mask, old_values, old_indices, *, k: int):
+    fn = lambda w, m: topology.dense_to_condensed(w * m, m, k)
+    vals, idx = _vmap_lead(fn, weight.ndim - 2)(weight, mask)
+    return vals.astype(old_values.dtype), idx
+
+
+@functools.partial(jax.jit, static_argnames=("k", "a"),
+                   donate_argnums=(2, 3, 4), keep_unused=True)
+def _recondense_active_donated(weight, mask, old_values, old_indices,
+                               old_out_index, *, k: int, a: int):
+    vals, idx, oi = _condense_active_stack(weight, mask, k, a)
+    return vals.astype(old_values.dtype), idx, oi
+
+
+def _gather_at_indices(weight, mask, indices, out_index=None):
+    def fn(w, m, idx, oi=None):
+        wm_t = (w * m).T                                     # (d_out, d_in)
+        if oi is not None:  # select surviving columns (clip: padding dropped)
+            wm_t = jnp.take(wm_t, jnp.minimum(oi, wm_t.shape[0] - 1), axis=0)
+        return jnp.take_along_axis(wm_t, idx, axis=1)
+
+    n_lead = weight.ndim - 2
+    if out_index is None:
+        return _vmap_lead(fn, n_lead)(weight, mask, indices)
+    return _vmap_lead(fn, n_lead)(weight, mask, indices, out_index)
+
+
+@functools.partial(jax.jit, donate_argnums=(2,), keep_unused=True)
+def _revalue_donated(weight, mask, old_values, indices):
+    return _gather_at_indices(weight, mask, indices).astype(old_values.dtype)
+
+
+@functools.partial(jax.jit, donate_argnums=(2,), keep_unused=True)
+def _revalue_active_donated(weight, mask, old_values, indices, out_index):
+    return _gather_at_indices(weight, mask, indices,
+                              out_index).astype(old_values.dtype)
+
+
+# ---------------------------------------------------------------------------
+# the four formats
+# ---------------------------------------------------------------------------
+
+
+@_register
+@dataclasses.dataclass(frozen=True, eq=False)
+class MaskedDense(SparseFormat):
+    """Training layout: dense weight + bool mask, dense MXU matmul.
+
+    ``weight_itemsize`` (static) records the dense weight's dtype bytes so
+    the instance can price its own HBM traffic without seeing the weight.
+    """
+    mask: jax.Array                      # (lead..., d_in, d_out) bool
+    weight_itemsize: int = 4
+
+    format_name: typing.ClassVar[str] = "masked"
+    _array_fields: typing.ClassVar[tuple[str, ...]] = ("mask",)
+    _static_fields: typing.ClassVar[tuple[str, ...]] = ("weight_itemsize",)
+
+    def apply(self, x, w=None):
+        return x @ apply_mask_for_forward(w, self.mask).astype(x.dtype)
+
+    @classmethod
+    def export_from_dense(cls, w, mask, stats=None):
+        return cls(mask=mask, weight_itemsize=jnp.dtype(w.dtype).itemsize)
+
+    def spec(self) -> FormatSpec:
+        d_in, d_out = self.mask.shape[-2:]
+        n = 1
+        for s in self.mask.shape[:-2]:
+            n *= s
+        return FormatSpec(d_in=d_in, d_out=d_out, n_replicas=n,
+                          itemsize=self.weight_itemsize, k=d_in,
+                          max_active=d_out, active_fraction=1.0)
+
+    @classmethod
+    def estimate_cost(cls, spec, batch, profile):
+        b = max(int(batch), 1)
+        flops = 2.0 * b * spec.n_replicas * spec.d_in * spec.d_out
+        return max(cls.estimate_weight_bytes(spec) / profile.hbm_bytes_per_s,
+                   flops / profile.mxu_flops_per_s)
+
+    @classmethod
+    def estimate_weight_bytes(cls, spec):
+        # dense weight + the bool mask the masked path also reads
+        return spec.n_replicas * spec.d_in * spec.d_out * (spec.itemsize + 1)
+
+    @classmethod
+    def abstract(cls, lead, d_in, d_out, k, dtype):
+        return cls(mask=jax.ShapeDtypeStruct((*lead, d_in, d_out), jnp.bool_),
+                   weight_itemsize=jnp.dtype(dtype).itemsize)
+
+    def donate_refresh(self, w, mask, stats=None, *, donate=True):
+        return type(self).export_from_dense(w, mask, stats)
+
+
+@_register
+@dataclasses.dataclass(frozen=True, eq=False)
+class StructuredFanIn(SparseFormat):
+    """Fig. 4 "structured": ablated neurons dropped, active columns dense.
+
+    As executed by ``kernels.ops.structured_dense`` this still reads the
+    FULL dense weight (only the bool fan-in mask read is saved; a genuinely
+    column-gathered kernel is a ROADMAP follow-up) — ``estimate_cost``
+    prices what the code delivers, not the aspiration. Exact only for
+    ablation-only masks.
+    """
+    neuron_active: jax.Array             # (lead..., d_out) bool
+    d_in: int = 0                        # dense weight fan-in (for pricing)
+    weight_itemsize: int = 4
+
+    format_name: typing.ClassVar[str] = "structured"
+    _array_fields: typing.ClassVar[tuple[str, ...]] = ("neuron_active",)
+    _static_fields: typing.ClassVar[tuple[str, ...]] = ("d_in", "weight_itemsize")
+
+    def apply(self, x, w=None):
+        return ops.structured_dense(x, w.astype(x.dtype), self.neuron_active)
+
+    @classmethod
+    def export_from_dense(cls, w, mask, stats=None):
+        return cls(neuron_active=jnp.any(mask, axis=-2),
+                   d_in=int(mask.shape[-2]),
+                   weight_itemsize=jnp.dtype(w.dtype).itemsize)
+
+    def spec(self) -> FormatSpec:
+        d_out = self.neuron_active.shape[-1]
+        n = 1
+        for s in self.neuron_active.shape[:-1]:
+            n *= s
+        return FormatSpec(d_in=self.d_in, d_out=d_out, n_replicas=n,
+                          itemsize=self.weight_itemsize, k=self.d_in,
+                          max_active=d_out, active_fraction=1.0)
+
+    @classmethod
+    def estimate_cost(cls, spec, batch, profile):
+        b = max(int(batch), 1)
+        flops = 2.0 * b * spec.n_replicas * spec.d_in * spec.d_out
+        return max(cls.estimate_weight_bytes(spec) / profile.hbm_bytes_per_s,
+                   flops / profile.mxu_flops_per_s)
+
+    @classmethod
+    def estimate_weight_bytes(cls, spec):
+        # full dense weight + n_out neuron_active bools (mask read saved)
+        return spec.n_replicas * (spec.d_in * spec.d_out * spec.itemsize
+                                  + spec.d_out)
+
+    @classmethod
+    def abstract(cls, lead, d_in, d_out, k, dtype):
+        return cls(neuron_active=jax.ShapeDtypeStruct((*lead, d_out),
+                                                      jnp.bool_),
+                   d_in=d_in, weight_itemsize=jnp.dtype(dtype).itemsize)
+
+    def donate_refresh(self, w, mask, stats=None, *, donate=True):
+        return type(self).export_from_dense(w, mask, stats)
+
+
+@_register
+@dataclasses.dataclass(frozen=True, eq=False)
+class Condensed(SparseFormat):
+    """Fig. 4 "condensed": the constant fan-in gather layout (paper Alg. 1).
+
+    ``d_in`` (static) is the dense fan-in the indices address — needed for
+    the autotune cache key (the kernel's VMEM footprint depends on the
+    activation row length), not for ``apply``.
+    """
+    values: jax.Array                    # (lead..., d_out, k)
+    indices: jax.Array                   # (lead..., d_out, k) int32
+    d_in: int = 0
+
+    format_name: typing.ClassVar[str] = "condensed"
+    _array_fields: typing.ClassVar[tuple[str, ...]] = ("values", "indices")
+    _static_fields: typing.ClassVar[tuple[str, ...]] = ("d_in",)
+
+    def apply(self, x, w=None):
+        return ops.condensed_linear_nd(x, self.values.astype(x.dtype),
+                                       self.indices)
+
+    @classmethod
+    def export_from_dense(cls, w, mask, stats=None):
+        stats = stats if stats is not None else _realized_stats(mask)
+        k = max(stats.k, 1)
+        fn = lambda w_, m_: topology.dense_to_condensed(w_ * m_, m_, k)
+        vals, idx = _vmap_lead(fn, w.ndim - 2)(w, mask)
+        return cls(values=vals, indices=idx, d_in=int(w.shape[-2]))
+
+    def spec(self) -> FormatSpec:
+        d_out, k = self.values.shape[-2:]
+        n = 1
+        for s in self.values.shape[:-2]:
+            n *= s
+        return FormatSpec(d_in=self.d_in, d_out=d_out, n_replicas=n,
+                          itemsize=jnp.dtype(self.values.dtype).itemsize,
+                          k=k, max_active=d_out, active_fraction=1.0)
+
+    @classmethod
+    def estimate_cost(cls, spec, batch, profile):
+        b = max(int(batch), 1)
+        gather_flops = 2.0 * b * spec.n_replicas * spec.d_out * spec.k
+        return max(cls.estimate_weight_bytes(spec) / profile.hbm_bytes_per_s,
+                   gather_flops / _gather_rate(profile, b))
+
+    @classmethod
+    def estimate_weight_bytes(cls, spec):
+        # values + int32 indices, n_out*k entries each
+        return spec.n_replicas * spec.d_out * spec.k * (spec.itemsize + 4)
+
+    def tuning_key(self, batch, *, backend=None):
+        d_out, k = self.values.shape[-2:]
+        return shape_tuning_key(
+            self.d_in, d_out, k, batch, backend=backend,
+            itemsize=jnp.dtype(self.values.dtype).itemsize)
+
+    @classmethod
+    def spec_tuning_key(cls, spec, batch, *, backend=None):
+        return shape_tuning_key(spec.d_in, spec.d_out, spec.k, batch,
+                                backend=backend, itemsize=spec.itemsize)
+
+    @classmethod
+    def abstract(cls, lead, d_in, d_out, k, dtype):
+        shape = (*lead, d_out, k)
+        return cls(values=jax.ShapeDtypeStruct(shape, jnp.dtype(dtype)),
+                   indices=jax.ShapeDtypeStruct(shape, jnp.int32), d_in=d_in)
+
+    def donate_refresh(self, w, mask, stats=None, *, donate=True):
+        stats = stats if stats is not None else _realized_stats(mask)
+        k = max(stats.k, 1)
+        shape = (*w.shape[:-2], w.shape[-1], k)
+        if (donate and self.values.shape == shape
+                and self.values.dtype == w.dtype):
+            vals, idx = _recondense_donated(w, mask, self.values,
+                                            self.indices, k=k)
+            return dataclasses.replace(self, values=vals, indices=idx)
+        return type(self).export_from_dense(w, mask, stats)
+
+    def refresh_values(self, w, mask, *, donate: bool = True):
+        """Regather ``w * mask`` at the stored indices (topology unchanged).
+
+        Exact because padding slots point at inactive rows
+        (dense_to_condensed's invariant), so they re-gather exact zeros.
+        ``donate=True`` writes the new values into the OLD values buffer
+        (see the donated-program block comment); indices are reused
+        verbatim either way.
+        """
+        if donate:
+            vals = _revalue_donated(w, mask, self.values, self.indices)
+        else:
+            vals = _gather_at_indices(w, mask,
+                                      self.indices).astype(self.values.dtype)
+        return dataclasses.replace(self, values=vals)
+
+
+@_register
+@dataclasses.dataclass(frozen=True, eq=False)
+class CondensedOverActive(SparseFormat):
+    """Fig. 4's combined point: drop ablated neurons, condense survivors.
+
+    values/indices cover only the ``a <= d_out`` surviving rows;
+    ``out_index`` scatters each surviving row back into the dense output
+    layout (out-of-range entries mark padding rows, dropped at scatter).
+    Exact for ANY mask — ablated outputs are exact zeros either way.
+    """
+    values: jax.Array                    # (lead..., a, k)
+    indices: jax.Array                   # (lead..., a, k) int32
+    out_index: jax.Array                 # (lead..., a) int32
+    d_in: int = 0
+    d_out: int = 0                       # dense output width (scatter target)
+
+    format_name: typing.ClassVar[str] = "condensed_over_active"
+    _array_fields: typing.ClassVar[tuple[str, ...]] = ("values", "indices",
+                                                       "out_index")
+    _static_fields: typing.ClassVar[tuple[str, ...]] = ("d_in", "d_out")
+
+    def apply(self, x, w=None):
+        return ops.condensed_over_active_linear_nd(
+            x, self.values.astype(x.dtype), self.indices, self.out_index,
+            self.d_out)
+
+    @classmethod
+    def export_from_dense(cls, w, mask, stats=None):
+        stats = stats if stats is not None else _realized_stats(mask)
+        vals, idx, oi = _condense_active_stack(w, mask, max(stats.k, 1),
+                                               max(stats.max_active, 1))
+        return cls(values=vals, indices=idx, out_index=oi,
+                   d_in=int(w.shape[-2]), d_out=int(w.shape[-1]))
+
+    def spec(self) -> FormatSpec:
+        a, k = self.values.shape[-2:]
+        n = 1
+        for s in self.values.shape[:-2]:
+            n *= s
+        return FormatSpec(d_in=self.d_in, d_out=self.d_out, n_replicas=n,
+                          itemsize=jnp.dtype(self.values.dtype).itemsize,
+                          k=k, max_active=a, active_fraction=a / max(self.d_out, 1))
+
+    @classmethod
+    def estimate_cost(cls, spec, batch, profile):
+        # priced at the EXPORTED row fraction (max_active rows per replica,
+        # padding included) — the kernel runs over all of them; the mean
+        # active fraction would under-price the path under uneven ablation
+        b = max(int(batch), 1)
+        row_frac = min(max(spec.max_active / max(spec.d_out, 1), 0.0), 1.0)
+        gather_flops = 2.0 * b * spec.n_replicas * spec.d_out * spec.k
+        return max(cls.estimate_weight_bytes(spec) / profile.hbm_bytes_per_s,
+                   row_frac * gather_flops / _gather_rate(profile, b))
+
+    @classmethod
+    def estimate_weight_bytes(cls, spec):
+        # max_active rows of k*(values+idx) plus the 4-byte out_index per row
+        return spec.n_replicas * spec.max_active * (spec.k * (spec.itemsize + 4)
+                                                    + 4)
+
+    def tuning_key(self, batch, *, backend=None):
+        a, k = self.values.shape[-2:]
+        return shape_tuning_key(
+            self.d_in, a, k, batch, backend=backend,
+            itemsize=jnp.dtype(self.values.dtype).itemsize)
+
+    @classmethod
+    def spec_tuning_key(cls, spec, batch, *, backend=None):
+        # the kernel runs over the (max_active, k) arrays the export built
+        return shape_tuning_key(spec.d_in, spec.max_active, spec.k, batch,
+                                backend=backend, itemsize=spec.itemsize)
+
+    @classmethod
+    def abstract(cls, lead, d_in, d_out, k, dtype):
+        # a = d_out static bound (no realized ablation counts at lowering
+        # time); the concrete export shrinks a to the real max active count
+        shape = (*lead, d_out, k)
+        return cls(values=jax.ShapeDtypeStruct(shape, jnp.dtype(dtype)),
+                   indices=jax.ShapeDtypeStruct(shape, jnp.int32),
+                   out_index=jax.ShapeDtypeStruct((*lead, d_out), jnp.int32),
+                   d_in=d_in, d_out=d_out)
+
+    def donate_refresh(self, w, mask, stats=None, *, donate=True):
+        stats = stats if stats is not None else _realized_stats(mask)
+        k, a = max(stats.k, 1), max(stats.max_active, 1)
+        shape = (*w.shape[:-2], a, k)
+        if (donate and self.values.shape == shape
+                and self.values.dtype == w.dtype):
+            vals, idx, oi = _recondense_active_donated(
+                w, mask, self.values, self.indices, self.out_index, k=k, a=a)
+            return dataclasses.replace(self, values=vals, indices=idx,
+                                       out_index=oi)
+        return type(self).export_from_dense(w, mask, stats)
+
+    def refresh_values(self, w, mask, *, donate: bool = True):
+        """Values-only regather. Padding ROWS may re-gather garbage from a
+        clipped column but are dropped by the out-of-range out_index at
+        scatter time, so the representation stays exact."""
+        if donate:
+            vals = _revalue_active_donated(w, mask, self.values, self.indices,
+                                           self.out_index)
+        else:
+            vals = _gather_at_indices(w, mask, self.indices,
+                                      self.out_index).astype(self.values.dtype)
+        return dataclasses.replace(self, values=vals)
+
+
+FORMATS: dict[str, type[SparseFormat]] = {
+    cls.format_name: cls
+    for cls in (MaskedDense, Condensed, StructuredFanIn, CondensedOverActive)
+}
+
+# formats whose exported arrays go stale as weights train (the rest read the
+# live weights at execution time)
+CONDENSED_FAMILY = (Condensed, CondensedOverActive)
+
+
+# ---------------------------------------------------------------------------
+# legacy dict-leaf deprecation shim
+# ---------------------------------------------------------------------------
+
+_LEGACY_KEYSETS: dict[frozenset, type[SparseFormat]] = {
+    frozenset({"values", "indices"}): Condensed,
+    frozenset({"values", "indices", "out_index"}): CondensedOverActive,
+    frozenset({"neuron_active"}): StructuredFanIn,
+}
+_RESERVED_KEYS = frozenset({"values", "indices", "out_index", "neuron_active"})
+
+
+def from_legacy_leaf(leaf: dict, *, d_in: int | None = None,
+                     d_out: int | None = None,
+                     warn: bool = True) -> SparseFormat:
+    """Upgrade a pre-redesign serving dict leaf to its format object.
+
+    Recognized key sets: ``{values, indices}`` -> Condensed,
+    ``{values, indices, out_index}`` -> CondensedOverActive,
+    ``{neuron_active}`` -> StructuredFanIn. A dict carrying any reserved key
+    alongside unrecognized extras RAISES instead of silently mis-dispatching
+    (the pre-redesign key-sniffing would have fallen through). ``d_in`` /
+    ``d_out`` fill the static geometry the dict never carried (autotune keys
+    need d_in; the scatter needs d_out — inferred from out_index's range
+    bound is not possible without a host sync, so 0 means "unknown, tuned
+    lookups disabled" unless the caller supplies it).
+    """
+    keys = frozenset(leaf)
+    cls = _LEGACY_KEYSETS.get(keys)
+    if cls is None:
+        raise ValueError(
+            f"unrecognized serving-leaf dict keys {sorted(keys)}: expected one "
+            f"of {sorted(sorted(s) for s in _LEGACY_KEYSETS)} (legacy leaves) "
+            f"or a repro.sparse.formats.SparseFormat instance")
+    if warn:
+        warnings.warn(
+            "dict-style serving leaves are deprecated; build "
+            f"repro.sparse.formats.{cls.__name__} objects instead",
+            DeprecationWarning, stacklevel=2)
+    if cls is Condensed:
+        return Condensed(values=leaf["values"], indices=leaf["indices"],
+                         d_in=int(d_in or 0))
+    if cls is CondensedOverActive:
+        if not d_out:
+            # the scatter target width is NOT recoverable from the leaf's
+            # arrays without a host sync — the pre-redesign dispatch read it
+            # off the dense weight at call time
+            raise ValueError(
+                "upgrading a legacy condensed_over_active leaf requires "
+                "d_out (the dense output width the out_index scatters into)")
+        return CondensedOverActive(
+            values=leaf["values"], indices=leaf["indices"],
+            out_index=leaf["out_index"], d_in=int(d_in or 0),
+            d_out=int(d_out))
+    return StructuredFanIn(neuron_active=leaf["neuron_active"],
+                           d_in=int(d_in or 0))
+
+
+def is_legacy_leaf(node) -> bool:
+    """Is this dict a pre-redesign serving leaf (or a malformed attempt)?"""
+    return isinstance(node, dict) and bool(_RESERVED_KEYS & set(node))
+
+
+def upgrade_serving_tree(tree, registry=None, *, warn: bool = True):
+    """Walk a serving pytree and upgrade every legacy dict leaf in place
+    (new tree returned; arrays shared). ``registry`` (iterable of
+    SparseStack) fills d_in/d_out for leaves at known stack paths. Dicts
+    with unrecognized reserved-key combinations raise."""
+    geo = {}
+    for s in (registry or []):
+        geo[s.path] = (s.d_in, s.d_out)
+
+    def rec(node, path):
+        if is_legacy_leaf(node):
+            d_in, d_out = geo.get(path, (None, None))
+            return from_legacy_leaf(node, d_in=d_in, d_out=d_out, warn=warn)
+        if isinstance(node, dict):
+            return {k: rec(v, path + (k,)) for k, v in node.items()}
+        return node
+
+    return rec(tree, ())

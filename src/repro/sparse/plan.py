@@ -9,9 +9,10 @@ with the condensed layout (condensed-over-active). This module is the single
 place that decision lives:
 
 * ``build_plan`` turns a trained (params, masks) pair into a ``Plan`` — a
-  per-``SparseStack`` representation choice (made by a bytes/FLOPs cost model
-  when ``path="auto"``, or forced by a fixed path name) plus the serving
-  pytree that plugs into the masks slot of prefill/decode_step.
+  per-``SparseStack`` representation choice (priced by each format's
+  ``estimate_cost`` from repro.sparse.formats when ``path="auto"``, or
+  forced by a fixed path name) plus the serving pytree (format-object
+  leaves) that plugs into the masks slot of prefill/decode_step.
 * ``Plan.refresh`` is the incremental export: given the trainer's per-stack
   mask-version counters, only stacks whose version changed since the last
   export are re-condensed — a live training job can serve without paying a
@@ -19,18 +20,22 @@ place that decision lives:
 * ``plan_for_shape`` / ``abstract_serving_tree`` are the allocation-free
   variants the dry-run uses to lower a planned decode program.
 
-Consumers: repro.launch.serve (``--path auto``), repro.launch.dryrun
-(``serve_plan`` program), benchmarks/serve_paths.py.
+Consumers: repro.launch.engine (``ServingEngine`` builds one plan per
+request group), repro.launch.serve (the thin CLI over the engine),
+repro.launch.dryrun (``serve_plan``/``serve_engine`` programs),
+benchmarks/serve_paths.py.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import distributions as D
 from repro.sparse import condensed as COND
+from repro.sparse import formats as F
 from repro.sparse import registry as REG
 
 REPRESENTATIONS = ("masked", "condensed", "structured", "condensed_over_active")
@@ -41,37 +46,62 @@ PATHS = REPRESENTATIONS + ("auto",)
 _ABLATION_EPS = 1e-6
 
 
-def _max_active_fraction(stack, stats: "COND.ExportStats") -> float:
-    """Exported-row fraction pricing condensed_over_active: the leaf carries
-    max_active rows per replica (stack-wide max, padding included)."""
-    return max(stats.max_active, 1) / max(stack.d_out, 1)
-
-
 @dataclasses.dataclass(frozen=True)
 class HardwareProfile:
-    """Throughput balance the cost model prices representations against.
+    """Throughput balance the format cost models price against.
 
     Defaults are TPU-v5e-like and deliberately coarse: the model only needs
     the RATIOS right (MXU ~50x the gather unit, arithmetic-intensity knee
     around B~100 for 10%-dense stacks) to reproduce the paper's batch-1 vs
-    batch-256 crossover. ``HardwareProfile.measure()`` replaces all three
+    batch-256 crossover. ``HardwareProfile.measure()`` replaces the
     constants with rates microbenchmarked on the live backend, so the auto
     crossover batch is derived from THIS machine (serve.py --profile
     measured; benchmarks/kernel_autotune.py validates predicted-vs-measured
     crossover).
+
+    The gather unit is calibrated at TWO batch points (``gather_flops_per_s``
+    at ``gather_small_batch``, ``gather_flops_per_s_large`` at
+    ``gather_large_batch``): the condensed gather's ACTIVATION traffic
+    (b*n_out*k gathered elements) falls off a cache cliff at large batch
+    that a single scalar rate cannot express. ``gather_rate(batch)``
+    log-interpolates between the two measured points; profiles with
+    ``gather_flops_per_s_large=None`` (e.g. the built-in default) behave as
+    the old single-rate model.
     """
     name: str = "tpu-v5e-like"
     hbm_bytes_per_s: float = 8.19e11     # ~819 GB/s HBM
     mxu_flops_per_s: float = 1.97e14     # dense MXU matmul throughput
-    gather_flops_per_s: float = 3.9e12   # VPU gather-multiply-accumulate
+    gather_flops_per_s: float = 3.9e12   # VPU gather-MAC at the SMALL point
+    gather_flops_per_s_large: float | None = None  # large-batch point (cliff)
+    gather_small_batch: int = 8
+    gather_large_batch: int = 512
+
+    def gather_rate(self, batch: int) -> float:
+        """Gather throughput at ``batch``: log-log interpolation between the
+        two calibration points, clamped outside them. Falls back to the
+        single small-point rate when no large-point calibration exists."""
+        small, large = self.gather_flops_per_s, self.gather_flops_per_s_large
+        if not large or self.gather_large_batch <= self.gather_small_batch:
+            return small
+        b = int(batch)
+        if b <= self.gather_small_batch:
+            return small
+        if b >= self.gather_large_batch:
+            return large
+        t = ((math.log(b) - math.log(self.gather_small_batch))
+             / (math.log(self.gather_large_batch)
+                - math.log(self.gather_small_batch)))
+        return math.exp((1.0 - t) * math.log(small) + t * math.log(large))
 
     @classmethod
     def measure(cls, *, stream_mb: float = 96.0,
                 matmul_shape: tuple[int, int, int] = (128, 2048, 1024),
                 gather_shape: tuple[int, int, int, int] = (8, 2048, 1024, 205),
+                gather_large_shape: tuple[int, int, int, int] = (512, 2048,
+                                                                 1024, 205),
                 reps: int = 5, use_cache: bool = True,
                 save: bool = True) -> "HardwareProfile":
-        """Microbenchmark the three cost-model rates on the live backend.
+        """Microbenchmark the cost-model rates on the live backend.
 
         * ``hbm_bytes_per_s``    — streaming ``x + 1`` over ``stream_mb`` of
                                    f32 (reads + writes both counted; the
@@ -84,16 +114,19 @@ class HardwareProfile:
         * ``mxu_flops_per_s``    — f32 matmul at ``matmul_shape = (b, d_in,
                                    d_out)``, a rectangular serving-batch
                                    shape rather than a peak-friendly square;
-        * ``gather_flops_per_s`` — the condensed gather-MAC in its jnp
-                                   formulation (kernels.ref) at
-                                   ``gather_shape = (b, d_in, n_out, k)``.
-                                   The default sits at the top of the batch-8
-                                   bucket at ~10% density in the same size
-                                   class as the matmul shape: the regime
-                                   where the masked/condensed crossover is
-                                   decided (a single scalar rate cannot also
-                                   capture the cache cliff gathers hit at
-                                   much larger batches).
+        * ``gather_flops_per_s`` / ``gather_flops_per_s_large`` — the
+                                   condensed gather-MAC in its jnp
+                                   formulation (kernels.ref) at TWO batch
+                                   points: ``gather_shape`` sits at the top
+                                   of the small-batch bucket (~10% density,
+                                   the regime where the masked/condensed
+                                   crossover is decided) and
+                                   ``gather_large_shape`` at a batch whose
+                                   gathered-activation working set blows the
+                                   cache — together they bound the cache
+                                   cliff the ROADMAP documents, so crossover
+                                   prediction tightens beyond one-bucket
+                                   accuracy.
 
         Each timing is the best of ``reps`` runs after a compile+warmup pass
         (min is the noise-robust estimator on shared hosts — see
@@ -113,14 +146,22 @@ class HardwareProfile:
         # calibrated with different shapes/reps (e.g. a quick low-fidelity
         # test run) must not be silently substituted for this request
         params = {"stream_mb": stream_mb, "matmul_shape": list(matmul_shape),
-                  "gather_shape": list(gather_shape), "reps": reps}
+                  "gather_shape": list(gather_shape),
+                  "gather_large_shape": list(gather_large_shape),
+                  "reps": reps}
         if use_cache:
             cached = AT.cached_profile(backend)
             if cached and cached.get("params") == params:
                 return cls(name=cached["name"],
                            hbm_bytes_per_s=cached["hbm_bytes_per_s"],
                            mxu_flops_per_s=cached["mxu_flops_per_s"],
-                           gather_flops_per_s=cached["gather_flops_per_s"])
+                           gather_flops_per_s=cached["gather_flops_per_s"],
+                           gather_flops_per_s_large=cached.get(
+                               "gather_flops_per_s_large"),
+                           gather_small_batch=cached.get("gather_small_batch",
+                                                         gather_shape[0]),
+                           gather_large_batch=cached.get(
+                               "gather_large_batch", gather_large_shape[0]))
 
         import statistics
 
@@ -138,21 +179,35 @@ class HardwareProfile:
         t_mm = AT._time_us(jax.jit(jnp.matmul), a, b_, reps=reps)
         mxu = 2.0 * mb * md_in * md_out / (t_mm * 1e-6)
 
-        gb, gd, gn, gk = gather_shape
-        x = jrandom.normal(jrandom.fold_in(key, 2), (gb, gd), jnp.float32)
-        vals = jrandom.normal(jrandom.fold_in(key, 3), (gn, gk), jnp.float32)
-        idx = jrandom.randint(jrandom.fold_in(key, 4), (gn, gk), 0, gd)
-        t_g = AT._time_us(jax.jit(REF.condensed_matmul_ref), x, vals, idx,
-                          reps=reps)
-        gather = 2.0 * gb * gn * gk / (t_g * 1e-6)
+        def gather_point(shape, salt):
+            gb, gd, gn, gk = shape
+            x = jrandom.normal(jrandom.fold_in(key, salt), (gb, gd),
+                               jnp.float32)
+            vals = jrandom.normal(jrandom.fold_in(key, salt + 1), (gn, gk),
+                                  jnp.float32)
+            idx = jrandom.randint(jrandom.fold_in(key, salt + 2), (gn, gk),
+                                  0, gd)
+            t_g = AT._time_us(jax.jit(REF.condensed_matmul_ref), x, vals, idx,
+                              reps=reps)
+            return 2.0 * gb * gn * gk / (t_g * 1e-6)
+
+        gather = gather_point(gather_shape, 2)
+        gather_large = gather_point(gather_large_shape, 5)
 
         prof = cls(name=f"measured-{backend}", hbm_bytes_per_s=hbm,
-                   mxu_flops_per_s=mxu, gather_flops_per_s=gather)
+                   mxu_flops_per_s=mxu, gather_flops_per_s=gather,
+                   gather_flops_per_s_large=gather_large,
+                   gather_small_batch=gather_shape[0],
+                   gather_large_batch=gather_large_shape[0])
         if save:
             AT.store_profile({"name": prof.name,
                               "hbm_bytes_per_s": prof.hbm_bytes_per_s,
                               "mxu_flops_per_s": prof.mxu_flops_per_s,
                               "gather_flops_per_s": prof.gather_flops_per_s,
+                              "gather_flops_per_s_large":
+                                  prof.gather_flops_per_s_large,
+                              "gather_small_batch": prof.gather_small_batch,
+                              "gather_large_batch": prof.gather_large_batch,
                               "params": params},
                              backend=backend)
         return prof
@@ -180,51 +235,25 @@ def stack_costs(stack, *, batch_size: int, itemsize: int, k: int,
                 max_active_fraction: float | None = None) -> dict[str, float]:
     """Estimated seconds per serving step for each representation.
 
-    Each representation's time is the roofline max of its HBM-byte term and
-    its compute term on the unit that executes it:
-
-    * masked     — reads the full dense weight + bool mask; dense MXU matmul.
-    * condensed  — reads n_out*k (values + int32 indices); VPU gather-MAC,
-                   so its compute term grows with batch ~50x faster than the
-                   MXU's (the reason masked wins back at large batch).
-    * structured — priced at what kernels.ops.structured_dense actually
-                   executes: a FULL dense matmul over the full weight (only
-                   the bool fan-in mask read is saved; neuron_active is
-                   n_out bools). A true column-gathered kernel that delivers
-                   the active-fraction saving is a ROADMAP follow-up — do
-                   not price savings the code doesn't deliver.
-    * condensed_over_active — the condensed terms scaled by the EXPORTED row
-                   fraction plus the 4-byte out_index per row. The exported
-                   leaf holds max_active rows per replica (stack-wide max,
-                   padding included) and the kernel runs over all of them,
-                   so the pricing fraction is ``max_active_fraction`` when
-                   the caller has realized stats (falling back to the mean
-                   ``active_fraction`` otherwise) — matching what
-                   Plan.weight_bytes reports; the mean would under-price the
-                   path under uneven ablation.
+    Pricing lives with the formats themselves now: each representation's
+    ``estimate_cost`` (repro.sparse.formats) is the roofline max of its
+    HBM-byte term (``estimate_weight_bytes``) and its compute term on the
+    unit that executes it. This wrapper builds the ``FormatSpec`` each class
+    prices from — ``max_active_fraction`` is the EXPORTED row fraction for
+    condensed_over_active (the leaf carries max_active rows per replica,
+    padding included; the mean ``active_fraction`` is the documented
+    fallback and would under-price the path under uneven ablation).
     """
     b = max(int(batch_size), 1)
-    n = stack.n_replicas
     act = min(max(active_fraction, 0.0), 1.0)
     row_frac = act if max_active_fraction is None else \
         min(max(max_active_fraction, 0.0), 1.0)
-    dense_bytes = n * stack.d_in * stack.d_out * itemsize
-    mask_bytes = n * stack.d_in * stack.d_out          # bool mask, 1 byte
-    cond_bytes = n * stack.d_out * k * (itemsize + 4)  # values + int32 idx
-    oi_bytes = n * stack.d_out * 4                     # int32 out_index/row
-    dense_flops = 2.0 * b * n * stack.d_in * stack.d_out
-    gather_flops = 2.0 * b * n * stack.d_out * k
-    return {
-        "masked": max((dense_bytes + mask_bytes) / profile.hbm_bytes_per_s,
-                      dense_flops / profile.mxu_flops_per_s),
-        "condensed": max(cond_bytes / profile.hbm_bytes_per_s,
-                         gather_flops / profile.gather_flops_per_s),
-        "structured": max((dense_bytes + n * stack.d_out) / profile.hbm_bytes_per_s,
-                          dense_flops / profile.mxu_flops_per_s),
-        "condensed_over_active": max(
-            row_frac * (cond_bytes + oi_bytes) / profile.hbm_bytes_per_s,
-            row_frac * gather_flops / profile.gather_flops_per_s),
-    }
+    spec = F.FormatSpec(d_in=stack.d_in, d_out=stack.d_out,
+                        n_replicas=stack.n_replicas, itemsize=itemsize,
+                        k=max(k, 1), max_active=row_frac * stack.d_out,
+                        active_fraction=act)
+    return {name: cls.estimate_cost(spec, b, profile)
+            for name, cls in F.FORMATS.items()}
 
 
 def select_representation(stack, *, batch_size: int, itemsize: int,
@@ -253,16 +282,19 @@ def select_representation(stack, *, batch_size: int, itemsize: int,
                          stats=stats)
 
 
-def _build_leaf(rep: str, weight, mask, stats: COND.ExportStats):
-    if rep == "masked":
-        return mask
-    if rep == "condensed":
-        return COND.condense_stack_leaf(weight, mask, stats)
-    if rep == "condensed_over_active":
-        return COND.condense_active_stack_leaf(weight, mask, stats)
-    if rep == "structured":
-        return COND.structured_stack_leaf(mask)
-    raise ValueError(f"unknown representation {rep!r}")
+def _max_active_fraction(stack, stats: COND.ExportStats) -> float:
+    """Exported-row fraction pricing condensed_over_active: the leaf carries
+    max_active rows per replica (stack-wide max, padding included)."""
+    return max(stats.max_active, 1) / max(stack.d_out, 1)
+
+
+def _build_leaf(rep: str, weight, mask, stats: COND.ExportStats) -> F.SparseFormat:
+    """Construct the format object for one stack (export_from_dense)."""
+    try:
+        cls = F.FORMATS[rep]
+    except KeyError:
+        raise ValueError(f"unknown representation {rep!r}") from None
+    return cls.export_from_dense(weight, mask, stats)
 
 
 def _decide(stack, path: str, *, batch_size: int, itemsize: int,
@@ -291,10 +323,12 @@ def _host_versions(mask_versions: dict) -> dict[str, int]:
 class Plan:
     """A built execution plan: decisions + serving pytree + export versions.
 
-    ``serving_tree`` plugs into the masks slot of prefill/decode_step;
-    repro.models.layers.linear dispatches per leaf. ``export_calls`` counts
-    per-stack leaf (re)builds over the plan's lifetime — the incremental-
-    export tests assert it only grows by the number of CHANGED stacks.
+    ``serving_tree`` plugs into the masks slot of prefill/decode_step; its
+    leaves are ``repro.sparse.formats`` objects and
+    repro.models.layers.linear dispatches on their type. ``export_calls``
+    counts per-stack leaf (re)builds over the plan's lifetime — the
+    incremental-export tests assert it only grows by the number of CHANGED
+    stacks.
     """
     cfg: object
     registry: list
@@ -310,6 +344,9 @@ class Plan:
     def representation_of(self, name: str) -> str:
         return self.decisions[name].representation
 
+    def format_of(self, name: str) -> type[F.SparseFormat]:
+        return F.FORMATS[self.decisions[name].representation]
+
     def refresh(self, params: dict, masks: dict, mask_versions: dict, *,
                 refresh_values: bool = True, donate: bool = True) -> list[str]:
         """Incremental re-export: re-condense ONLY stacks whose version moved.
@@ -324,23 +361,24 @@ class Plan:
         Version counters only track TOPOLOGY: between DST steps the weights
         keep training for every stack, so with ``refresh_values=True``
         (default) the unchanged condensed-family stacks get a values-only
-        regather at their stored indices — cheap (no argsort, no stats sync,
-        indices reused verbatim) but necessary for the serving snapshot to be
-        coherent with ``params``. Masked/structured leaves need nothing: they
-        read the live weights from ``params`` at execution time. Pass
-        ``refresh_values=False`` only when params are frozen (serving a fixed
-        checkpoint).
+        regather at their stored indices (``formats.*.refresh_values``) —
+        cheap (no argsort, no stats sync, indices reused verbatim) but
+        necessary for the serving snapshot to be coherent with ``params``.
+        Masked/structured leaves need nothing: they read the live weights
+        from ``params`` at execution time. Pass ``refresh_values=False``
+        only when params are frozen (serving a fixed checkpoint).
 
         Memory/host-transfer contract (a live serving job refreshes in
         place): the re-condense and the regather run as jitted device
-        programs with the plan's OLD {values, indices} buffers DONATED —
-        whenever the new leaf's shapes match (topology rewired at unchanged
-        fan-in, or values-only), the new arrays are written into the old
-        buffers, so the refresh never doubles the plan's weight footprint.
-        No weight data is fetched to the host: the only device_get traffic
-        is the version counters and (for changed stacks) the per-stack
-        scalar stats. ``donate=False`` preserves the old leaf arrays for
-        callers that still hold references to them.
+        programs with the plan's OLD format buffers DONATED
+        (``formats.*.donate_refresh``) — whenever the new leaf's shapes
+        match (topology rewired at unchanged fan-in, or values-only), the
+        new arrays are written into the old buffers, so the refresh never
+        doubles the plan's weight footprint. No weight data is fetched to
+        the host: the only device_get traffic is the version counters and
+        (for changed stacks) the per-stack scalar stats. ``donate=False``
+        preserves the old leaf arrays for callers that still hold
+        references to them.
         """
         versions = _host_versions(mask_versions)
         by_name = {s.name: s for s in self.registry}
@@ -368,22 +406,20 @@ class Plan:
                 else:
                     leaf = _build_leaf(rep, weight, mask, stats[s.name])
                 self.decisions[s.name] = dec
-                REG._set_path(self.serving_tree, s.path, leaf)
+                REG.set_path(self.serving_tree, s.path, leaf)
                 self.mask_versions[s.name] = versions[s.name]
                 self.export_calls += 1
         if refresh_values:
             for s in self.registry:
                 if s.name in changed_names:
                     continue
-                rep = self.decisions[s.name].representation
-                if rep not in ("condensed", "condensed_over_active"):
-                    continue
                 leaf = REG.get_path(self.serving_tree, s.path)
-                REG._set_path(self.serving_tree, s.path,
-                              COND.revalue_stack_leaf(
-                                  REG.get_path(params, s.path),
-                                  REG.get_path(masks, s.path), leaf,
-                                  donate=donate))
+                if not isinstance(leaf, F.CONDENSED_FAMILY):
+                    continue
+                REG.set_path(self.serving_tree, s.path,
+                             leaf.refresh_values(REG.get_path(params, s.path),
+                                                 REG.get_path(masks, s.path),
+                                                 donate=donate))
                 self.value_refreshes += 1
         return [s.name for s in changed]
 
@@ -393,29 +429,18 @@ class Plan:
         The reference is the masked-dense serving path's traffic — dense
         weights PLUS the bool mask it also reads — so a plan that resolves
         every stack to masked reports exactly the reference (ratio 1.0).
-        condensed_over_active is priced at its EXPORTED size: max_active rows
-        per replica (stack-wide max, padding included) of k*(values+idx)
-        plus the 4-byte out_index per row — not the mean active fraction,
-        which would understate the footprint under uneven ablation.
+        Each format prices its own exported size
+        (``formats.*.estimate_weight_bytes``); condensed_over_active is
+        priced at max_active rows per replica (stack-wide max, padding
+        included), not the mean active fraction.
         """
         itemsize = jnp.dtype(self.cfg.param_dtype).itemsize
         masked_ref = serving = 0
         for s in self.registry:
             dec = self.decisions[s.name]
-            n = s.n_replicas
-            k = max(dec.stats.k, 1)
-            a = max(dec.stats.max_active, 1)
-            d_bytes = n * s.d_in * s.d_out * itemsize
-            m_bytes = d_bytes + n * s.d_in * s.d_out          # + bool mask
-            serving += {
-                "masked": m_bytes,
-                # structured_dense still reads the FULL dense weight (plus
-                # n_out neuron_active bools); only the fan-in mask is saved
-                "structured": d_bytes + n * s.d_out,
-                "condensed": n * s.d_out * k * (itemsize + 4),
-                "condensed_over_active": n * a * (k * (itemsize + 4) + 4),
-            }[dec.representation]
-            masked_ref += m_bytes
+            spec = F.spec_for_stack(s, dec.stats, itemsize)
+            serving += F.FORMATS[dec.representation].estimate_weight_bytes(spec)
+            masked_ref += F.MaskedDense.estimate_weight_bytes(spec)
         return serving, masked_ref
 
     def describe(self) -> str:
@@ -456,10 +481,10 @@ def build_plan(cfg, registry, params: dict, masks: dict, *,
         dec = _decide(s, path, batch_size=batch_size, itemsize=itemsize,
                       stats=stats[s.name], profile=profile)
         decisions[s.name] = dec
-        REG._set_path(tree, s.path,
-                      _build_leaf(dec.representation,
-                                  REG.get_path(params, s.path),
-                                  REG.get_path(masks, s.path), stats[s.name]))
+        REG.set_path(tree, s.path,
+                     _build_leaf(dec.representation,
+                                 REG.get_path(params, s.path),
+                                 REG.get_path(masks, s.path), stats[s.name]))
         calls += 1
     return Plan(cfg=cfg, registry=registry, path=path, batch_size=batch_size,
                 profile=profile, decisions=decisions, serving_tree=tree,
@@ -491,31 +516,20 @@ def abstract_serving_tree(cfg, registry, reps: dict[str, str],
                           param_dtype=None) -> dict:
     """ShapeDtypeStruct serving pytree for ``reps`` (no allocation).
 
-    condensed-over-active uses a = d_out as the static bound (the dry-run has
-    no realized ablation counts); the concrete export shrinks a to the real
-    max active-neuron count.
+    Leaves are format objects with ShapeDtypeStruct fields (each format's
+    ``abstract`` classmethod owns its own leaf schema). condensed-over-
+    active uses a = d_out as the static bound (the dry-run has no realized
+    ablation counts); the concrete export shrinks a to the real max
+    active-neuron count.
     """
     dt = jnp.dtype(param_dtype or cfg.param_dtype)
     out: dict = {}
     for s in registry:
         rep = reps[s.name]
+        try:
+            cls = F.FORMATS[rep]
+        except KeyError:
+            raise ValueError(f"unknown representation {rep!r}") from None
         k = D.fan_in_from_density(s.d_in, s.density)
-        if rep == "masked":
-            leaf = jax.ShapeDtypeStruct((*s.lead, s.d_in, s.d_out), jnp.bool_)
-        elif rep == "condensed":
-            shape = (*s.lead, s.d_out, k)
-            leaf = {"values": jax.ShapeDtypeStruct(shape, dt),
-                    "indices": jax.ShapeDtypeStruct(shape, jnp.int32)}
-        elif rep == "condensed_over_active":
-            shape = (*s.lead, s.d_out, k)
-            leaf = {"values": jax.ShapeDtypeStruct(shape, dt),
-                    "indices": jax.ShapeDtypeStruct(shape, jnp.int32),
-                    "out_index": jax.ShapeDtypeStruct((*s.lead, s.d_out),
-                                                      jnp.int32)}
-        elif rep == "structured":
-            leaf = {"neuron_active": jax.ShapeDtypeStruct((*s.lead, s.d_out),
-                                                          jnp.bool_)}
-        else:
-            raise ValueError(f"unknown representation {rep!r}")
-        REG._set_path(out, s.path, leaf)
+        REG.set_path(out, s.path, cls.abstract(s.lead, s.d_in, s.d_out, k, dt))
     return out

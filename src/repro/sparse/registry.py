@@ -142,11 +142,15 @@ def k_fan_map(cfg, registry: Sequence[SparseStack]) -> dict[str, int]:
 # pytree helpers
 # ---------------------------------------------------------------------------
 
-def _set_path(tree: dict, path: tuple, leaf) -> None:
+def set_path(tree: dict, path: tuple, leaf) -> None:
     node = tree
     for p in path[:-1]:
         node = node.setdefault(p, {})
     node[path[-1]] = leaf
+
+
+# pre-formats-API name; the serving/plan/export modules now use set_path
+_set_path = set_path
 
 
 def get_path(tree: dict, path: tuple):

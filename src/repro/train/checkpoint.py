@@ -20,6 +20,11 @@ import jax
 import numpy as np
 
 
+def _formats():
+    from repro.sparse import formats  # lazy: keeps checkpoint deps minimal
+    return formats
+
+
 def _flatten(tree, prefix=()):
     out = {}
     if isinstance(tree, dict):
@@ -30,6 +35,13 @@ def _flatten(tree, prefix=()):
             out.update(_flatten(v, prefix + (f"#{i}",)))
     elif hasattr(tree, "_fields"):  # NamedTuple
         for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), prefix + (str(k),)))
+    elif isinstance(tree, _formats().SparseFormat):
+        # serving-format node: array fields are saved under the SAME keys the
+        # legacy dict leaves used ("…/values", "…/indices", …), so old
+        # checkpoints restore into format templates and vice versa; static
+        # geometry is carried by the restore template, not the archive
+        for k in tree._array_fields:
             out.update(_flatten(getattr(tree, k), prefix + (str(k),)))
     else:
         out["/".join(prefix)] = tree
@@ -95,6 +107,22 @@ def restore(ckpt_dir: str, step: int, template):
         if hasattr(tree, "_fields"):
             return type(tree)(**{k: build(getattr(tree, k), prefix + (str(k),))
                                  for k in tree._fields})
+        if isinstance(tree, _formats().SparseFormat):
+            # rebuild the format around restored arrays; statics come from
+            # the template. Two legacy layouts restore here: dict leaves
+            # (saved under the same field-name keys) resolve directly, and a
+            # pre-formats MASKED leaf — a bare bool array saved at the stack
+            # path itself — is picked up by the single-array fallback below
+            # (shape-guarded so a wrong-rank hit can never slip through).
+            def _build_field(name, leaf):
+                key = "/".join(prefix + (name,))
+                bare = "/".join(prefix)
+                if (key not in data and len(tree._array_fields) == 1
+                        and bare in data
+                        and tuple(data[bare].shape) == tuple(leaf.shape)):
+                    return build(leaf, prefix)
+                return build(leaf, prefix + (name,))
+            return tree.map_arrays_with_names(_build_field)
         if isinstance(tree, (list, tuple)):
             return type(tree)(build(v, prefix + (f"#{i}",)) for i, v in enumerate(tree))
         key = "/".join(prefix)

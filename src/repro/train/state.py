@@ -15,14 +15,21 @@ class TrainState(NamedTuple):
     step: jax.Array            # () int32
     params: Any                # model parameter pytree
     opt_state: Any
-    masks: Any                 # sparse boolean masks (paths mirror params)
+    masks: Any                 # sparse boolean masks (paths mirror params).
+                               # ALWAYS the raw training layout — serving
+                               # representations (repro.sparse.formats
+                               # objects) live in Plan/ServingEngine trees,
+                               # never in TrainState, so checkpoints and the
+                               # straight-through masked matmul are
+                               # unaffected by the serving-format API
     neuron_active: Any         # per-stack (lead..., d_out) bool
     grad_accum: Any            # dense-grad accumulator for the saliency window
                                # ({} when grad_accum_for_saliency == 1)
     mask_versions: Any         # {stack name: () int32} — bumped by the DST
                                # step when that stack's mask changed; the
-                               # serving Plan.refresh re-condenses only stacks
-                               # whose counter moved (incremental export)
+                               # serving-side Plan.refresh / ServingEngine
+                               # .refresh re-condense only stacks whose
+                               # counter moved (incremental export)
     rng: jax.Array
 
 

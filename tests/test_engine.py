@@ -1,0 +1,260 @@
+"""ServingEngine: admission, plan-key grouping, mixed-batch fusion,
+token-identity, retire semantics, and live-training refresh.
+
+The acceptance criteria made executable: a mixed-batch submission set lands
+in the plan-key groups the cost model predicts (batch bucket x format
+signature — shared with the autotune cache keys), a group's requests fuse
+into one decode program dispatch per (prompt_len, gen_len) slab, and every
+request's greedy tokens are identical to a standalone ``generate`` run —
+batching must never change a stream's tokens.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.launch import engine as ENG
+from repro.launch import serve
+from repro.models import model as M
+from repro.sparse import autotune as AT
+from repro.sparse import plan as PLAN
+from repro.sparse import registry as REG
+
+
+@pytest.fixture(scope="module")
+def smoke_setup():
+    cfg = configs.get_smoke_config("qwen3-1.7b")
+    key = jax.random.PRNGKey(0)
+    reg = REG.build_registry(cfg)
+    params = M.init_params(cfg, key, REG.k_fan_map(cfg, reg))
+    masks = REG.init_sparsity_state(cfg, key, reg)["masks"]
+    return cfg, reg, params, masks
+
+
+def _prompts(b, t, seed=1, vocab=512):
+    return jax.random.randint(jax.random.PRNGKey(seed), (b, t), 0, vocab)
+
+
+# ---------------------------------------------------------------------------
+# grouping by plan key
+# ---------------------------------------------------------------------------
+
+def test_mixed_batch_submissions_land_in_predicted_groups(smoke_setup):
+    """Mixed batch sizes: each request groups under (its batch bucket x the
+    format signature at that bucket). On the smoke config the cost model
+    picks condensed for small buckets and masked by bucket 512, so the
+    B=200 request must NOT share a group with the B<=8 ones."""
+    cfg, reg, params, masks = smoke_setup
+    eng = ENG.ServingEngine(cfg, params, masks, reg, path="auto")
+    r1 = eng.submit(_prompts(1, 8, seed=1, vocab=cfg.vocab_size), 4)
+    r2 = eng.submit(_prompts(2, 8, seed=2, vocab=cfg.vocab_size), 4)
+    r3 = eng.submit(_prompts(3, 8, seed=3, vocab=cfg.vocab_size), 4)
+    r4 = eng.submit(_prompts(200, 8, seed=4, vocab=cfg.vocab_size), 4)
+
+    groups = eng.pending_groups()
+    by_id = {rid: key for key, rids in groups.items() for rid in rids}
+    # predicted keys: bucket(1)=1, bucket(2)=bucket(3)=8, bucket(200)=512
+    assert by_id[r1].batch_bucket == 1
+    assert by_id[r2].batch_bucket == 8
+    assert by_id[r2] == by_id[r3] == eng.plan_key(3)
+    assert by_id[r4].batch_bucket == 512
+    assert by_id[r4] != by_id[r2]
+    # bucketing is the autotune bucketing — plan keys and kernel-tune cache
+    # entries come from the same calibration point
+    for rid, key in by_id.items():
+        assert key.batch_bucket in AT.BATCH_BUCKETS
+    # format signatures: condensed at the decode buckets, masked at 512
+    assert all(rep == "condensed" for _, rep in by_id[r2].formats)
+    assert all(rep == "masked" for _, rep in by_id[r4].formats)
+
+
+def test_fixed_path_groups_only_by_bucket(smoke_setup):
+    cfg, reg, params, masks = smoke_setup
+    eng = ENG.ServingEngine(cfg, params, masks, reg, path="condensed")
+    for key_batch in (1, 2, 200):
+        key = eng.plan_key(key_batch)
+        assert all(rep == "condensed" for _, rep in key.formats)
+    assert eng.plan_key(2) == eng.plan_key(8)
+    assert eng.plan_key(2) != eng.plan_key(1)
+
+
+def test_abstract_plan_key_matches_engine_grouping(smoke_setup):
+    """The dry-run's allocation-free key derivation agrees with the live
+    engine whenever no ablation has happened yet (same contract as
+    plan_for_shape vs build_plan)."""
+    cfg, reg, params, masks = smoke_setup
+    eng = ENG.ServingEngine(cfg, params, masks, reg, path="auto")
+    for batch in (1, 4, 200):
+        key, reps = ENG.abstract_plan_key(cfg, reg, batch)
+        assert key == eng.plan_key(batch)
+        assert reps == dict(key.formats)
+
+
+# ---------------------------------------------------------------------------
+# execution: fusion + token identity
+# ---------------------------------------------------------------------------
+
+def test_group_fuses_same_shape_requests_into_one_slab(smoke_setup):
+    cfg, reg, params, masks = smoke_setup
+    eng = ENG.ServingEngine(cfg, params, masks, reg, path="auto")
+    eng.submit(_prompts(2, 8, seed=1, vocab=cfg.vocab_size), 4)
+    eng.submit(_prompts(3, 8, seed=2, vocab=cfg.vocab_size), 4)
+    reports = eng.step()
+    assert len(reports) == 1
+    assert reports[0].n_slabs == 1          # same (T, gen): one dispatch
+    assert reports[0].total_batch == 5
+    assert sorted(reports[0].request_ids) == [0, 1]
+
+
+def test_engine_tokens_identical_to_standalone_generate(smoke_setup):
+    """Greedy decode is batch-independent: a request fused into a group slab
+    must produce exactly the tokens it produces alone — for every path."""
+    cfg, reg, params, masks = smoke_setup
+    pa = _prompts(2, 8, seed=11, vocab=cfg.vocab_size)
+    pb = _prompts(3, 8, seed=12, vocab=cfg.vocab_size)
+    for path in ("masked", "condensed", "auto"):
+        eng = ENG.ServingEngine(cfg, params, masks, reg, path=path)
+        ra = eng.submit(pa, 6)
+        rb = eng.submit(pb, 6)
+        eng.step()
+        tree = serve.build_serving_masks(cfg, reg, params, masks, path,
+                                         batch_size=eng.plan_key(2).batch_bucket)
+        for rid, prompts in ((ra, pa), (rb, pb)):
+            [res] = eng.retire(rid)
+            ref = serve.generate(cfg, params, tree, prompts, 6)
+            np.testing.assert_array_equal(np.array(res.tokens), np.array(ref))
+            assert res.plan_key == eng.plan_key(prompts.shape[0])
+
+
+def test_engine_matches_pre_redesign_serve_cli_output(smoke_setup):
+    """The acceptance criterion: engine-served greedy decode is
+    token-identical to the direct prefill+scan-decode path (what serve.py
+    executed before the engine existed) for every format."""
+    cfg, reg, params, masks = smoke_setup
+    prompts = _prompts(2, 8, seed=21, vocab=cfg.vocab_size)
+    out_masked = serve.generate(cfg, params, masks, prompts, 6)
+    for path in PLAN.PATHS:
+        if path == "structured":
+            continue  # documented: not output-equivalent for fine masks
+        eng = ENG.ServingEngine(cfg, params, masks, reg, path=path)
+        rid = eng.submit(prompts, 6)
+        eng.step()
+        [res] = eng.retire(rid)
+        np.testing.assert_array_equal(np.array(res.tokens),
+                                      np.array(out_masked))
+
+
+def test_mixed_shape_requests_in_one_group_decode_correctly(smoke_setup):
+    """Different (prompt_len, gen_len) under one plan key: separate slabs,
+    shared plan, correct per-request shapes and tokens."""
+    cfg, reg, params, masks = smoke_setup
+    eng = ENG.ServingEngine(cfg, params, masks, reg, path="condensed")
+    pa = _prompts(2, 8, seed=31, vocab=cfg.vocab_size)
+    pb = _prompts(2, 6, seed=32, vocab=cfg.vocab_size)
+    ra = eng.submit(pa, 4)
+    rb = eng.submit(pb, 5)
+    reports = eng.step()
+    assert len(reports) == 1 and reports[0].n_slabs == 2
+    tree = serve.build_serving_masks(cfg, reg, params, masks, "condensed")
+    [res_a] = eng.retire(ra)
+    [res_b] = eng.retire(rb)
+    assert res_a.tokens.shape == (2, 8 + 4)
+    assert res_b.tokens.shape == (2, 6 + 5)
+    np.testing.assert_array_equal(np.array(res_a.tokens),
+                                  np.array(serve.generate(cfg, params, tree,
+                                                          pa, 4)))
+    np.testing.assert_array_equal(np.array(res_b.tokens),
+                                  np.array(serve.generate(cfg, params, tree,
+                                                          pb, 5)))
+
+
+# ---------------------------------------------------------------------------
+# lifecycle
+# ---------------------------------------------------------------------------
+
+def test_submit_validates_and_retire_pops(smoke_setup):
+    cfg, reg, params, masks = smoke_setup
+    eng = ENG.ServingEngine(cfg, params, masks, reg, path="auto")
+    with pytest.raises(ValueError):
+        eng.submit(jnp.zeros((4,), jnp.int32), 4)     # not (B, T)
+    with pytest.raises(ValueError):
+        eng.submit(_prompts(1, 4, vocab=cfg.vocab_size), 0)
+    with pytest.raises(ValueError):
+        ENG.ServingEngine(cfg, params, masks, reg, path="csr")
+
+    rid = eng.submit(_prompts(1, 4, vocab=cfg.vocab_size), 2)
+    assert eng.retire(rid) == []                       # not stepped yet
+    eng.step()
+    assert len(eng.retire(rid)) == 1
+    assert eng.retire(rid) == []                       # popped exactly once
+    assert eng.retire() == []
+
+
+def test_plan_cache_is_reused_across_steps(smoke_setup):
+    cfg, reg, params, masks = smoke_setup
+    eng = ENG.ServingEngine(cfg, params, masks, reg, path="auto")
+    for seed in (41, 42):
+        eng.submit(_prompts(2, 8, seed=seed, vocab=cfg.vocab_size), 2)
+        eng.step()
+    key = eng.plan_key(2)
+    plan = eng.plan_for(key)
+    assert eng.plan_for(key) is plan                   # one plan per key
+    assert plan.export_calls == len(reg)               # built exactly once
+
+
+def test_engine_refresh_keeps_serving_live_training(smoke_setup):
+    """engine.refresh propagates trained weights into every cached plan
+    (values-only regathers when topology is unchanged) and later steps
+    serve the NEW weights."""
+    cfg, reg, params, masks = smoke_setup
+    eng = ENG.ServingEngine(cfg, params, masks, reg, path="condensed",
+                            mask_versions={s.name: 0 for s in reg})
+    prompts = _prompts(2, 8, seed=51, vocab=cfg.vocab_size)
+    eng.submit(prompts, 4)
+    eng.step()
+    eng.retire()
+
+    new_params = jax.tree.map(lambda x: x, params)
+    for s in reg:
+        w = REG.get_path(new_params, s.path)
+        REG.set_path(new_params, s.path, w * 1.25)
+    changed = eng.refresh(new_params, masks, {s.name: 0 for s in reg})
+    assert all(v == [] for v in changed.values())      # no topology change
+
+    rid = eng.submit(prompts, 4)
+    eng.step()
+    [res] = eng.retire(rid)
+    ref = serve.generate(cfg, new_params, masks, prompts, 4)
+    np.testing.assert_array_equal(np.array(res.tokens), np.array(ref))
+
+
+def test_step_failure_keeps_unexecuted_requests_pending(smoke_setup,
+                                                        monkeypatch):
+    """An exception mid-step must not silently drop queued work: requests
+    whose slab never executed stay pending and a later step serves them."""
+    cfg, reg, params, masks = smoke_setup
+    eng = ENG.ServingEngine(cfg, params, masks, reg, path="condensed")
+    ra = eng.submit(_prompts(1, 8, seed=61, vocab=cfg.vocab_size), 3)
+    rb = eng.submit(_prompts(2, 8, seed=62, vocab=cfg.vocab_size), 3)
+
+    calls = {"n": 0}
+    real = ENG._timed_serve
+
+    def flaky(*args, **kw):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("injected slab failure")
+        return real(*args, **kw)
+
+    monkeypatch.setattr(ENG, "_timed_serve", flaky)
+    with pytest.raises(RuntimeError, match="injected"):
+        eng.step()
+    # NEITHER request was served; BOTH are still queued (the failed slab's
+    # request included — it produced no result)
+    pending = [rid for rids in eng.pending_groups().values() for rid in rids]
+    assert sorted(pending) == sorted([ra, rb])
+    assert eng.retire() == []
+
+    eng.step()   # retry succeeds
+    assert {r.id for r in eng.retire()} == {ra, rb}

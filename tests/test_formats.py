@@ -1,0 +1,372 @@
+"""Protocol conformance for the four serving formats (repro.sparse.formats).
+
+One parametrized suite runs over MaskedDense / Condensed / StructuredFanIn /
+CondensedOverActive and asserts the protocol contracts the plan, engine and
+kernel layers rely on:
+
+* pytree round-trip through ``jit`` and ``device_put`` (arrays traced,
+  statics preserved);
+* ``apply`` agreement with the masked-dense reference on shared topologies
+  (all masks for the exact formats; ablation-only masks for structured);
+* ``cost`` >= 0 and monotone (non-decreasing) in batch;
+* ``tuning_key`` stability (same instance -> same string; survives the
+  pytree round-trip; None only for formats with no tunable kernel);
+* the legacy dict-leaf deprecation shim: recognized key sets upgrade,
+  unrecognized extras raise.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.models import layers as L
+from repro.sparse import formats as F
+from repro.sparse import plan as PLAN
+
+D_IN, D_OUT, K = 32, 48, 5
+ALL_FORMATS = tuple(F.FORMATS.values())
+
+
+@pytest.fixture(scope="module")
+def wm():
+    """A (weight, fine-grained mask, ablation-only mask) triple."""
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (D_IN, D_OUT), jnp.float32)
+    mask = topology.random_constant_fan_in_mask(
+        jax.random.fold_in(key, 1), D_IN, D_OUT, K)
+    # ablate the last quarter of output neurons on top of the fan-in mask
+    cut = D_OUT - D_OUT // 4
+    abl = mask & (jnp.arange(D_OUT) < cut)[None, :]
+    abl_only = jnp.broadcast_to((jnp.arange(D_OUT) < cut)[None, :],
+                                (D_IN, D_OUT))
+    return w, mask, abl, abl_only
+
+
+def _export(cls, w, mask):
+    return cls.export_from_dense(w, mask)
+
+
+# ---------------------------------------------------------------------------
+# pytree round-trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cls", ALL_FORMATS, ids=lambda c: c.format_name)
+def test_pytree_roundtrip_through_jit_and_device_put(cls, wm):
+    w, mask = wm[0], wm[2]   # ablated mask: exercises every format's arrays
+    fmt = _export(cls, w, mask)
+
+    rt = jax.jit(lambda f: f)(fmt)
+    assert type(rt) is type(fmt)
+    for name in cls._static_fields:
+        assert getattr(rt, name) == getattr(fmt, name)
+    for name in cls._array_fields:
+        np.testing.assert_array_equal(np.array(getattr(rt, name)),
+                                      np.array(getattr(fmt, name)))
+
+    dp = jax.device_put(fmt)
+    assert type(dp) is type(fmt)
+    for name in cls._array_fields:
+        np.testing.assert_array_equal(np.array(getattr(dp, name)),
+                                      np.array(getattr(fmt, name)))
+
+
+@pytest.mark.parametrize("cls", ALL_FORMATS, ids=lambda c: c.format_name)
+def test_scan_slices_stacked_formats_per_layer(cls, wm):
+    """The model scans layer stacks with the masks pytree as scan xs: a
+    format whose arrays carry a leading layer dim must slice per step and
+    reconstruct with statics intact."""
+    w, mask = wm[0], wm[2]
+    stacked = _export(cls, jnp.stack([w, w * 2.0]), jnp.stack([mask, mask]))
+
+    def body(carry, fmt_i):
+        assert type(fmt_i) is cls
+        return carry, fmt_i.apply(carry, w)
+
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, D_IN))
+    _, ys = jax.lax.scan(body, x, stacked)
+    assert ys.shape == (2, 2, D_OUT)
+
+
+# ---------------------------------------------------------------------------
+# apply exactness vs masked reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cls", ALL_FORMATS, ids=lambda c: c.format_name)
+@pytest.mark.parametrize("which", ["fanin", "ablated", "ablation_only"])
+def test_apply_matches_masked_reference(cls, which, wm):
+    w, mask, abl, abl_only = wm
+    m = {"fanin": mask, "ablated": abl, "ablation_only": abl_only}[which]
+    if cls is F.StructuredFanIn and which != "ablation_only":
+        pytest.skip("structured is exact only for ablation-only masks "
+                    "(documented Fig. 4 contract)")
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, D_IN))
+    ref = x @ (w * m)
+    got = _export(cls, w, m).apply(x, w)
+    np.testing.assert_allclose(np.array(got), np.array(ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("cls", ALL_FORMATS, ids=lambda c: c.format_name)
+def test_layers_linear_dispatches_on_type(cls, wm):
+    w, _, abl, abl_only = wm
+    m = abl_only if cls is F.StructuredFanIn else abl
+    x = jax.random.normal(jax.random.PRNGKey(4), (3, D_IN))
+    got = L.linear(x, w, _export(cls, w, m))
+    np.testing.assert_allclose(np.array(got), np.array(x @ (w * m)),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cls", ALL_FORMATS, ids=lambda c: c.format_name)
+def test_cost_nonnegative_and_monotone_in_batch(cls, wm):
+    w, mask = wm[0], wm[2]
+    fmt = _export(cls, w, mask)
+    for profile in (PLAN.DEFAULT_PROFILE,
+                    dataclasses.replace(PLAN.DEFAULT_PROFILE,
+                                        gather_flops_per_s_large=1.0e12)):
+        prev = 0.0
+        for batch in (1, 2, 8, 32, 128, 512, 2048):
+            c = fmt.cost(batch, profile)
+            assert np.isfinite(c) and c >= 0.0
+            assert c >= prev  # more rows never cost less
+            prev = c
+
+
+@pytest.mark.parametrize("cls", ALL_FORMATS, ids=lambda c: c.format_name)
+def test_estimate_weight_bytes_positive_and_matches_instance_spec(cls, wm):
+    w, mask = wm[0], wm[2]
+    fmt = _export(cls, w, mask)
+    b = cls.estimate_weight_bytes(fmt.spec())
+    assert b > 0
+    # condensed-over-active must undercut plain condensed once ablated
+    if cls is F.CondensedOverActive:
+        cond = F.Condensed.export_from_dense(w, mask)
+        assert b < F.Condensed.estimate_weight_bytes(cond.spec())
+
+
+def test_two_point_gather_rate_interpolates_and_clamps():
+    prof = dataclasses.replace(PLAN.DEFAULT_PROFILE,
+                               gather_flops_per_s=4.0e12,
+                               gather_flops_per_s_large=1.0e12,
+                               gather_small_batch=8, gather_large_batch=512)
+    assert prof.gather_rate(1) == prof.gather_rate(8) == 4.0e12
+    assert prof.gather_rate(512) == prof.gather_rate(4096) == 1.0e12
+    mid = prof.gather_rate(64)  # geometric midpoint of 8..512
+    assert 1.0e12 < mid < 4.0e12
+    assert mid == pytest.approx(2.0e12, rel=1e-6)
+    # single-point profiles keep the old scalar behavior
+    assert PLAN.DEFAULT_PROFILE.gather_rate(1) == \
+        PLAN.DEFAULT_PROFILE.gather_rate(2048) == \
+        PLAN.DEFAULT_PROFILE.gather_flops_per_s
+
+
+# ---------------------------------------------------------------------------
+# tuning keys
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cls", ALL_FORMATS, ids=lambda c: c.format_name)
+def test_tuning_key_stability(cls, wm):
+    w, mask = wm[0], wm[2]
+    fmt = _export(cls, w, mask)
+    k1 = fmt.tuning_key(4, backend="cpu")
+    k2 = fmt.tuning_key(4, backend="cpu")
+    assert k1 == k2
+    rt = jax.jit(lambda f: f)(fmt)
+    assert rt.tuning_key(4, backend="cpu") == k1
+    if cls in F.CONDENSED_FAMILY:
+        assert isinstance(k1, str) and "/b8" in k1  # batch 4 -> bucket 8
+        # batches in the same bucket share the key; other buckets do not
+        assert fmt.tuning_key(8, backend="cpu") == k1
+        assert fmt.tuning_key(9, backend="cpu") != k1
+    else:
+        assert k1 is None  # no tunable kernel behind masked/structured
+
+
+def test_tuning_key_matches_ops_trace_time_derivation(wm):
+    """The key a Condensed instance reports is byte-for-byte the key the
+    kernel dispatch derives from its argument shapes at trace time."""
+    w, mask = wm[0], wm[1]
+    fmt = F.Condensed.export_from_dense(w, mask)
+    n_out, k = fmt.values.shape[-2:]
+    assert fmt.tuning_key(4, backend="cpu") == F.shape_tuning_key(
+        D_IN, n_out, k, 4, backend="cpu",
+        itemsize=jnp.dtype(fmt.values.dtype).itemsize)
+    # and the spec-level (allocation-free) derivation agrees
+    assert F.Condensed.spec_tuning_key(fmt.spec(), 4, backend="cpu") == \
+        fmt.tuning_key(4, backend="cpu")
+
+
+# ---------------------------------------------------------------------------
+# donate_refresh / refresh_values
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cls", F.CONDENSED_FAMILY,
+                         ids=lambda c: c.format_name)
+def test_donate_refresh_aliases_old_buffers_on_matching_avals(cls, wm):
+    w, mask = wm[0], wm[2]
+    stats = F._realized_stats(mask)
+    fmt = cls.export_from_dense(w, mask, stats)
+    old_ptrs = {n: getattr(fmt, n).unsafe_buffer_pointer()
+                for n in cls._array_fields}
+    new = fmt.donate_refresh(w * 1.5, mask, stats)
+    for n in cls._array_fields:
+        assert getattr(fmt, n).is_deleted()
+        assert getattr(new, n).unsafe_buffer_pointer() == old_ptrs[n]
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, D_IN))
+    np.testing.assert_allclose(np.array(new.apply(x, w)),
+                               np.array(x @ (w * 1.5 * mask)), atol=1e-5)
+
+
+@pytest.mark.parametrize("cls", F.CONDENSED_FAMILY,
+                         ids=lambda c: c.format_name)
+def test_refresh_values_reuses_indices_verbatim(cls, wm):
+    w, mask = wm[0], wm[2]
+    fmt = cls.export_from_dense(w, mask)
+    new = fmt.refresh_values(w * 2.0, mask, donate=False)
+    assert new.indices is fmt.indices
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, D_IN))
+    np.testing.assert_allclose(np.array(new.apply(x, w)),
+                               np.array(x @ (w * 2.0 * mask)), atol=1e-5)
+
+
+@pytest.mark.parametrize("cls", (F.MaskedDense, F.StructuredFanIn),
+                         ids=lambda c: c.format_name)
+def test_live_weight_formats_refresh_values_is_identity(cls, wm):
+    w, mask = wm[0], wm[3]
+    fmt = _export(cls, w, mask)
+    assert fmt.refresh_values(w * 2.0, mask) is fmt
+
+
+# ---------------------------------------------------------------------------
+# legacy dict-leaf deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_legacy_condensed_dict_upgrades(wm):
+    w, mask = wm[0], wm[1]
+    fmt = F.Condensed.export_from_dense(w, mask)
+    with pytest.warns(DeprecationWarning):
+        up = F.from_legacy_leaf({"values": fmt.values,
+                                 "indices": fmt.indices}, d_in=D_IN)
+    assert isinstance(up, F.Condensed) and up.d_in == D_IN
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, D_IN))
+    np.testing.assert_array_equal(np.array(up.apply(x)),
+                                  np.array(fmt.apply(x)))
+
+
+def test_legacy_coa_and_structured_dicts_upgrade(wm):
+    w, _, abl, abl_only = wm
+    coa = F.CondensedOverActive.export_from_dense(w, abl)
+    with pytest.warns(DeprecationWarning):
+        up = F.from_legacy_leaf(coa.to_legacy_dict(), d_in=D_IN, d_out=D_OUT)
+    assert isinstance(up, F.CondensedOverActive) and up.d_out == D_OUT
+    st = F.StructuredFanIn.export_from_dense(w, abl_only)
+    with pytest.warns(DeprecationWarning):
+        up2 = F.from_legacy_leaf({"neuron_active": st.neuron_active})
+    assert isinstance(up2, F.StructuredFanIn)
+
+
+def test_legacy_coa_dict_without_d_out_raises(wm):
+    w, _, abl, _ = wm
+    coa = F.CondensedOverActive.export_from_dense(w, abl)
+    with pytest.raises(ValueError, match="d_out"):
+        F.from_legacy_leaf(coa.to_legacy_dict(), d_in=D_IN, warn=False)
+
+
+def test_unrecognized_dict_keys_raise_clear_error(wm):
+    w, mask = wm[0], wm[1]
+    fmt = F.Condensed.export_from_dense(w, mask)
+    bad = {"values": fmt.values, "indices": fmt.indices, "scales": fmt.values}
+    with pytest.raises(ValueError, match="unrecognized serving-leaf"):
+        F.from_legacy_leaf(bad, warn=False)
+    # …including through the linear dispatch (no silent fall-through)
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, D_IN))
+    with pytest.raises(ValueError, match="unrecognized serving-leaf"):
+        L.linear(x, w, bad)
+
+
+def test_linear_accepts_legacy_dict_with_deprecation(wm):
+    w, mask = wm[0], wm[1]
+    fmt = F.Condensed.export_from_dense(w, mask)
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, D_IN))
+    with pytest.warns(DeprecationWarning):
+        got = L.linear(x, w, fmt.to_legacy_dict())
+    np.testing.assert_allclose(np.array(got), np.array(x @ (w * mask)),
+                               atol=1e-5)
+
+
+def test_upgrade_serving_tree_walks_nested_dicts(wm):
+    w, mask = wm[0], wm[1]
+    fmt = F.Condensed.export_from_dense(w, mask)
+    tree = {"blocks": {"w_gate": fmt.to_legacy_dict(), "ln": w}}
+    up = F.upgrade_serving_tree(tree, warn=False)
+    assert isinstance(up["blocks"]["w_gate"], F.Condensed)
+    assert up["blocks"]["ln"] is w  # non-leaf arrays untouched
+
+
+def test_checkpoint_restores_legacy_dict_archive_into_format_template(
+        wm, tmp_path):
+    """Format array fields are checkpointed under the SAME keys the legacy
+    dict leaves used, so an old archive (dict serving tree) restores into a
+    new format-template tree — and a format tree round-trips."""
+    import numpy as np_
+    from repro.train import checkpoint as CKPT
+
+    w, mask = wm[0], wm[1]
+    fmt = F.Condensed.export_from_dense(w, mask)
+
+    # "old" archive: dict leaves (the pre-redesign layout)
+    old_state = {"step": jnp.zeros((), jnp.int32),
+                 "serving": {"blocks": {"w_gate": fmt.to_legacy_dict()}}}
+    CKPT.save(str(tmp_path), type("S", (), {
+        "step": 0, "_asdict": lambda self=None: old_state})())
+
+    template = {"step": jnp.zeros((), jnp.int32),
+                "serving": {"blocks": {"w_gate": F.Condensed(
+                    values=jnp.zeros_like(fmt.values),
+                    indices=jnp.zeros_like(fmt.indices), d_in=D_IN)}}}
+    restored = CKPT.restore(str(tmp_path), 0, template)
+    leaf = restored["serving"]["blocks"]["w_gate"]
+    assert isinstance(leaf, F.Condensed) and leaf.d_in == D_IN
+    np_.testing.assert_array_equal(np_.array(leaf.values),
+                                   np_.array(fmt.values))
+    np_.testing.assert_array_equal(np_.array(leaf.indices),
+                                   np_.array(fmt.indices))
+
+    # and the format tree itself checkpoints (save walks format nodes)
+    CKPT.save(str(tmp_path), type("S", (), {
+        "step": 1, "_asdict": lambda self=None: {
+            "step": jnp.ones((), jnp.int32),
+            "serving": {"blocks": {"w_gate": fmt}}}})())
+    again = CKPT.restore(str(tmp_path), 1, template)
+    np_.testing.assert_array_equal(
+        np_.array(again["serving"]["blocks"]["w_gate"].values),
+        np_.array(fmt.values))
+
+    # pre-formats MASKED leaf: a bare bool array saved AT the stack path
+    # restores into a MaskedDense template via the single-array fallback
+    CKPT.save(str(tmp_path), type("S", (), {
+        "step": 2, "_asdict": lambda self=None: {
+            "step": 2 * jnp.ones((), jnp.int32),
+            "serving": {"blocks": {"w_gate": mask}}}})())
+    mtemplate = {"step": jnp.zeros((), jnp.int32),
+                 "serving": {"blocks": {"w_gate": F.MaskedDense(
+                     mask=jnp.zeros_like(mask))}}}
+    back = CKPT.restore(str(tmp_path), 2, mtemplate)
+    leaf = back["serving"]["blocks"]["w_gate"]
+    assert isinstance(leaf, F.MaskedDense)
+    np_.testing.assert_array_equal(np_.array(leaf.mask), np_.array(mask))
+
+
+def test_legacy_key_access_still_works(wm):
+    w, mask = wm[0], wm[2]
+    coa = F.CondensedOverActive.export_from_dense(w, mask)
+    assert "out_index" in coa and "neuron_active" not in coa
+    np.testing.assert_array_equal(np.array(coa["values"]),
+                                  np.array(coa.values))
+    with pytest.raises(KeyError):
+        coa["mask"]

@@ -1,7 +1,6 @@
 """HLO static cost model: trip-count awareness, dot flops, collectives."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch import hlo_analysis as H
 

@@ -113,6 +113,8 @@ def test_serve_main_cli_auto_plans_and_matches_masked(capsys):
     out_auto = serve.main(common + ["--path", "auto"])
     np.testing.assert_array_equal(np.array(out_masked), np.array(out_auto))
     logs = capsys.readouterr().out
-    assert "[plan] path=auto batch=2" in logs
+    # the engine plans at the request's BATCH BUCKET (shared with the
+    # autotune cache keys), so --batch 2 is planned at bucket 8
+    assert "[plan] path=auto batch=8" in logs
     assert "-> condensed" in logs  # B=2 is decode-like: gather wins
     assert "[serve:auto]" in logs

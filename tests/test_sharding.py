@@ -1,6 +1,5 @@
 """Sharding rules: specs are rank-correct and divisible for every arch."""
 import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
@@ -43,7 +42,6 @@ def test_param_specs_divisible(name):
     cfg = configs.get_config(name)
     mesh = FakeMesh({"data": 16, "model": 16})
     rules = ShardingRules(cfg, mesh)
-    reg = REG.build_registry(cfg)
     state_sds = jax.eval_shape(lambda k: init_train_state(cfg, k), jax.random.PRNGKey(0))
 
     def check(tree):
@@ -130,3 +128,24 @@ def test_single_device_mesh_runs_sharded_step():
     placed = jax.device_put(state.params, sh)
     assert float(jax.tree.leaves(placed)[0].sum()) == pytest.approx(
         float(jax.tree.leaves(state.params)[0].sum()), rel=1e-6)
+
+
+def test_masked_dense_format_leaf_shards_like_its_weight():
+    """A MaskedDense serving leaf has the weight's (lead, d_in, d_out) shape
+    and must inherit the weight's TP sharding — the legacy bare-bool masked
+    leaf sat AT the stack path and got the weight spec; the format's 'mask'
+    field must not silently fall back to replicated."""
+    from repro.sparse import formats as F
+    cfg = configs.get_config("qwen3-1.7b")
+    rules = ShardingRules(cfg, FakeMesh({"data": 2, "model": 2}))
+    shape = (cfg.n_layers, cfg.q_dim, cfg.d_model)
+    weight_spec = rules.param_spec(("blocks", "wo"), _Leaf(shape))
+    legacy_spec = rules.param_spec(("blocks", "wo"), _Leaf(shape))
+    fmt_spec = rules.param_spec(("blocks", "wo", "mask"), _Leaf(shape))
+    assert fmt_spec == legacy_spec == weight_spec
+    assert any(ax is not None for ax in fmt_spec)  # really TP-sharded
+
+    # and through the tree mapper: a serving tree with a MaskedDense node
+    tree = {"blocks": {"wo": F.MaskedDense(mask=_Leaf(shape))}}
+    specs = _map_with_path(lambda p, l: rules.param_spec(p, l), tree)
+    assert specs["blocks"]["wo"].mask == weight_spec

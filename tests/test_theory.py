@@ -27,7 +27,6 @@ def test_const_fan_in_always_smallest():
 
 
 def test_mean_is_one():
-    import jax.numpy as jnp
     # E[||z||^2] = 1 for the normalized init — simulation check
     n, k = 64, 8
     def mean_norm(kind):

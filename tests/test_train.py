@@ -1,6 +1,5 @@
 """Training runtime: optimizer masking, DST-in-the-loop, checkpoint/restart."""
 import dataclasses
-import os
 import tempfile
 
 import jax
@@ -104,8 +103,6 @@ def test_loss_decreases_with_dst():
     state = trainer.init_or_restore(jax.random.PRNGKey(0))
     data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32, batch_size=4, seed=0)
     batches = (jax.tree.map(jnp.asarray, data.batch(i)) for i in range(10_000))
-    losses = []
-    log = lambda msg: losses.append(msg)
     state = trainer.fit(state, batches, 50, log_fn=lambda *_: None)
     # measure directly
     step = jax.jit(make_train_step(cfg, trainer.registry, lambda s: jnp.float32(0.0)))
