@@ -57,6 +57,18 @@ SMOKE_SHAPES = [
     ("smoke_w_down", 128, 64, 26),
 ]
 
+# Structured (column-gathered) kernel shapes: (name, d_in, a_pad, d_out) —
+# the ablation-only Fig. 4 point, a_pad = lane-padded surviving columns.
+# Same tuned>=default contract as the condensed shapes, under the
+# kind="structured" tuning keys.
+FULL_STRUCT_SHAPES = [
+    ("vit_b16_mlp@abl50", 3072, 384, 768),
+    ("mlp_4k@abl75", 4096, 256, 1024),
+]
+SMOKE_STRUCT_SHAPES = [
+    ("smoke_struct_gate", 64, 128, 256),
+]
+
 # Crossover-validation shapes must sit in the ROOFLINE regime the cost model
 # describes: big enough that per-dispatch overhead is negligible against the
 # byte/FLOP terms. The smoke-config stack shapes (64x128) are NOT — a tiny
@@ -87,22 +99,40 @@ SWEEP = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256,
 _time_us = AT._time_us  # best-of-reps (noise-robust on shared hosts)
 
 
+def _tune_row(name, b, res, **geometry) -> dict:
+    return {
+        "shape": name, "batch": b, "bucket": AT.batch_bucket(b), **geometry,
+        "default_us": round(res.default_us, 2),
+        "tuned_us": round(res.us, 2),
+        "tuned_block_b": res.block_b,   # null -> decode variant
+        "tuned_block_n": res.block_n,
+        "speedup_vs_default": round(res.speedup_vs_default, 3),
+        "interpret": res.interpret,
+        "table_us": {kk: round(v, 2) for kk, v in res.table.items()},
+    }
+
+
 def tune_rows(shapes, batches, reps: int) -> list[dict]:
     rows = []
     for name, d_in, n_out, k in shapes:
         for b in batches:
             res = AT.autotune_blocks(b, d_in, n_out, k, reps=reps)
-            rows.append({
-                "shape": name, "batch": b, "d_in": d_in, "n_out": n_out,
-                "k": k, "bucket": AT.batch_bucket(b),
-                "default_us": round(res.default_us, 2),
-                "tuned_us": round(res.us, 2),
-                "tuned_block_b": res.block_b,   # null -> decode variant
-                "tuned_block_n": res.block_n,
-                "speedup_vs_default": round(res.speedup_vs_default, 3),
-                "interpret": res.interpret,
-                "table_us": {kk: round(v, 2) for kk, v in res.table.items()},
-            })
+            rows.append(_tune_row(name, b, res, kind="condensed", d_in=d_in,
+                                  n_out=n_out, k=k))
+    return rows
+
+
+def structured_tune_rows(shapes, batches, reps: int) -> list[dict]:
+    """Tuned-vs-default rows for the column-gathered structured kernel
+    (kind="structured" cache keys; winner is the argmin of the same table
+    the untimed VMEM-budget default sits in)."""
+    rows = []
+    for name, d_in, a_pad, d_out in shapes:
+        for b in batches:
+            res = AT.autotune_structured_blocks(b, d_in, a_pad, d_out,
+                                                reps=reps)
+            rows.append(_tune_row(name, b, res, kind="structured", d_in=d_in,
+                                  n_out=a_pad, d_out=d_out))
     return rows
 
 
@@ -223,13 +253,15 @@ def crossover_rows(shapes, reps: int, retries: int = 2) -> list[dict]:
 def run(smoke: bool = True, reps: int = 0):
     """benchmarks.run harness entry: CSV rows only (no JSON artifact)."""
     shapes = SMOKE_SHAPES if smoke else FULL_SHAPES
+    sshapes = SMOKE_STRUCT_SHAPES if smoke else FULL_STRUCT_SHAPES
     xshapes = SMOKE_CROSSOVER_SHAPES if smoke else FULL_CROSSOVER_SHAPES
     reps = reps or (3 if smoke else 5)
     rows = []
-    for r in tune_rows(shapes, DECODE_BATCHES, reps):
+    for r in (tune_rows(shapes, DECODE_BATCHES, reps)
+              + structured_tune_rows(sshapes, DECODE_BATCHES, reps)):
         blk = ("decode" if r["tuned_block_b"] is None
                else str(r["tuned_block_b"])) + f"x{r['tuned_block_n']}"
-        rows.append((f"kernel_autotune/{r['shape']}/b{r['batch']}",
+        rows.append((f"kernel_autotune/{r['kind']}/{r['shape']}/b{r['batch']}",
                      r["tuned_us"],
                      f"blocks={blk};default_us={r['default_us']:.1f};"
                      f"speedup={r['speedup_vs_default']:.2f}x"))
@@ -251,17 +283,19 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     shapes = SMOKE_SHAPES if args.smoke else FULL_SHAPES
+    sshapes = SMOKE_STRUCT_SHAPES if args.smoke else FULL_STRUCT_SHAPES
     xshapes = SMOKE_CROSSOVER_SHAPES if args.smoke else FULL_CROSSOVER_SHAPES
     reps = args.reps or (3 if args.smoke else 5)
     backend = jax.default_backend()
 
     print(f"[kernel_autotune] backend={backend} "
           f"interpret={cm.default_interpret()}")
-    tuned = tune_rows(shapes, DECODE_BATCHES, reps)
+    tuned = (tune_rows(shapes, DECODE_BATCHES, reps)
+             + structured_tune_rows(sshapes, DECODE_BATCHES, reps))
     for r in tuned:
         blk = ("decode" if r["tuned_block_b"] is None
                else str(r["tuned_block_b"])) + f"x{r['tuned_block_n']}"
-        print(f"kernel_autotune/{r['shape']}/b{r['batch']},"
+        print(f"kernel_autotune/{r['kind']}/{r['shape']}/b{r['batch']},"
               f"{r['tuned_us']:.1f},"
               f"blocks={blk};default_us={r['default_us']:.1f};"
               f"speedup={r['speedup_vs_default']:.2f}x")

@@ -20,8 +20,22 @@ jitter into the trajectory JSON).
 
 Besides the CSV rows, ``main`` emits machine-readable
 ``BENCH_serve_paths.json`` (``schema_version`` stamped — v2 renamed the
-per-row representation record to ``formats``) so the perf trajectory is
-tracked across PRs.
+per-row representation record to ``formats``; v3 added per-row
+``predicted_us_per_tok`` from the plan's cost model and the high-ablation
+sweep) so the perf trajectory — and the COST MODEL's pricing fidelity
+against it — is tracked across PRs.
+
+Pricing-fidelity column: ``predicted_us_per_tok`` is the cost model's
+estimate for the row's chosen per-stack representations at the plan's batch
+bucket, summed over the SPARSE stacks only (attention/norm/embedding math is
+not priced), so it is a tracking signal for relative drift across PRs, not
+an absolute latency prediction.
+
+High-ablation sweep (``--ablations``): each listed fraction re-runs every
+(path, batch) cell with that fraction of output neurons ablated on top of
+the constant fan-in masks — the structured rows then exercise the
+column-gathered Pallas kernel and the condensed_over_active rows the fused
+scatter-epilogue kernel with genuinely dropped rows.
 
 CPU caveat (same as condensed_bench): the Pallas kernel runs in interpret
 mode here, so absolute condensed timings do not transfer to the TPU/GPU
@@ -36,81 +50,132 @@ import json
 import statistics
 
 import jax
+import jax.numpy as jnp
 
 from repro import configs
 from repro.launch.engine import ServingEngine
 from repro.models import model as M
+from repro.sparse import condensed as COND
 from repro.sparse import plan as PLAN
 from repro.sparse import registry as REG
 
-# v2: rows record per-stack "formats" (typed representation names) instead
-# of a bare path string; engine plan-key metadata (batch bucket) added
-SCHEMA_VERSION = 2
+# v3: per-row "predicted_us_per_tok" (plan cost model at the bucket, sparse
+# stacks only) + per-row "ablation" fraction from the high-ablation sweep
+SCHEMA_VERSION = 3
 
 BATCHES = (1, 32, 256)
+ABLATIONS = (0.0, 0.5)
 PROMPT_LEN = 8
 GEN_LEN = 8
 WARMUP = 2
 REPS = 3
 
 
+def _ablate_masks(reg, masks, frac: float):
+    """Zero the last ``frac`` of each stack's output columns on top of the
+    constant fan-in masks (SRigL-style neuron ablation)."""
+    if not frac:
+        return masks
+    out = {}
+    for s in reg:
+        m = REG.get_path(masks, s.path)
+        cut = s.d_out - max(1, int(s.d_out * frac))
+        REG.set_path(out, s.path, m & (jnp.arange(s.d_out) < cut)[None, :])
+    return out
+
+
+def _masked_predicted_us_per_tok(reg, stats, bucket: int, itemsize: int,
+                                 profile) -> float:
+    """Cost-model us/token for the all-masked fast path (the one path served
+    without building a Plan; every other row reads its plan's own est_s so
+    the recorded prediction is EXACTLY what the plan priced)."""
+    total = sum(
+        PLAN.stack_costs(s, batch_size=bucket, itemsize=itemsize,
+                         k=max(stats[s.name].k, 1),
+                         active_fraction=stats[s.name].active_fraction,
+                         profile=profile)["masked"]
+        for s in reg)
+    return total * 1e6 / max(bucket, 1)
+
+
 def run(batches=BATCHES, arch: str = "qwen3-1.7b", results: list | None = None,
         profile: PLAN.HardwareProfile = PLAN.DEFAULT_PROFILE,
-        warmup: int = WARMUP, reps: int = REPS):
+        warmup: int = WARMUP, reps: int = REPS, ablations=ABLATIONS):
     cfg = configs.get_smoke_config(arch)
     key = jax.random.PRNGKey(0)
     reg = REG.build_registry(cfg)
     params = M.init_params(cfg, key, REG.k_fan_map(cfg, reg))
-    masks = REG.init_sparsity_state(cfg, key, reg)["masks"]
+    base_masks = REG.init_sparsity_state(cfg, key, reg)["masks"]
+    itemsize = jnp.dtype(cfg.param_dtype).itemsize
 
     rows = []
-    for batch in batches:
-        prompts = jax.random.randint(key, (batch, PROMPT_LEN), 0, cfg.vocab_size)
-        for path in PLAN.PATHS:
-            engine = ServingEngine(cfg, params, masks, reg, path=path,
-                                   profile=profile)
-            pkey = engine.plan_key(batch)
-            if path == "masked":
-                formats_chosen = {s.name: "masked" for s in reg}
-                ratio = 1.0
-            else:
-                plan = engine.plan_for(pkey)
-                formats_chosen = {n: d.representation
-                                  for n, d in plan.decisions.items()}
-                sb, db = plan.weight_bytes()
-                ratio = sb / db
+    for ablation in ablations:
+        masks = _ablate_masks(reg, base_masks, ablation)
+        stats = COND.export_stats(reg, masks)
+        tag = f"/abl{ablation:g}" if ablation else ""
+        for batch in batches:
+            prompts = jax.random.randint(key, (batch, PROMPT_LEN), 0,
+                                         cfg.vocab_size)
+            for path in PLAN.PATHS:
+                engine = ServingEngine(cfg, params, masks, reg, path=path,
+                                       profile=profile)
+                pkey = engine.plan_key(batch)
+                if path == "masked":
+                    formats_chosen = {s.name: "masked" for s in reg}
+                    ratio = 1.0
+                    predicted = _masked_predicted_us_per_tok(
+                        reg, stats, pkey.batch_bucket, itemsize, profile)
+                else:
+                    plan = engine.plan_for(pkey)
+                    formats_chosen = {n: d.representation
+                                      for n, d in plan.decisions.items()}
+                    sb, db = plan.weight_bytes()
+                    ratio = sb / db
+                    # the plan's OWN cost table (what the auto decision was
+                    # actually priced with), summed over the sparse stacks
+                    predicted = sum(
+                        d.est_s[d.representation]
+                        for d in plan.decisions.values()
+                    ) * 1e6 / max(pkey.batch_bucket, 1)
 
-            def timed_pass():
-                rid = engine.submit(prompts, GEN_LEN)
-                engine.step()
-                [res] = engine.retire(rid)
-                return res.tok_s
+                def timed_pass():
+                    rid = engine.submit(prompts, GEN_LEN)
+                    engine.step()
+                    [res] = engine.retire(rid)
+                    return res.tok_s
 
-            # warmup passes absorb jit compile + dispatch-cache effects...
-            for _ in range(max(warmup, 1)):
-                timed_pass()
-            # ...then report the median of the timed passes
-            toks = [timed_pass() for _ in range(max(reps, 1))]
-            tok_s = statistics.median(toks)
-            # decode-only per-token cost (prefill excluded — the claim under
-            # benchmark is decode throughput, and interpret-mode prefill would
-            # otherwise dominate the condensed column)
-            rows.append((f"serve_paths/{path}/b{batch}",
-                         1e6 / tok_s,
-                         f"tok_s={tok_s:.1f};weight_bytes_ratio={ratio:.3f}"))
-            if results is not None:
-                results.append({
-                    "arch": arch, "batch": batch, "path": path,
-                    "plan_key_bucket": pkey.batch_bucket,
-                    "tok_s": round(tok_s, 2),
-                    "us_per_tok": round(1e6 / tok_s, 2),
-                    "tok_s_spread": [round(t, 2) for t in sorted(toks)],
-                    "weight_bytes_ratio": round(ratio, 4),
-                    "formats": formats_chosen,
-                    # the profile only prices the auto rows' decisions, but is
-                    # recorded on every row for a self-describing artifact
-                    "profile": profile.name,
-                })
+                # warmup passes absorb jit compile + dispatch-cache effects...
+                for _ in range(max(warmup, 1)):
+                    timed_pass()
+                # ...then report the median of the timed passes
+                toks = [timed_pass() for _ in range(max(reps, 1))]
+                tok_s = statistics.median(toks)
+                # decode-only per-token cost (prefill excluded — the claim
+                # under benchmark is decode throughput, and interpret-mode
+                # prefill would otherwise dominate the condensed column)
+                rows.append((f"serve_paths/{path}/b{batch}{tag}",
+                             1e6 / tok_s,
+                             f"tok_s={tok_s:.1f};weight_bytes_ratio={ratio:.3f};"
+                             f"pred_us={predicted:.2f}"))
+                if results is not None:
+                    results.append({
+                        "arch": arch, "batch": batch, "path": path,
+                        "ablation": ablation,
+                        "plan_key_bucket": pkey.batch_bucket,
+                        "tok_s": round(tok_s, 2),
+                        "us_per_tok": round(1e6 / tok_s, 2),
+                        # cost-model estimate at the BUCKET over the sparse
+                        # stacks only — a pricing-fidelity tracking signal,
+                        # not an absolute latency prediction
+                        "predicted_us_per_tok": round(predicted, 6),
+                        "tok_s_spread": [round(t, 2) for t in sorted(toks)],
+                        "weight_bytes_ratio": round(ratio, 4),
+                        "formats": formats_chosen,
+                        # the profile only prices the auto rows' decisions,
+                        # but is recorded on every row for a self-describing
+                        # artifact
+                        "profile": profile.name,
+                    })
     return rows
 
 
@@ -126,16 +191,22 @@ def main(argv=None):
                     default="default",
                     help="hardware profile pricing the auto plan: 'measured' "
                          "calibrates on this machine (HardwareProfile.measure)")
+    ap.add_argument("--ablations", default=",".join(map(str, ABLATIONS)),
+                    help="comma-separated ablated-neuron fractions; each "
+                         "re-runs the path x batch grid (0.5 exercises the "
+                         "gathered structured and fused COA kernels)")
     ap.add_argument("--out", default="BENCH_serve_paths.json",
                     help="machine-readable results (perf trajectory across PRs)")
     args = ap.parse_args(argv)
     batches = tuple(int(b) for b in args.batches.split(","))
+    ablations = tuple(float(a) for a in args.ablations.split(","))
     profile = (PLAN.HardwareProfile.measure()
                if args.profile == "measured" else PLAN.DEFAULT_PROFILE)
 
     results: list = []
     rows = run(batches=batches, arch=args.arch, results=results,
-               profile=profile, warmup=args.warmup, reps=args.reps)
+               profile=profile, warmup=args.warmup, reps=args.reps,
+               ablations=ablations)
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     if args.out:
@@ -147,6 +218,7 @@ def main(argv=None):
             "gen_len": GEN_LEN,
             "warmup": args.warmup,
             "reps": args.reps,
+            "ablations": list(ablations),
             "profile": profile.name,
             "backend": jax.default_backend(),
             "pallas_interpret_note": "condensed timings are interpret-mode on "

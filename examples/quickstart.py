@@ -144,6 +144,48 @@ def main():
               f"{res.block_b or 'decode'}x{res.block_n} "
               f"({res.us:.0f} us vs 128x128 default {res.default_us:.0f} us)")
 
+    # 8. ablation-aware kernels (Fig. 4 "structured" / combined points): the
+    #    structured path now executes a column-GATHERED Pallas matmul — only
+    #    the surviving columns' weight bytes stream per decode step and the
+    #    fused one-hot epilogue writes exact zeros for ablated neurons
+    #    in-kernel (no standalone scatter dispatch; same epilogue fuses the
+    #    condensed-over-active scatter). On an ablation-ONLY stack (active
+    #    columns fully dense) the cost model therefore lets structured WIN
+    #    auto selection outright at decode shapes, and the kernel's measured
+    #    step time scales with the active fraction (interpret-mode timings
+    #    on this container — rankings transfer, absolute numbers do not).
+    import types
+
+    from repro.kernels import structured_matmul as SM
+    from repro.sparse import formats as F
+    d_in, d_out, b = 512, 512, 8
+    key8 = jax.random.PRNGKey(8)
+    w8 = jax.random.normal(key8, (d_in, d_out))
+    x8 = jax.random.normal(jax.random.fold_in(key8, 1), (b, d_in))
+    base = None
+    for frac in (1.0, 0.5, 0.25):
+        a = int(d_out * frac)
+        ai = jnp.sort(jax.random.permutation(
+            jax.random.fold_in(key8, a), d_out)[:a]).astype(jnp.int32)
+        a_pad = SM.padded_active_count(a, d_out)
+        ai = jnp.pad(ai, (0, a_pad - a), constant_values=d_out)
+        t = autotune._time_us(
+            lambda x, w, ai: SM.structured_matmul(x, w, ai), x8, w8, ai,
+            reps=3)
+        base = base or t
+        print(f"structured kernel active={frac:.2f}: {t:8.1f} us "
+              f"({t / base:.2f}x of dense-width, interpret mode)")
+    stack = types.SimpleNamespace(name="mlp@abl50", d_in=3072, d_out=1024,
+                                  n_replicas=1)
+    stats = F.ExportStats(k=3072, max_active=512, active_fraction=0.5,
+                          min_fan_in=3072)  # ablation-only: survivors dense
+    for bb in (1, 256):
+        dec = PLAN.select_representation(stack, batch_size=bb, itemsize=4,
+                                         stats=stats, profile=prof)
+        est = {r: f"{v * 1e6:.1f}us" for r, v in dec.est_s.items()}
+        print(f"auto @ b={bb} (ablation-only stack) -> {dec.representation} "
+              f"{est}")
+
 
 if __name__ == "__main__":
     main()

@@ -166,19 +166,27 @@ def _fit_block_n(words_fn, block_b: int, n_out: int, d_in: int, k: int, *,
     return best
 
 
-def default_blocks(b: int, d_in: int, n_out: int, k: int, *,
-                   backend: str | None = None) -> tuple[int, int]:
-    """Untimed default block shape: the legacy 128x128 when it fits the VMEM
-    budget, otherwise the largest fitting candidate (batch dim shrinks first
-    — the ``B_blk * d_in`` x-tile term is what blows the budget at large
-    ``d_in``). The timed search in repro.sparse.autotune refines this."""
-    cands = block_candidates(b, d_in, n_out, k, backend=backend)
+def pick_default_blocks(cands: list[tuple[int, int]], b: int,
+                        n_out: int) -> tuple[int, int]:
+    """Default-block policy shared by every kernel family: the legacy
+    128x128 when it is among ``cands``, otherwise the largest fitting
+    candidate (closest to the target first, then raw area)."""
     target = (min(128, _ceil_to(max(b, 1), SUBLANE)),
               min(128, _ceil_to(max(n_out, 1), LANE)))
     if target in cands:
         return target
     return max(cands, key=lambda c: (min(c[0], target[0]) * min(c[1], target[1]),
                                      c[0] * c[1]))
+
+
+def default_blocks(b: int, d_in: int, n_out: int, k: int, *,
+                   backend: str | None = None) -> tuple[int, int]:
+    """Untimed default block shape: the legacy 128x128 when it fits the VMEM
+    budget, otherwise the largest fitting candidate (batch dim shrinks first
+    — the ``B_blk * d_in`` x-tile term is what blows the budget at large
+    ``d_in``). The timed search in repro.sparse.autotune refines this."""
+    return pick_default_blocks(block_candidates(b, d_in, n_out, k,
+                                                backend=backend), b, n_out)
 
 
 def default_dw_blocks(b: int, d_in: int, n_out: int, k: int, *,

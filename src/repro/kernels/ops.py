@@ -1,4 +1,4 @@
-"""Jit'd public wrappers for the condensed kernels, with custom VJP.
+"""Jit'd public wrappers for the sparse serving kernels, with custom VJPs.
 
 ``condensed_linear`` is the layer-level op used by repro.sparse.condensed:
 forward runs the Pallas kernel; the backward pass computes
@@ -6,16 +6,23 @@ forward runs the Pallas kernel; the backward pass computes
   dx = scatter-add of dy * values   (jnp; XLA lowers this well on TPU)
   dw = Pallas dw kernel (gather formulation, batch-tiled, no scatter needed)
 
-The condensed path is inference-first (decode / online serving); training uses
-the masked-dense MXU path (repro.sparse.masked), so the jnp dx here is not on
-the training hot path.
+``structured_linear`` is the layer-level op behind the StructuredFanIn
+format (column-gathered Pallas matmul + fused scatter epilogue from
+kernels.structured_matmul), and ``condensed_over_active_linear_nd`` runs the
+FUSED condensed-over-active kernel (output written through out_index inside
+the kernel — no standalone scatter dispatch on the decode path).
+
+All three are inference-first (decode / online serving); training uses the
+masked-dense MXU path (repro.sparse.masked), so the jnp backward pieces here
+are not on the training hot path.
 
 Block-shape resolution (when the caller does not force one): the tuned
 winner from repro.sparse.autotune's persistent cache for this backend +
-shape + batch bucket, else the untimed VMEM-budget default inside
-kernels.condensed_matmul (which also routes B <= 8 to the decode-specialized
-variant). ``interpret`` resolves from the backend — interpret-mode only on
-CPU, overridable with REPRO_PALLAS_INTERPRET={0,1}.
+shape + batch bucket (keys derive from ``formats.shape_tuning_key`` — the
+structured kernel's keys carry ``kind="structured"``), else the untimed
+VMEM-budget default inside the kernel module (which also routes B <= 8 to
+the decode-specialized variants). ``interpret`` resolves from the backend —
+interpret-mode only on CPU, overridable with REPRO_PALLAS_INTERPRET={0,1}.
 """
 from __future__ import annotations
 
@@ -26,29 +33,35 @@ import jax.numpy as jnp
 
 from repro.kernels import condensed_matmul as cm
 from repro.kernels import ref
+from repro.kernels import structured_matmul as sm
 
 
 def _resolve_blocks(batch: int, d_in: int, n_out: int, k: int,
-                    block_b, block_n, itemsize: int):
+                    block_b, block_n, itemsize: int, kind: str = "condensed",
+                    scatter_width: int | None = None):
     """Caller-forced blocks win; else the autotune cache; else (None, None)
-    so kernels.condensed_matmul applies its VMEM-budget default.
+    so the kernel module applies its VMEM-budget default.
 
     The cache key is derived through the format protocol
     (``formats.shape_tuning_key`` — the same derivation the formats'
     ``tuning_key`` methods and ``autotune.tune_registry`` use, so a tuned
     entry written under a format's key is exactly what this dispatch reads
-    back). The cache is consulted only when NEITHER dim is forced: a tuned
-    winner was validated as a PAIR, so splicing one of its dims against an
-    arbitrary caller-forced other dim could exceed the VMEM budget — with a
-    half-forced call the remaining dim goes to the kernel module's budget
-    fit instead."""
+    back). ``kind``/``scatter_width`` select the ablation-aware kernels' key
+    spaces ("structured" and "coa" entries are timed on THOSE kernels, whose
+    VMEM geometry includes the dense scatter width — see
+    ``formats.shape_tuning_key``). The cache is consulted only when NEITHER
+    dim is forced: a tuned winner was validated as a PAIR, so splicing one
+    of its dims against an arbitrary caller-forced other dim could exceed
+    the VMEM budget — with a half-forced call the remaining dim goes to the
+    kernel module's budget fit instead."""
     if block_b is not None or block_n is not None:
         return block_b, block_n
     # lazy imports: keep kernels importable alone
     from repro.sparse import autotune
     from repro.sparse import formats
     tuned = autotune.lookup_entry(
-        formats.shape_tuning_key(d_in, n_out, k, batch, itemsize=itemsize))
+        formats.shape_tuning_key(d_in, n_out, k, batch, itemsize=itemsize,
+                                 kind=kind, scatter_width=scatter_width))
     if tuned is not None:
         return tuned["block_b"], tuned["block_n"]
     return None, None
@@ -90,20 +103,83 @@ def condensed_linear_nd(x: jax.Array, values: jax.Array, indices: jax.Array, **k
     return y.reshape(*lead, values.shape[0])
 
 
-def condensed_over_active_linear_nd(x: jax.Array, values: jax.Array,
-                                    indices: jax.Array, out_index: jax.Array,
-                                    d_out: int, **kw) -> jax.Array:
-    """Composed Fig. 4 representation: condensed gather over ACTIVE rows only.
+def _dy_active(dy, out_index, d_out: int):
+    """Gather dy at the surviving rows' dense positions; padding rows
+    (out_index == d_out) get exact-zero cotangents — the drop semantics of
+    the fused scatter epilogue."""
+    sel = jnp.take(dy, jnp.minimum(out_index, d_out - 1), axis=1)
+    return sel * (out_index < d_out)[None, :].astype(sel.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def condensed_over_active_linear(
+    x: jax.Array,
+    values: jax.Array,
+    indices: jax.Array,
+    out_index: jax.Array,
+    d_out: int,
+    block_b: int | None = None,
+    block_n: int | None = None,
+) -> jax.Array:
+    """Fused composed Fig. 4 representation: condensed gather over ACTIVE
+    rows, output written through out_index inside the kernel.
 
     values/indices: (a, k) condensed arrays covering only surviving (non-
     ablated) neurons; out_index: (a,) int32 position of each surviving row in
     the full (d_out,) output, with out-of-range entries (== d_out) marking
-    padding rows. The gather kernel runs over a <= d_out rows — the ablated-
-    neuron fraction converts directly into fewer HBM bytes AND fewer gather
-    FLOPs — and the result is scattered into the dense output layout (ablated
-    neurons are exact zeros, so greedy decode stays token-identical to the
-    masked path).
+    padding rows. The kernel runs over a <= d_out rows — the ablated-neuron
+    fraction converts directly into fewer HBM bytes AND fewer gather FLOPs —
+    and its fused epilogue scatters each row into the dense output layout
+    in-kernel (ablated neurons are exact zeros, so greedy decode stays
+    token-identical to the masked path). Unlike the previous compose-then-
+    scatter lowering there is no standalone ``y.at[:, out_index].add``
+    dispatch and no compact-activation HBM round trip per layer.
     """
+    a, k = values.shape
+    bb, bn = _resolve_blocks(x.shape[0], x.shape[-1], a, k, block_b, block_n,
+                             jnp.dtype(x.dtype).itemsize, kind="coa",
+                             scatter_width=d_out)
+    return sm.condensed_over_active_matmul(x, values, indices, out_index,
+                                           d_out, block_b=bb, block_n=bn)
+
+
+def _coa_fwd(x, values, indices, out_index, d_out, block_b, block_n):
+    y = condensed_over_active_linear(x, values, indices, out_index, d_out,
+                                     block_b, block_n)
+    return y, (x, values, indices, out_index)
+
+
+def _coa_bwd(d_out, block_b, block_n, res, dy):
+    x, values, indices, out_index = res
+    dy_act = _dy_active(dy, out_index, d_out)                # (B, a)
+    dx = ref.condensed_matmul_dx_ref(dy_act, values, indices,
+                                     x.shape[-1]).astype(x.dtype)
+    dw = cm.condensed_matmul_dw(dy_act, x, indices, block_n=block_n)
+    return dx, dw.astype(values.dtype), None, None
+
+
+condensed_over_active_linear.defvjp(_coa_fwd, _coa_bwd)
+
+
+def condensed_over_active_linear_nd(x: jax.Array, values: jax.Array,
+                                    indices: jax.Array, out_index: jax.Array,
+                                    d_out: int, **kw) -> jax.Array:
+    """Rank-polymorphic wrapper over the FUSED condensed-over-active kernel
+    (flattens leading dims to the batch axis)."""
+    lead = x.shape[:-1]
+    y = condensed_over_active_linear(x.reshape(-1, x.shape[-1]), values,
+                                     indices, out_index, d_out, **kw)
+    return y.reshape(*lead, d_out)
+
+
+def condensed_over_active_linear_nd_unfused(
+        x: jax.Array, values: jax.Array, indices: jax.Array,
+        out_index: jax.Array, d_out: int, **kw) -> jax.Array:
+    """Pre-fusion composition (reference): condensed gather over active rows,
+    then a separate XLA scatter into the dense layout. Kept as the oracle the
+    fused kernel is tested against, and as the lowering whose standalone
+    scatter dispatch the fused epilogue provably removes (see the HLO
+    dispatch-count test)."""
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     y_act = condensed_linear(x2, values, indices, **kw)      # (B, a)
@@ -114,15 +190,75 @@ def condensed_over_active_linear_nd(x: jax.Array, values: jax.Array,
 
 
 def structured_dense(x: jax.Array, weight: jax.Array, neuron_active: jax.Array) -> jax.Array:
-    """"Structured-only" path from Fig. 4: drop ablated neurons, dense matmul.
+    """Reference "structured-only" path from Fig. 4: drop ablated neurons,
+    dense matmul.
 
     weight: (d_in, n_out); computes x @ weight with ablated outputs forced to
-    exact zeros. NOTE: as implemented this reads the full dense weight and
-    runs the full matmul — the only traffic saved vs masked is the bool
-    fan-in mask (neuron_active is n_out bools). A genuinely column-gathered
-    kernel that delivers the active-fraction byte/FLOP saving is a ROADMAP
-    follow-up; the cost model in repro.sparse.plan prices this path at what
-    it actually executes.
+    exact zeros. This is the pure-jnp ORACLE the column-gathered Pallas
+    kernel (``structured_linear`` / kernels.structured_matmul) is validated
+    against — bit-identical on every active set, including zero ablation,
+    all-but-one-ablated, non-tile-aligned active counts and bf16. It reads
+    the full dense weight (the formulation the hot path executed before the
+    gathered kernel landed); serving dispatches go through
+    ``structured_linear``, whose HBM weight bytes and MXU FLOPs scale with
+    the active fraction, and whose cost is what
+    ``formats.StructuredFanIn.estimate_cost`` prices.
     """
     w = weight * neuron_active[None, :].astype(weight.dtype)
     return x @ w
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def structured_linear(
+    x: jax.Array,
+    w: jax.Array,
+    active_index: jax.Array,
+    block_b: int | None = None,
+    block_n: int | None = None,
+) -> jax.Array:
+    """Column-gathered structured matmul: y = x @ w over the surviving
+    columns only, ablated outputs exact zeros (fused scatter epilogue).
+
+    ``active_index``: (a_pad,) int32 surviving-column ids, padded to tile
+    alignment with the out-of-range sentinel ``d_out`` (see
+    ``formats.StructuredFanIn`` / ``structured_matmul.padded_active_count``).
+    Exact (bit-identical) to ``structured_dense`` with the matching
+    neuron_active bools, for ablation-only masks the exact serving path.
+    """
+    d_out = w.shape[-1]
+    bb, bn = _resolve_blocks(x.shape[0], x.shape[-1], active_index.shape[0],
+                             0, block_b, block_n,
+                             jnp.dtype(x.dtype).itemsize, kind="structured",
+                             scatter_width=d_out)
+    return sm.structured_matmul(x, w.astype(x.dtype), active_index,
+                                block_b=bb, block_n=bn)
+
+
+def _structured_fwd(x, w, active_index, block_b, block_n):
+    y = structured_linear(x, w, active_index, block_b, block_n)
+    return y, (x, w, active_index)
+
+
+def _structured_bwd(block_b, block_n, res, dy):
+    x, w, active_index = res
+    d_out = w.shape[-1]
+    dy_act = _dy_active(dy, active_index, d_out)             # (B, a_pad)
+    w_act = sm._gather_columns(w, active_index).astype(dy_act.dtype)
+    dx = (dy_act @ w_act.T).astype(x.dtype)
+    # dw: only surviving columns receive gradient (ablated columns are
+    # dropped from the forward); padding entries scatter out of range
+    contrib = (x.astype(dy_act.dtype).T @ dy_act)            # (d_in, a_pad)
+    dw = jnp.zeros_like(w).at[:, active_index].add(
+        contrib.astype(w.dtype), mode="drop")
+    return dx, dw, None
+
+
+structured_linear.defvjp(_structured_fwd, _structured_bwd)
+
+
+def structured_linear_nd(x: jax.Array, w: jax.Array,
+                         active_index: jax.Array, **kw) -> jax.Array:
+    """Rank-polymorphic wrapper: flattens leading dims to the batch axis."""
+    lead = x.shape[:-1]
+    y = structured_linear(x.reshape(-1, x.shape[-1]), w, active_index, **kw)
+    return y.reshape(*lead, w.shape[-1])

@@ -1,0 +1,462 @@
+"""Ablation-aware Pallas kernels: column-gathered structured matmul and the
+fused condensed-over-active scatter epilogue.
+
+Both kernels execute the neuron-ablation half of the paper's Fig. 4 serving
+story so that the ablated fraction converts into REAL byte/FLOP savings
+instead of a masked-out dense pass:
+
+* ``structured_matmul`` — the "structured" Fig. 4 point. The surviving
+  output columns of the dense weight are gathered through a precomputed
+  ``active_index`` int32 vector (surviving column ids, padded to the 128-lane
+  tile with the out-of-range sentinel ``d_out``), the matmul runs over ONLY
+  those ``a_pad`` columns on the MXU, and a fused one-hot scatter epilogue
+  writes each compact column back to its dense position — ablated neurons
+  are exact zeros written in-kernel, never a separate XLA scatter dispatch.
+  Per-step HBM weight bytes and MXU matmul FLOPs are ``a_pad / d_out`` of
+  the dense path. The column gather itself (``jnp.take`` along the lane
+  axis) happens once per compiled program: the weight and ``active_index``
+  are loop-invariant in the decode ``lax.scan``, so XLA hoists the gather
+  out of the token loop and every decode step streams only the compact
+  ``(d_in, a_pad)`` panel.
+* ``condensed_over_active_matmul`` — the combined Fig. 4 point, fused. The
+  condensed constant fan-in gather (same VMEM-local formulation as
+  ``condensed_matmul``) runs over the ``a <= d_out`` surviving rows and the
+  SAME one-hot epilogue scatters each row through ``out_index`` into the
+  dense output layout inside the kernel. This replaces the previous
+  compose-then-scatter lowering (``y.at[:, out_index].add``) that wrote the
+  compact activations to HBM and re-read them in a separate scatter op —
+  one full activation round trip per layer on the decode hot path.
+
+Scatter epilogue (shared): for an index tile ``ai`` (compact position ->
+dense column, padding == ``d_out``) the kernel builds the one-hot selection
+matrix ``sel[t, c] = (ai[t] == c)`` and accumulates ``y_tile @ sel`` into a
+``(B_blk, d_out)`` output block that stays resident across the compact-tile
+grid dimension (innermost, same accumulation pattern as the dw kernel in
+condensed_matmul). This is the Mosaic-friendly scatter formulation: an MXU
+matmul instead of a data-dependent store. Exactness: each dense column is
+hit by exactly one compact slot (export guarantees unique indices), a
+one-hot dot passes the value through bit-exactly (v * 1.0 + exact zeros),
+and padding slots (``ai == d_out``) match no column, so they are dropped
+exactly like the old ``mode="drop"`` scatter.
+
+VMEM budgets (words; ``d_in`` and ``d_out`` are structurally unblocked —
+the gather needs the whole activation row, the scatter the whole output
+row):
+
+    structured: B_blk*d_in + d_in*N_blk + N_blk + B_blk*N_blk
+                + N_blk*d_out + B_blk*d_out
+    coa fused:  B_blk*d_in + N_blk*k*2 + N_blk + B_blk*N_blk
+                + N_blk*d_out + B_blk*d_out
+
+checked against the same per-backend cap as ``condensed_matmul``
+(``vmem_budget_bytes``). The ``N_blk*d_out`` one-hot tile is the dominant
+term at large ``d_out``; the budget shrinks the blocks accordingly, and the
+(8, 128) minimum is kept even over budget (documented stance shared with
+``condensed_matmul._aligned_candidates``). Decode shapes (B <=
+``SMALL_BATCH_MAX``) use specialized variants that stage the sublane-padded
+batch whole. ``repro.sparse.autotune`` runs the timed block search under the
+``kind="structured"`` tuning keys.
+
+Validated bit-identical against ``kernels.ops.structured_dense`` (structured)
+and token-identical to the masked path (COA) in interpret mode on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import condensed_matmul as cm
+
+LANE = cm.LANE
+SUBLANE = cm.SUBLANE
+SMALL_BATCH_MAX = cm.SMALL_BATCH_MAX
+_ceil_to = cm._ceil_to
+
+
+def padded_active_count(a: int, d_out: int) -> int:
+    """Exported ``active_index`` length: the realized active-column count
+    rounded up to the 128-lane tile (the gather axis is the lane dimension),
+    capped at the padded dense width — padding past ``d_out`` buys nothing.
+    Accepts float ``a`` (the cost model prices fractional row counts)."""
+    return min(_ceil_to(int(max(a, 1)), LANE), _ceil_to(int(max(d_out, 1)), LANE))
+
+
+# ---------------------------------------------------------------------------
+# VMEM budget formulas / block candidates
+# ---------------------------------------------------------------------------
+
+
+def structured_vmem_words(block_b: int, block_n: int, d_in: int,
+                          d_out: int) -> int:
+    """x tile + gathered-weight tile + index tile + compact-y tile + one-hot
+    tile + resident (B_blk, d_out) output block."""
+    return (block_b * d_in + d_in * block_n + block_n + block_b * block_n
+            + block_n * d_out + block_b * d_out)
+
+
+def coa_vmem_words(block_b: int, block_n: int, d_in: int, k: int,
+                   d_out: int) -> int:
+    """x tile + (values + indices) tiles + out_index tile + compact-y tile +
+    one-hot tile + resident output block."""
+    return (block_b * d_in + block_n * k * 2 + block_n + block_b * block_n
+            + block_n * d_out + block_b * d_out)
+
+
+def structured_block_candidates(b: int, d_in: int, a: int, d_out: int, *,
+                                backend: str | None = None) -> list[tuple[int, int]]:
+    """8x128-aligned shapes fitting structured_vmem_words; ``a`` is the
+    compact row count the grid tiles over (condensed_matmul's enumeration,
+    including its keep-the-minimum-over-budget stance, adapted via a words
+    lambda)."""
+    return cm._aligned_candidates(
+        lambda bb, bn, _d, _k: structured_vmem_words(bb, bn, d_in, d_out),
+        b, 0, a, 0, backend)
+
+
+def coa_block_candidates(b: int, d_in: int, a: int, k: int, d_out: int, *,
+                         backend: str | None = None) -> list[tuple[int, int]]:
+    """8x128-aligned shapes fitting coa_vmem_words over the ``a`` surviving
+    rows (see structured_block_candidates)."""
+    return cm._aligned_candidates(
+        lambda bb, bn, _d, _k: coa_vmem_words(bb, bn, d_in, k, d_out),
+        b, 0, a, 0, backend)
+
+
+def default_structured_blocks(b: int, d_in: int, a: int, d_out: int, *,
+                              backend: str | None = None) -> tuple[int, int]:
+    return cm.pick_default_blocks(
+        structured_block_candidates(b, d_in, a, d_out, backend=backend), b, a)
+
+
+def default_coa_blocks(b: int, d_in: int, a: int, k: int, d_out: int, *,
+                       backend: str | None = None) -> tuple[int, int]:
+    return cm.pick_default_blocks(
+        coa_block_candidates(b, d_in, a, k, d_out, backend=backend), b, a)
+
+
+# ---------------------------------------------------------------------------
+# kernels
+# ---------------------------------------------------------------------------
+
+
+def _onehot_scatter(y: jax.Array, idx_row: jax.Array, d_out: int) -> jax.Array:
+    """Scatter a compact (B_blk, N_blk) tile to dense columns via a one-hot
+    MXU matmul. ``idx_row``: (1, N_blk) int32 dense positions; out-of-range
+    entries (== d_out) match no column and are dropped exactly. Exact: each
+    surviving value is multiplied by 1.0 and summed with exact zeros."""
+    cols = jax.lax.broadcasted_iota(jnp.int32, (idx_row.shape[1], d_out), 1)
+    sel = (idx_row.T == cols).astype(jnp.float32)        # (N_blk, d_out)
+    return jnp.dot(y, sel, preferred_element_type=jnp.float32)
+
+
+def _structured_kernel(x_ref, w_ref, ai_ref, out_ref, *, grid_axis: int):
+    """One compact-column tile of the gathered structured matmul.
+
+    x_ref  : (B_blk, d_in)    VMEM
+    w_ref  : (d_in, N_blk)    VMEM — pre-gathered surviving columns
+    ai_ref : (1, N_blk)       VMEM int32 — dense position of each column
+    out_ref: (B_blk, d_out)   VMEM — resident across the compact-tile axis
+    """
+    j = pl.program_id(grid_axis)
+    y = jnp.dot(x_ref[...].astype(jnp.float32),
+                w_ref[...].astype(jnp.float32),
+                preferred_element_type=jnp.float32)      # (B_blk, N_blk)
+    contrib = _onehot_scatter(y, ai_ref[...], out_ref.shape[-1])
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = contrib.astype(out_ref.dtype)
+
+    @pl.when(j != 0)
+    def _accumulate():
+        out_ref[...] = out_ref[...] + contrib.astype(out_ref.dtype)
+
+
+def _coa_kernel(x_ref, w_ref, idx_ref, oi_ref, out_ref, *, grid_axis: int):
+    """One surviving-row tile of the fused condensed-over-active matmul:
+    the condensed VMEM-local gather-reduce followed by the scatter epilogue.
+
+    x_ref  : (B_blk, d_in)  w_ref/idx_ref : (N_blk, k)  oi_ref : (1, N_blk)
+    out_ref: (B_blk, d_out) resident across the row-tile axis.
+    """
+    j = pl.program_id(grid_axis)
+    x = x_ref[...]
+    w = w_ref[...].astype(jnp.float32)
+    idx = idx_ref[...]
+    n_blk, k = idx.shape
+    gathered = jnp.take(x, idx.reshape(-1), axis=1).astype(jnp.float32)
+    gathered = gathered.reshape(x.shape[0], n_blk, k)
+    y = jnp.sum(gathered * w[None], axis=-1)             # (B_blk, N_blk) f32
+    contrib = _onehot_scatter(y, oi_ref[...], out_ref.shape[-1])
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = contrib.astype(out_ref.dtype)
+
+    @pl.when(j != 0)
+    def _accumulate():
+        out_ref[...] = out_ref[...] + contrib.astype(out_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers — structured
+# ---------------------------------------------------------------------------
+
+
+def _gather_columns(w: jax.Array, active_index: jax.Array) -> jax.Array:
+    """(d_in, a) panel of surviving columns. Padding entries clip to the last
+    column — their (garbage but finite) products are dropped by the all-zero
+    one-hot row at scatter time, so no masking multiply is needed."""
+    d_out = w.shape[-1]
+    return jnp.take(w, jnp.minimum(active_index, d_out - 1), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n", "interpret"))
+def _structured_tiled(x, w, active_index, *, block_b: int, block_n: int,
+                      interpret: bool):
+    """General gathered matmul: grid (batch tiles, compact-column tiles)."""
+    b, d_in = x.shape
+    d_out = w.shape[-1]
+    a = active_index.shape[0]
+    bp, ap = _ceil_to(max(b, 1), block_b), _ceil_to(max(a, 1), block_n)
+    xp = jnp.pad(x, ((0, bp - b), (0, 0)))
+    wa = jnp.pad(_gather_columns(w, active_index), ((0, 0), (0, ap - a)))
+    aip = jnp.pad(active_index.astype(jnp.int32), (0, ap - a),
+                  constant_values=d_out).reshape(1, ap)
+
+    out = pl.pallas_call(
+        functools.partial(_structured_kernel, grid_axis=1),
+        grid=(bp // block_b, ap // block_n),
+        in_specs=[
+            pl.BlockSpec((block_b, d_in), lambda i, j: (i, 0)),
+            pl.BlockSpec((d_in, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, d_out), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, d_out), x.dtype),
+        interpret=interpret,
+    )(xp, wa, aip)
+    return out[:b]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _structured_decode(x, w, active_index, *, block_n: int, interpret: bool):
+    """Decode-specialized variant: sublane-padded batch staged whole, grid
+    over compact-column tiles only."""
+    b, d_in = x.shape
+    d_out = w.shape[-1]
+    a = active_index.shape[0]
+    bp, ap = _ceil_to(max(b, 1), SUBLANE), _ceil_to(max(a, 1), block_n)
+    xp = jnp.pad(x, ((0, bp - b), (0, 0)))
+    wa = jnp.pad(_gather_columns(w, active_index), ((0, 0), (0, ap - a)))
+    aip = jnp.pad(active_index.astype(jnp.int32), (0, ap - a),
+                  constant_values=d_out).reshape(1, ap)
+
+    out = pl.pallas_call(
+        functools.partial(_structured_kernel, grid_axis=0),
+        grid=(ap // block_n,),
+        in_specs=[
+            pl.BlockSpec((bp, d_in), lambda j: (0, 0)),
+            pl.BlockSpec((d_in, block_n), lambda j: (0, j)),
+            pl.BlockSpec((1, block_n), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bp, d_out), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, d_out), x.dtype),
+        interpret=interpret,
+    )(xp, wa, aip)
+    return out[:b]
+
+
+def structured_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    active_index: jax.Array,
+    *,
+    block_b: int | None = None,
+    block_n: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Column-gathered structured matmul. x: (B, d_in), w: (d_in, d_out),
+    active_index: (a,) int32 surviving-column ids (out-of-range == padding).
+    Returns (B, d_out) with ablated columns exact zeros.
+
+    ``block_b=None`` routes decode shapes (B <= SMALL_BATCH_MAX) to the
+    decode-specialized variant; otherwise the VMEM-budget default applies
+    (``repro.sparse.autotune`` supplies timed choices through
+    ``kernels.ops.structured_linear``). Bit-identical to
+    ``kernels.ops.structured_dense`` for any active set.
+    """
+    b, d_in = x.shape
+    d_out = w.shape[-1]
+    a = active_index.shape[0]
+    if interpret is None:
+        interpret = cm.default_interpret()
+    if block_b is None and b <= SMALL_BATCH_MAX:
+        return structured_matmul_decode(x, w, active_index, block_n=block_n,
+                                        interpret=interpret)
+    if block_b is None and block_n is None:
+        block_b, block_n = default_structured_blocks(b, d_in, a, d_out)
+    elif block_b is None:
+        block_b = cm._fit_block_b(
+            lambda bb, bn, _d, _k: structured_vmem_words(bb, bn, d_in, d_out),
+            block_n, b, d_in, 0, cap=128)
+    elif block_n is None:
+        block_n = cm._fit_block_n(
+            lambda bb, bn, _d, _k: structured_vmem_words(bb, bn, d_in, d_out),
+            block_b, a, d_in, 0, cap=128)
+    return _structured_tiled(x, w, active_index, block_b=block_b,
+                             block_n=block_n, interpret=interpret)
+
+
+def structured_matmul_decode(
+    x: jax.Array,
+    w: jax.Array,
+    active_index: jax.Array,
+    *,
+    block_n: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Decode-specialized structured matmul (batch staged whole). Bit-
+    identical to the general variant: the d_in contraction and the one-hot
+    scatter are independent of how the batch axis is padded or tiled."""
+    b, d_in = x.shape
+    d_out = w.shape[-1]
+    a = active_index.shape[0]
+    if interpret is None:
+        interpret = cm.default_interpret()
+    if block_n is None:
+        _, block_n = default_structured_blocks(min(b, SMALL_BATCH_MAX), d_in,
+                                               a, d_out)
+    return _structured_decode(x, w, active_index, block_n=block_n,
+                              interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers — condensed-over-active, fused epilogue
+# ---------------------------------------------------------------------------
+
+
+def _coa_pad(values, indices, out_index, d_out: int, ap: int):
+    a = values.shape[0]
+    vp = jnp.pad(values, ((0, ap - a), (0, 0)))
+    ip = jnp.pad(indices.astype(jnp.int32), ((0, ap - a), (0, 0)))
+    oip = jnp.pad(out_index.astype(jnp.int32), (0, ap - a),
+                  constant_values=d_out).reshape(1, ap)
+    return vp, ip, oip
+
+
+@functools.partial(jax.jit, static_argnames=("d_out", "block_b", "block_n",
+                                             "interpret"))
+def _coa_tiled(x, values, indices, out_index, *, d_out: int, block_b: int,
+               block_n: int, interpret: bool):
+    b, d_in = x.shape
+    a, k = values.shape
+    bp, ap = _ceil_to(max(b, 1), block_b), _ceil_to(max(a, 1), block_n)
+    xp = jnp.pad(x, ((0, bp - b), (0, 0)))
+    vp, ip, oip = _coa_pad(values, indices, out_index, d_out, ap)
+
+    out = pl.pallas_call(
+        functools.partial(_coa_kernel, grid_axis=1),
+        grid=(bp // block_b, ap // block_n),
+        in_specs=[
+            pl.BlockSpec((block_b, d_in), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, d_out), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, d_out), x.dtype),
+        interpret=interpret,
+    )(xp, vp, ip, oip)
+    return out[:b]
+
+
+@functools.partial(jax.jit, static_argnames=("d_out", "block_n", "interpret"))
+def _coa_decode(x, values, indices, out_index, *, d_out: int, block_n: int,
+                interpret: bool):
+    b, d_in = x.shape
+    a, k = values.shape
+    bp, ap = _ceil_to(max(b, 1), SUBLANE), _ceil_to(max(a, 1), block_n)
+    xp = jnp.pad(x, ((0, bp - b), (0, 0)))
+    vp, ip, oip = _coa_pad(values, indices, out_index, d_out, ap)
+
+    out = pl.pallas_call(
+        functools.partial(_coa_kernel, grid_axis=0),
+        grid=(ap // block_n,),
+        in_specs=[
+            pl.BlockSpec((bp, d_in), lambda j: (0, 0)),
+            pl.BlockSpec((block_n, k), lambda j: (j, 0)),
+            pl.BlockSpec((block_n, k), lambda j: (j, 0)),
+            pl.BlockSpec((1, block_n), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bp, d_out), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, d_out), x.dtype),
+        interpret=interpret,
+    )(xp, vp, ip, oip)
+    return out[:b]
+
+
+def condensed_over_active_matmul(
+    x: jax.Array,
+    values: jax.Array,
+    indices: jax.Array,
+    out_index: jax.Array,
+    d_out: int,
+    *,
+    block_b: int | None = None,
+    block_n: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused condensed-over-active matmul: the condensed gather runs over the
+    ``a <= d_out`` surviving rows and the output block is written through
+    ``out_index`` directly (ablated rows zero-filled in-kernel). Token-
+    identical to the old compose-then-scatter lowering — the same f32
+    accumulation, the same single downcast, the same drop semantics for
+    out-of-range padding rows — without the separate scatter dispatch or the
+    compact-activation HBM round trip.
+    """
+    b, d_in = x.shape
+    a, k = values.shape
+    if interpret is None:
+        interpret = cm.default_interpret()
+    if block_b is None and b <= SMALL_BATCH_MAX:
+        return condensed_over_active_matmul_decode(
+            x, values, indices, out_index, d_out, block_n=block_n,
+            interpret=interpret)
+    if block_b is None and block_n is None:
+        block_b, block_n = default_coa_blocks(b, d_in, a, k, d_out)
+    elif block_b is None:
+        block_b = cm._fit_block_b(
+            lambda bb, bn, _d, _k: coa_vmem_words(bb, bn, d_in, k, d_out),
+            block_n, b, d_in, k, cap=128)
+    elif block_n is None:
+        block_n = cm._fit_block_n(
+            lambda bb, bn, _d, _k: coa_vmem_words(bb, bn, d_in, k, d_out),
+            block_b, a, d_in, k, cap=128)
+    return _coa_tiled(x, values, indices, out_index, d_out=d_out,
+                      block_b=block_b, block_n=block_n, interpret=interpret)
+
+
+def condensed_over_active_matmul_decode(
+    x: jax.Array,
+    values: jax.Array,
+    indices: jax.Array,
+    out_index: jax.Array,
+    d_out: int,
+    *,
+    block_n: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Decode-specialized fused COA matmul (batch staged whole)."""
+    b, d_in = x.shape
+    a, k = values.shape
+    if interpret is None:
+        interpret = cm.default_interpret()
+    if block_n is None:
+        _, block_n = default_coa_blocks(min(b, SMALL_BATCH_MAX), d_in, a, k,
+                                        d_out)
+    return _coa_decode(x, values, indices, out_index, d_out=d_out,
+                       block_n=block_n, interpret=interpret)

@@ -144,6 +144,16 @@ def lower_serve_condensed(cfg, shape, mesh):
                                {s.name: "condensed" for s in registry})
 
 
+def lower_serve_structured(cfg, shape, mesh):
+    """Decode with the structured (ablation) representation: the
+    column-gathered kernel over abstract ``active_index`` leaves — proves
+    the gathered matmul + fused scatter epilogue lower and fit at the
+    padded-d_out static bound before any mask is realized."""
+    registry = REG.build_registry(cfg)
+    return lower_serve_planned(cfg, shape, mesh,
+                               {s.name: "structured" for s in registry})
+
+
 def lower_serve_plan(cfg, shape, mesh):
     """Decode under the cost-model's per-stack choice for this shape's batch
     (the ``--path auto`` program, compiled without allocation)."""
@@ -212,6 +222,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, quiet: bool = False,
     n_chips = mesh.size
     lower_fn = {"train": lower_train, "serve": lower_serve, "dst": lower_dst,
                 "serve_cond": lower_serve_condensed,
+                "serve_struct": lower_serve_structured,
                 "serve_plan": lower_serve_plan,
                 "serve_engine": lower_serve_engine}[
         (("train" if shape.kind == "train" else "serve") if program == "auto"

@@ -13,13 +13,17 @@ parses flags, builds the engine, submits ONE request and prints the result:
                      (shared with the autotune cache keys): condensed gather
                      wins the bandwidth-bound decode shapes (B=1),
                      masked-dense wins the MXU back at large batch (B=256),
-                     matching the paper's Sec. 4.4 crossover
+                     matching the paper's Sec. 4.4 crossover; ablation-ONLY
+                     stacks additionally admit the column-gathered
+                     structured kernel, which wins their decode shapes
   --path masked      masked-dense MXU path (bool masks; training layout)
   --path condensed   constant fan-in condensed path: sparse linears run the
                      Pallas gather kernel over Condensed formats, touching
                      only n_out*k weight entries (Alg. 1; bandwidth-bound
                      decode is where the paper's 3.4x/1.7x CPU/GPU wins live)
-  --path structured  ablated neurons dropped, active columns dense (Fig. 4
+  --path structured  ablated neurons dropped, surviving columns gathered
+                     through the structured Pallas kernel — weight bytes and
+                     MXU FLOPs scale with the active fraction (Fig. 4
                      "structured" ablation — NOT output-equivalent unless the
                      sparsity is ablation-only)
   --path condensed_over_active

@@ -152,6 +152,10 @@ class ShardingRules:
             return P(*([None] * (ndim - 2) + [out_ax, None]))
         if name in _REPL or ndim <= 1:
             return P(*([None] * ndim))
+        # everything else replicates — including the ablation index vectors
+        # (out_index / active_index): their entries address the DENSE output
+        # axis (scatter targets / gathered columns), so a shard of the
+        # vector would still reference columns on every output shard
         return P(*([None] * ndim))
 
     def params(self, params_tree):

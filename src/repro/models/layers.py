@@ -55,7 +55,9 @@ def linear(x: jax.Array, w: jax.Array, mask=None) -> jax.Array:
     * ``repro.sparse.formats.SparseFormat`` — the format executes itself
       (``fmt.apply(x, w)``): MaskedDense / Condensed / StructuredFanIn /
       CondensedOverActive, each one point of PAPER.md Fig. 4 (see the
-      formats module docstring for the mapping).
+      formats module docstring for the mapping; the structured and
+      condensed-over-active points run the ablation-aware Pallas kernels of
+      kernels.structured_matmul — gathered columns / fused scatter).
     * legacy dict leaf — auto-upgraded through the deprecation shim
       (``formats.from_legacy_leaf``); a dict with unrecognized keys raises a
       clear error instead of silently mis-dispatching.

@@ -9,6 +9,10 @@ measurement:
   ``kernels.condensed_matmul.block_candidates`` — plus the decode-specialized
   variant for small-batch buckets and the legacy 128x128 default as the
   baseline — on the live backend, and records the winner.
+  ``autotune_structured_blocks`` / ``autotune_coa_blocks`` run the same
+  search for the ablation-aware kernels (kernels.structured_matmul) under
+  their own key spaces (kind="structured"/"coa" — entries are only valid
+  for the kernel they were timed on).
 * Results persist in a JSON cache keyed by ``backend + shape + batch
   bucket`` (``$REPRO_AUTOTUNE_CACHE`` or ``~/.cache/repro/autotune.json``),
   so tuning survives process restarts and ships with a deployment image.
@@ -35,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import condensed_matmul as cm
+from repro.kernels import structured_matmul as sm
 
 # Batch buckets for tuning keys AND for the predicted-vs-measured crossover
 # comparison in benchmarks/kernel_autotune.py. Geometric (x4) so a roofline
@@ -115,7 +120,8 @@ class TuneResult(typing.NamedTuple):
     block_b: int | None      # None -> decode-specialized variant
     block_n: int
     us: float                # median us of the winner
-    default_us: float        # median us of the legacy 128x128 general kernel
+    default_us: float        # median us of the untimed default blocks (the
+    #                          legacy 128x128 general kernel for condensed)
     interpret: bool
     table: dict[str, float]  # candidate label -> median us
 
@@ -225,12 +231,23 @@ def autotune_blocks(batch: int, d_in: int, n_out: int, k: int, *,
                 x, v, i, block_b=bb, block_n=bn, interpret=interpret)
         table[_label(bb, bn)] = _time_us(fn, x, vals, idx, reps=reps)
 
+    return _finish_result(
+        kernel_key(d_in, n_out, k, b, backend=backend, itemsize=itemsize),
+        cands, table, default_label=_label(128, 128), interpret=interpret,
+        save=save)
+
+
+def _finish_result(key: str, cands, table: dict[str, float], *,
+                   default_label: str, interpret: bool,
+                   save: bool) -> TuneResult:
+    """Pick the table's argmin, package the TuneResult, persist the entry.
+    The winner is the argmin of the SAME measured table the default sits in,
+    so ``speedup_vs_default >= 1.0`` holds by construction."""
     best_label = min(table, key=table.get)
     best = dict(zip((_label(bb, bn) for bb, bn in cands), cands))[best_label]
     res = TuneResult(
-        key=kernel_key(d_in, n_out, k, b, backend=backend, itemsize=itemsize),
-        block_b=best[0], block_n=best[1], us=table[best_label],
-        default_us=table[_label(128, 128)], interpret=interpret, table=table)
+        key=key, block_b=best[0], block_n=best[1], us=table[best_label],
+        default_us=table[default_label], interpret=interpret, table=table)
     if save:
         _load()["kernels"][res.key] = {
             "block_b": res.block_b, "block_n": res.block_n,
@@ -242,35 +259,152 @@ def autotune_blocks(batch: int, d_in: int, n_out: int, k: int, *,
     return res
 
 
+def _sorted_active_index(key, a: int, d_out: int) -> jax.Array:
+    """Representative surviving-column vector: a random size-``min(a, d_out)``
+    subset in increasing order, padded to ``a`` with the d_out sentinel."""
+    a_real = min(a, d_out)
+    ai = jnp.sort(jax.random.permutation(key, d_out)[:a_real]).astype(jnp.int32)
+    return jnp.pad(ai, (0, a - a_real), constant_values=d_out)
+
+
+def autotune_structured_blocks(batch: int, d_in: int, a: int, d_out: int, *,
+                               dtype=jnp.float32, reps: int = 3, seed: int = 0,
+                               backend: str | None = None,
+                               interpret: bool | None = None,
+                               save: bool = True) -> TuneResult:
+    """Timed block search for the column-gathered structured kernel at one
+    (shape, batch bucket). ``a`` is the padded active-column count the
+    exported ``active_index`` carries; the baseline is the untimed
+    VMEM-budget default (``structured_matmul.default_structured_blocks``)."""
+    from repro.sparse import formats as F  # lazy: formats imports this module
+    b = batch_bucket(batch)
+    itemsize = jnp.dtype(dtype).itemsize
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (b, d_in), jnp.float32).astype(dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d_in, d_out),
+                          jnp.float32).astype(dtype)
+    ai = _sorted_active_index(jax.random.fold_in(key, 2), a, d_out)
+    if interpret is None:
+        interpret = cm.default_interpret(backend)
+
+    default = sm.default_structured_blocks(b, d_in, a, d_out, backend=backend)
+    cands: list[tuple[int | None, int]] = [default]
+    cands += [c for c in sm.structured_block_candidates(b, d_in, a, d_out,
+                                                        backend=backend)
+              if c not in cands]
+    if b <= cm.SMALL_BATCH_MAX:
+        cands += [(None, bn) for bn in sorted({bn for _, bn in cands})]
+
+    table: dict[str, float] = {}
+    for bb, bn in cands:
+        if bb is None:
+            fn = lambda x, w, ai, bn=bn: sm.structured_matmul_decode(
+                x, w, ai, block_n=bn, interpret=interpret)
+        else:
+            fn = lambda x, w, ai, bb=bb, bn=bn: sm.structured_matmul(
+                x, w, ai, block_b=bb, block_n=bn, interpret=interpret)
+        table[_label(bb, bn)] = _time_us(fn, x, w, ai, reps=reps)
+
+    return _finish_result(
+        F.shape_tuning_key(d_in, a, 0, b, backend=backend, itemsize=itemsize,
+                           kind="structured", scatter_width=d_out),
+        cands, table, default_label=_label(*default), interpret=interpret,
+        save=save)
+
+
+def autotune_coa_blocks(batch: int, d_in: int, a: int, k: int, d_out: int, *,
+                        dtype=jnp.float32, reps: int = 3, seed: int = 0,
+                        backend: str | None = None,
+                        interpret: bool | None = None,
+                        save: bool = True) -> TuneResult:
+    """Timed block search for the FUSED condensed-over-active kernel at one
+    (shape, batch bucket): ``a`` surviving rows of fan-in ``k``, scattered
+    into a ``d_out``-wide output block in-kernel."""
+    from repro.sparse import formats as F  # lazy: formats imports this module
+    b = batch_bucket(batch)
+    itemsize = jnp.dtype(dtype).itemsize
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (b, d_in), jnp.float32).astype(dtype)
+    vals = jax.random.normal(jax.random.fold_in(key, 1), (a, k),
+                             jnp.float32).astype(dtype)
+    idx = jax.random.randint(jax.random.fold_in(key, 2), (a, k), 0, d_in)
+    oi = _sorted_active_index(jax.random.fold_in(key, 3), a, d_out)
+    if interpret is None:
+        interpret = cm.default_interpret(backend)
+
+    default = sm.default_coa_blocks(b, d_in, a, k, d_out, backend=backend)
+    cands: list[tuple[int | None, int]] = [default]
+    cands += [c for c in sm.coa_block_candidates(b, d_in, a, k, d_out,
+                                                 backend=backend)
+              if c not in cands]
+    if b <= cm.SMALL_BATCH_MAX:
+        cands += [(None, bn) for bn in sorted({bn for _, bn in cands})]
+
+    table: dict[str, float] = {}
+    for bb, bn in cands:
+        if bb is None:
+            fn = lambda x, v, i, o, bn=bn: sm.condensed_over_active_matmul_decode(
+                x, v, i, o, d_out, block_n=bn, interpret=interpret)
+        else:
+            fn = lambda x, v, i, o, bb=bb, bn=bn: sm.condensed_over_active_matmul(
+                x, v, i, o, d_out, block_b=bb, block_n=bn, interpret=interpret)
+        table[_label(bb, bn)] = _time_us(fn, x, vals, idx, oi, reps=reps)
+
+    return _finish_result(
+        F.shape_tuning_key(d_in, a, k, b, backend=backend, itemsize=itemsize,
+                           kind="coa", scatter_width=d_out),
+        cands, table, default_label=_label(*default), interpret=interpret,
+        save=save)
+
+
 def tune_registry(registry, stats: dict, *, batch: int, dtype=jnp.float32,
                   reps: int = 3, backend: str | None = None) -> dict[str, TuneResult]:
     """Tune every DISTINCT kernel-dispatch shape among ``registry``'s stacks
     at their realized fan-in (``stats`` from condensed.export_stats).
 
     Cache keys are derived from the FORMAT protocol's ``spec_tuning_key``
-    (the same derivation ``kernels.ops`` uses at trace time): plain
-    ``Condensed`` keys on the full d_out rows, and stacks with ablated
-    neurons are ALSO tuned under ``CondensedOverActive``'s key — its leaves
-    carry (max_active, k) arrays, and that is the shape the kernel dispatch
-    looks up. Already-cached shapes are skipped. Used by
+    (the same derivation ``kernels.ops`` uses at trace time), and each key
+    kind is tuned on the kernel that will consume it: plain ``Condensed``
+    keys on the condensed gather over the full d_out rows; stacks with
+    ablated neurons are ALSO tuned under ``CondensedOverActive``'s key on
+    the FUSED scatter-epilogue kernel (its leaves carry (max_active, k)
+    arrays scattered into the d_out-wide output); ablation-ONLY stacks
+    (``min_fan_in == d_in``) additionally tune ``StructuredFanIn``'s key on
+    the column-gathered structured kernel — the representation the auto
+    plan can now pick for them. Already-cached shapes are skipped. Used by
     ``serve --autotune``."""
     from repro.sparse import formats as F  # lazy: formats imports this module
     out: dict[str, TuneResult] = {}
     seen: set[str] = set()
     itemsize = jnp.dtype(dtype).itemsize
     for s in registry:
-        spec = F.spec_for_stack(s, stats[s.name], itemsize)
+        st = stats[s.name]
+        spec = F.spec_for_stack(s, st, itemsize)
         a = spec.max_active
-        cands = [(s.name, F.Condensed, s.d_out)]
-        if a < s.d_out:
-            cands.append((f"{s.name}@a{a}", F.CondensedOverActive, a))
-        for label, cls, n_out in cands:
+
+        def tuners():
+            yield (s.name, F.Condensed,
+                   lambda: autotune_blocks(batch, s.d_in, s.d_out, spec.k,
+                                           dtype=dtype, reps=reps,
+                                           backend=backend))
+            if a < s.d_out:
+                yield (f"{s.name}@a{a}", F.CondensedOverActive,
+                       lambda: autotune_coa_blocks(batch, s.d_in, a, spec.k,
+                                                   s.d_out, dtype=dtype,
+                                                   reps=reps, backend=backend))
+                if st.min_fan_in >= s.d_in:
+                    a_pad = sm.padded_active_count(a, s.d_out)
+                    yield (f"{s.name}@structured",
+                           F.StructuredFanIn,
+                           lambda: autotune_structured_blocks(
+                               batch, s.d_in, a_pad, s.d_out, dtype=dtype,
+                               reps=reps, backend=backend))
+
+        for label, cls, tune in tuners():
             key = cls.spec_tuning_key(spec, batch, backend=backend)
             if key in seen:
                 continue
             seen.add(key)
             if lookup_entry(key) is None:
-                out[label] = autotune_blocks(batch, s.d_in, n_out, spec.k,
-                                             dtype=dtype, reps=reps,
-                                             backend=backend)
+                out[label] = tune()
     return out

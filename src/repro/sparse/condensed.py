@@ -50,12 +50,17 @@ def export_stats(registry, masks: dict,
             jnp.max(nnz).astype(jnp.float32),
             jnp.max(jnp.sum(act.astype(jnp.int32), axis=-1)).astype(jnp.float32),
             jnp.mean(act.astype(jnp.float32)),
+            # min fan-in over ACTIVE columns: == d_in iff the mask is
+            # ablation-ONLY (surviving columns fully dense) — the regime
+            # where the structured representation is exact (plan auto)
+            jnp.min(jnp.where(nnz > 0, nnz, m.shape[-2])).astype(jnp.float32),
         ]))
     if not rows:
         return {}
     table = jax.device_get(jnp.stack(rows))                  # single transfer
     return {s.name: ExportStats(k=int(r[0]), max_active=int(r[1]),
-                                active_fraction=float(r[2]))
+                                active_fraction=float(r[2]),
+                                min_fan_in=int(r[3]))
             for s, r in zip(stacks, table)}
 
 
@@ -78,11 +83,18 @@ def condense_active_stack_leaf(weight, mask,
 
 
 def structured_stack_leaf(mask, *, d_in: int | None = None,
-                          weight_itemsize: int = 4) -> F.StructuredFanIn:
+                          weight_itemsize: int = 4,
+                          stats: ExportStats | None = None) -> F.StructuredFanIn:
     """Structured-only format for one stack. A neuron is active iff its mask
     column has any non-zero (matches the trainer's neuron_active state after
-    an SRigL update, and degrades gracefully for unstructured masks)."""
+    an SRigL update, and degrades gracefully for unstructured masks).
+    ``stats`` (when precomputed) sizes the gathered kernel's ``active_index``
+    at the realized active count without a host sync."""
+    stats = stats if stats is not None else F._realized_stats(mask)
+    d_out = int(mask.shape[-1])
+    a_pad = F.padded_active_count(max(stats.max_active, 1), d_out)
     return F.StructuredFanIn(neuron_active=jnp.any(mask, axis=-2),
+                             active_index=F.active_index_from_mask(mask, a_pad),
                              d_in=int(d_in if d_in is not None
                                       else mask.shape[-2]),
                              weight_itemsize=weight_itemsize)
@@ -136,14 +148,20 @@ def export_condensed_over_active(cfg, registry, params: dict, masks: dict,
     return _export_tree(F.CondensedOverActive, registry, params, masks, stats)
 
 
-def export_structured(cfg, registry, masks: dict) -> dict:
+def export_structured(cfg, registry, masks: dict,
+                      stats: dict[str, ExportStats] | None = None) -> dict:
     """Structured-only serving pytree (Fig. 4 "structured"):
     ``formats.StructuredFanIn`` leaves — ablated output neurons dropped,
-    active columns kept dense."""
+    active columns kept dense and executed by the column-gathered kernel
+    (``active_index`` sized at each stack's realized active count, fetched
+    with the registry-level fused stats sync)."""
+    stats = stats if stats is not None else export_stats(registry, masks)
     out: dict = {}
     for s in registry:
         m = REG.get_path(masks, s.path)
-        REG.set_path(out, s.path, structured_stack_leaf(m, d_in=s.d_in))
+        REG.set_path(out, s.path,
+                     structured_stack_leaf(m, d_in=s.d_in,
+                                           stats=stats[s.name]))
     return out
 
 

@@ -14,8 +14,11 @@ Mapping to PAPER.md Fig. 4 (serving-time representations of an SRigL mask):
                              dense MXU matmul. Fig. 4's "dense/masked"
                              baseline point; wins back at large batch.
 * ``StructuredFanIn``      — Fig. 4 "structured": ablated output neurons are
-                             dropped, surviving columns stay dense. Exact
-                             only for ablation-only masks.
+                             dropped, surviving columns stay dense and run
+                             through the column-gathered Pallas kernel
+                             (``active_index``; bytes/FLOPs scale with the
+                             active fraction). Exact only for ablation-only
+                             masks.
 * ``Condensed``            — Fig. 4 "condensed": the constant fan-in gather
                              layout (Alg. 1). Weight reads shrink to
                              n_out*k entries; wins the bandwidth-bound
@@ -71,6 +74,7 @@ import jax.numpy as jnp
 from repro.core import topology
 from repro.core.srigl import apply_mask_for_forward
 from repro.kernels import ops
+from repro.kernels.structured_matmul import padded_active_count
 
 
 class ExportStats(typing.NamedTuple):
@@ -78,6 +82,12 @@ class ExportStats(typing.NamedTuple):
     k: int                  # max realized fan-in over all columns/replicas
     max_active: int         # max active (non-ablated) neurons over replicas
     active_fraction: float  # mean fraction of active neurons
+    # min realized fan-in over ACTIVE columns (columns with >= 1 non-zero);
+    # min_fan_in == d_in means every surviving column is fully dense — the
+    # ablation-ONLY regime where the structured column-drop representation
+    # is exact. Defaults to 0 ("unknown / not ablation-only") so stats built
+    # by older call sites never enable structured by accident.
+    min_fan_in: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,8 +119,10 @@ def spec_for_stack(stack, stats: ExportStats, itemsize: int) -> FormatSpec:
 
 
 def shape_tuning_key(d_in: int, n_out: int, k: int, batch: int, *,
-                     backend: str | None = None, itemsize: int = 4) -> str:
-    """Canonical autotune-cache key for a condensed kernel dispatch shape.
+                     backend: str | None = None, itemsize: int = 4,
+                     kind: str = "condensed",
+                     scatter_width: int | None = None) -> str:
+    """Canonical autotune-cache key for a sparse kernel dispatch shape.
 
     Single definition shared by the formats' ``tuning_key`` methods, by
     ``repro.sparse.autotune`` (which persists entries under it) and by
@@ -118,11 +130,27 @@ def shape_tuning_key(d_in: int, n_out: int, k: int, batch: int, *,
     can never drift. Batch is bucketed (``autotune.batch_bucket``) so a
     tuned entry serves every batch in its bucket, and the SAME buckets key
     the serving engine's request groups.
+
+    ``kind`` separates the key spaces of the three kernels (entries are only
+    valid for the kernel they were timed on):
+
+    * ``"condensed"`` — the plain condensed gather; key layout unchanged
+      from earlier cache versions.
+    * ``"structured"`` — the column-gathered structured matmul; ``n_out`` is
+      the padded active-column count, ``k`` is 0 (the contraction width is
+      ``d_in`` itself) and ``scatter_width`` is the dense output width the
+      fused epilogue scatters into (part of the kernel's VMEM geometry).
+    * ``"coa"`` — the fused condensed-over-active kernel; ``n_out``/``k``
+      are the surviving-row condensed arrays' dims and ``scatter_width`` is
+      again the dense output width.
     """
     from repro.sparse import autotune as AT  # lazy: autotune is optional at import
     backend = backend or jax.default_backend()
-    return (f"{backend}/w{itemsize * 8}/d{d_in}/n{n_out}/k{k}"
-            f"/b{AT.batch_bucket(batch)}")
+    key = (f"{backend}/w{itemsize * 8}/d{d_in}/n{n_out}/k{k}"
+           f"/b{AT.batch_bucket(batch)}")
+    if kind != "condensed":
+        key += f"/{kind}-o{scatter_width}"
+    return key
 
 
 def _gather_rate(profile, batch: int) -> float:
@@ -143,12 +171,42 @@ def _vmap_lead(fn, n_lead: int):
 
 def _realized_stats(mask) -> ExportStats:
     """Host-syncing fallback when the caller has no precomputed stats."""
+    d_in = mask.shape[-2]
     nnz = jnp.sum(mask.astype(jnp.int32), axis=-2)
     act = jnp.any(mask, axis=-2)
-    k, a, frac = jax.device_get((
+    k, a, frac, mk = jax.device_get((
         jnp.max(nnz), jnp.max(jnp.sum(act.astype(jnp.int32), axis=-1)),
-        jnp.mean(act.astype(jnp.float32))))
-    return ExportStats(k=int(k), max_active=int(a), active_fraction=float(frac))
+        jnp.mean(act.astype(jnp.float32)),
+        jnp.min(jnp.where(nnz > 0, nnz, d_in))))
+    return ExportStats(k=int(k), max_active=int(a), active_fraction=float(frac),
+                       min_fan_in=int(mk))
+
+
+def active_index_from_bools(neuron_active: jax.Array, a_pad: int) -> jax.Array:
+    """Surviving-column index vector for the structured kernel, from the
+    per-neuron active bools (lead dims vmapped).
+
+    Returns (lead..., a_pad) int32: the ids of the active columns in
+    increasing order, padded with the out-of-range sentinel ``d_out`` — the
+    fused scatter epilogue drops sentinel slots exactly, so ``a_pad`` only
+    needs to be an upper bound on each replica's realized active count
+    (``padded_active_count`` rounds it to the 128-lane tile).
+    """
+    d_out = neuron_active.shape[-1]
+    n = min(a_pad, d_out)
+
+    def fn(act):
+        order = jnp.argsort(~act, stable=True).astype(jnp.int32)
+        oi = jnp.where(act[order[:n]], order[:n], d_out)
+        return jnp.pad(oi, (0, a_pad - n),
+                       constant_values=d_out).astype(jnp.int32)
+
+    return _vmap_lead(fn, neuron_active.ndim - 1)(neuron_active)
+
+
+def active_index_from_mask(mask: jax.Array, a_pad: int) -> jax.Array:
+    """``active_index_from_bools`` of the mask's column-activity bools."""
+    return active_index_from_bools(jnp.any(mask, axis=-2), a_pad)
 
 
 # ---------------------------------------------------------------------------
@@ -195,9 +253,12 @@ class SparseFormat:
 
     def map_arrays_with_names(self, fn):
         """Rebuild with each array field replaced by ``fn(name, value)`` —
-        used by sharding/checkpoint code that walks trees by path."""
+        used by sharding/checkpoint code that walks trees by path. ``None``
+        fields (legacy instances predating an optional field) pass through."""
         return dataclasses.replace(
-            self, **{f: fn(f, getattr(self, f)) for f in self._array_fields})
+            self, **{f: (None if getattr(self, f) is None
+                         else fn(f, getattr(self, f)))
+                     for f in self._array_fields})
 
     # -- protocol (subclass responsibilities) -------------------------------
     def apply(self, x: jax.Array, w: jax.Array | None = None) -> jax.Array:
@@ -249,6 +310,13 @@ class SparseFormat:
     def refresh_values(self, w, mask, *, donate: bool = True) -> "SparseFormat":
         """Values-only refresh under unchanged topology (no-op for formats
         that read the live weights at execution time)."""
+        return self
+
+    def rebuild_missing(self, missing: frozenset) -> "SparseFormat":
+        """Recompute array fields an older checkpoint archive did not carry
+        (``missing``: field names the restore found no arrays for). Default:
+        keep the template's values. Overridden where a derived field must
+        stay consistent with restored ones."""
         return self
 
 
@@ -403,59 +471,124 @@ class MaskedDense(SparseFormat):
 class StructuredFanIn(SparseFormat):
     """Fig. 4 "structured": ablated neurons dropped, active columns dense.
 
-    As executed by ``kernels.ops.structured_dense`` this still reads the
-    FULL dense weight (only the bool fan-in mask read is saved; a genuinely
-    column-gathered kernel is a ROADMAP follow-up) — ``estimate_cost``
-    prices what the code delivers, not the aspiration. Exact only for
-    ablation-only masks.
+    Executed by the column-gathered Pallas kernel
+    (``kernels.ops.structured_linear`` over ``active_index`` — surviving
+    column ids padded to the 128-lane tile with the ``d_out`` sentinel): the
+    matmul runs over only the ``a_pad`` surviving columns and a fused
+    scatter epilogue writes exact zeros for ablated neurons, so per-step HBM
+    weight bytes and MXU FLOPs scale with the active fraction.
+    ``estimate_cost`` prices exactly that (padded) execution. Exact only for
+    ablation-only masks — bit-identical to ``ops.structured_dense``.
+    ``active_index=None`` (legacy instances built before the field existed)
+    falls back to the reference full-dense path.
     """
     neuron_active: jax.Array             # (lead..., d_out) bool
+    active_index: jax.Array | None = None  # (lead..., a_pad) int32, pad=d_out
     d_in: int = 0                        # dense weight fan-in (for pricing)
     weight_itemsize: int = 4
 
     format_name: typing.ClassVar[str] = "structured"
-    _array_fields: typing.ClassVar[tuple[str, ...]] = ("neuron_active",)
+    _array_fields: typing.ClassVar[tuple[str, ...]] = ("neuron_active",
+                                                       "active_index")
     _static_fields: typing.ClassVar[tuple[str, ...]] = ("d_in", "weight_itemsize")
 
     def apply(self, x, w=None):
-        return ops.structured_dense(x, w.astype(x.dtype), self.neuron_active)
+        if self.active_index is None:
+            return ops.structured_dense(x, w.astype(x.dtype),
+                                        self.neuron_active)
+        return ops.structured_linear_nd(x, w, self.active_index)
 
     @classmethod
     def export_from_dense(cls, w, mask, stats=None):
+        stats = stats if stats is not None else _realized_stats(mask)
+        d_out = int(mask.shape[-1])
+        a_pad = padded_active_count(max(stats.max_active, 1), d_out)
         return cls(neuron_active=jnp.any(mask, axis=-2),
+                   active_index=active_index_from_mask(mask, a_pad),
                    d_in=int(mask.shape[-2]),
                    weight_itemsize=jnp.dtype(w.dtype).itemsize)
+
+    def _a_pad(self) -> int:
+        d_out = self.neuron_active.shape[-1]
+        return (self.active_index.shape[-1] if self.active_index is not None
+                else padded_active_count(d_out, d_out))
 
     def spec(self) -> FormatSpec:
         d_out = self.neuron_active.shape[-1]
         n = 1
         for s in self.neuron_active.shape[:-1]:
             n *= s
+        a_pad = self._a_pad()
         return FormatSpec(d_in=self.d_in, d_out=d_out, n_replicas=n,
                           itemsize=self.weight_itemsize, k=self.d_in,
-                          max_active=d_out, active_fraction=1.0)
+                          max_active=a_pad,
+                          active_fraction=min(a_pad / max(d_out, 1), 1.0))
 
     @classmethod
     def estimate_cost(cls, spec, batch, profile):
+        # priced at the EXPORTED (lane-padded) column count the kernel runs
+        # over; the compute term includes the fused one-hot scatter epilogue
+        # (an MXU matmul of the compact tile against the selection matrix)
         b = max(int(batch), 1)
-        flops = 2.0 * b * spec.n_replicas * spec.d_in * spec.d_out
+        a_pad = padded_active_count(spec.max_active, spec.d_out)
+        flops = 2.0 * b * spec.n_replicas * a_pad * (spec.d_in + spec.d_out)
         return max(cls.estimate_weight_bytes(spec) / profile.hbm_bytes_per_s,
                    flops / profile.mxu_flops_per_s)
 
     @classmethod
     def estimate_weight_bytes(cls, spec):
-        # full dense weight + n_out neuron_active bools (mask read saved)
-        return spec.n_replicas * (spec.d_in * spec.d_out * spec.itemsize
-                                  + spec.d_out)
+        # the gathered (d_in, a_pad) weight panel + the int32 active_index;
+        # neuron_active is not read on the gathered hot path
+        a_pad = padded_active_count(spec.max_active, spec.d_out)
+        return spec.n_replicas * (spec.d_in * a_pad * spec.itemsize
+                                  + a_pad * 4)
+
+    def tuning_key(self, batch, *, backend=None):
+        if self.active_index is None:
+            return None  # legacy instance: reference path, nothing to tune
+        return shape_tuning_key(
+            self.d_in, self._a_pad(), 0, batch, backend=backend,
+            itemsize=self.weight_itemsize, kind="structured",
+            scatter_width=self.neuron_active.shape[-1])
+
+    @classmethod
+    def spec_tuning_key(cls, spec, batch, *, backend=None):
+        a_pad = padded_active_count(spec.max_active, spec.d_out)
+        return shape_tuning_key(spec.d_in, a_pad, 0, batch, backend=backend,
+                                itemsize=spec.itemsize, kind="structured",
+                                scatter_width=spec.d_out)
 
     @classmethod
     def abstract(cls, lead, d_in, d_out, k, dtype):
+        # a_pad = padded d_out static bound (no realized ablation counts at
+        # lowering time); the concrete export shrinks it to the real count
+        a_pad = padded_active_count(d_out, d_out)
         return cls(neuron_active=jax.ShapeDtypeStruct((*lead, d_out),
                                                       jnp.bool_),
+                   active_index=jax.ShapeDtypeStruct((*lead, a_pad),
+                                                     jnp.int32),
                    d_in=d_in, weight_itemsize=jnp.dtype(dtype).itemsize)
 
     def donate_refresh(self, w, mask, stats=None, *, donate=True):
         return type(self).export_from_dense(w, mask, stats)
+
+    def rebuild_missing(self, missing):
+        # archives written before active_index existed: derive it from the
+        # RESTORED neuron_active, sized by the restored masks' realized
+        # active count — NOT the template's length, which was sized from the
+        # template's own (e.g. fresh-init) masks and may be too short for
+        # the archive's actives (a too-short vector would silently zero the
+        # overflow columns). Restore runs host-side on concrete arrays, so
+        # the one scalar sync is fine here.
+        if "active_index" in missing and "neuron_active" not in missing \
+                and self.active_index is not None:
+            act = self.neuron_active
+            realized = int(jax.device_get(
+                jnp.max(jnp.sum(act.astype(jnp.int32), axis=-1))))
+            a_pad = padded_active_count(max(realized, 1), act.shape[-1])
+            return dataclasses.replace(
+                self, active_index=active_index_from_bools(act, a_pad))
+        return self
 
 
 @_register
@@ -617,13 +750,17 @@ class CondensedOverActive(SparseFormat):
         a, k = self.values.shape[-2:]
         return shape_tuning_key(
             self.d_in, a, k, batch, backend=backend,
-            itemsize=jnp.dtype(self.values.dtype).itemsize)
+            itemsize=jnp.dtype(self.values.dtype).itemsize, kind="coa",
+            scatter_width=self.d_out)
 
     @classmethod
     def spec_tuning_key(cls, spec, batch, *, backend=None):
-        # the kernel runs over the (max_active, k) arrays the export built
+        # the FUSED kernel runs over the (max_active, k) arrays the export
+        # built and scatters into the d_out-wide output block in-kernel —
+        # both are part of its key (kind="coa")
         return shape_tuning_key(spec.d_in, spec.max_active, spec.k, batch,
-                                backend=backend, itemsize=spec.itemsize)
+                                backend=backend, itemsize=spec.itemsize,
+                                kind="coa", scatter_width=spec.d_out)
 
     @classmethod
     def abstract(cls, lead, d_in, d_out, k, dtype):
@@ -724,8 +861,16 @@ def from_legacy_leaf(leaf: dict, *, d_in: int | None = None,
             values=leaf["values"], indices=leaf["indices"],
             out_index=leaf["out_index"], d_in=int(d_in or 0),
             d_out=int(d_out))
-    return StructuredFanIn(neuron_active=leaf["neuron_active"],
-                           d_in=int(d_in or 0))
+    act = leaf["neuron_active"]
+    d_out_real = act.shape[-1]
+    # legacy dicts carry no realized active count (recovering one would need
+    # a host sync) — build active_index at the padded d_out bound; a
+    # re-export from the masks tightens it to the realized count
+    return StructuredFanIn(
+        neuron_active=act,
+        active_index=active_index_from_bools(
+            act, padded_active_count(d_out_real, d_out_real)),
+        d_in=int(d_in or 0))
 
 
 def is_legacy_leaf(node) -> bool:

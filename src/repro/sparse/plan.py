@@ -261,22 +261,32 @@ def select_representation(stack, *, batch_size: int, itemsize: int,
                           profile: HardwareProfile = DEFAULT_PROFILE) -> StackDecision:
     """Cost-model choice among EXACT representations for one stack.
 
-    ``structured`` is never auto-selected: it keeps active columns dense, so
-    it is only output-equivalent for ablation-only masks (Fig. 4 ablation, on
-    request via a fixed path). The exact candidates are masked, plain
-    condensed, and — once ablation has created dead rows to drop —
-    condensed-over-active. Plain condensed stays a candidate even with
-    ablation: under UNEVEN ablation the exported condensed-over-active leaf
-    still carries max_active rows (plus out_index bytes) and can price
-    ABOVE plain condensed, which is exact for any mask.
+    The always-exact candidates are masked, plain condensed, and — once
+    ablation has created dead rows to drop — condensed-over-active. Plain
+    condensed stays a candidate even with ablation: under UNEVEN ablation
+    the exported condensed-over-active leaf still carries max_active rows
+    (plus out_index bytes) and can price ABOVE plain condensed, which is
+    exact for any mask.
+
+    ``structured`` joins the candidate set only for ABLATION-ONLY stacks
+    (``stats.min_fan_in == d_in``: every surviving column fully dense —
+    structured keeps active columns dense, so that is the one regime where
+    it is output-equivalent). With the column-gathered kernel its weight
+    bytes and MXU FLOPs scale with the active fraction, so it wins the
+    bandwidth-bound shapes of ablation-only stacks outright and cedes to
+    masked at large batch where its fused scatter epilogue's extra MXU term
+    outweighs the column saving.
     """
     costs = stack_costs(stack, batch_size=batch_size, itemsize=itemsize,
                         k=max(stats.k, 1),
                         active_fraction=stats.active_fraction, profile=profile,
                         max_active_fraction=_max_active_fraction(stack, stats))
     has_ablation = stats.active_fraction < 1.0 - _ABLATION_EPS
-    cands = ("masked", "condensed", "condensed_over_active") if has_ablation \
-        else ("masked", "condensed")
+    cands = ("masked", "condensed")
+    if has_ablation:
+        cands += ("condensed_over_active",)
+        if stats.min_fan_in >= stack.d_in:
+            cands += ("structured",)
     rep = min(cands, key=lambda r: costs[r])
     return StackDecision(name=stack.name, representation=rep, est_s=costs,
                          stats=stats)

@@ -114,6 +114,8 @@ def restore(ckpt_dir: str, step: int, template):
             # pre-formats MASKED leaf — a bare bool array saved at the stack
             # path itself — is picked up by the single-array fallback below
             # (shape-guarded so a wrong-rank hit can never slip through).
+            missing = set()
+
             def _build_field(name, leaf):
                 key = "/".join(prefix + (name,))
                 bare = "/".join(prefix)
@@ -121,8 +123,15 @@ def restore(ckpt_dir: str, step: int, template):
                         and bare in data
                         and tuple(data[bare].shape) == tuple(leaf.shape)):
                     return build(leaf, prefix)
+                if key not in data:
+                    missing.add(name)
                 return build(leaf, prefix + (name,))
-            return tree.map_arrays_with_names(_build_field)
+            rebuilt = tree.map_arrays_with_names(_build_field)
+            # fields the archive predates (e.g. StructuredFanIn.active_index)
+            # are re-derived from the restored arrays instead of keeping the
+            # template's values, so the format stays internally consistent
+            return (rebuilt.rebuild_missing(frozenset(missing)) if missing
+                    else rebuilt)
         if isinstance(tree, (list, tuple)):
             return type(tree)(build(v, prefix + (f"#{i}",)) for i, v in enumerate(tree))
         key = "/".join(prefix)

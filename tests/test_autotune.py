@@ -305,17 +305,34 @@ def test_grads_exact_with_forced_block_n_only():
 
 
 def test_tune_registry_covers_ablated_row_count(tmp_cache):
-    """Stacks with ablation are tuned at BOTH d_out and max_active: the
-    condensed-over-active leaf's (a, k) arrays are what ops looks up."""
+    """Stacks with ablation are tuned at BOTH the full d_out shape and the
+    surviving-row shape — the latter under the FUSED coa kernel's key (the
+    condensed-over-active leaf's (a, k) arrays plus the d_out-wide scatter
+    are what ops looks up); ablation-ONLY stacks additionally tune the
+    structured kernel's key."""
     import types
 
     from repro.sparse import condensed as COND
+    from repro.sparse import formats as F
     stack = types.SimpleNamespace(name="s", d_in=48, d_out=96)
     stats = {"s": COND.ExportStats(k=4, max_active=64, active_fraction=0.66)}
     out = AT.tune_registry([stack], stats, batch=1, reps=1)
     assert set(out) == {"s", "s@a64"}
     assert AT.lookup_blocks(1, 48, 96, 4) is not None    # full rows
-    assert AT.lookup_blocks(1, 48, 64, 4) is not None    # surviving rows
+    spec = F.spec_for_stack(stack, stats["s"], 4)
+    assert AT.lookup_entry(F.CondensedOverActive.spec_tuning_key(
+        spec, 1)) is not None                            # surviving rows (coa)
+    # NOT ablation-only (min_fan_in < d_in): no structured entry
+    assert AT.lookup_entry(F.StructuredFanIn.spec_tuning_key(spec, 1)) is None
+    # ablation-ONLY stack: the structured kernel's key is tuned too
+    stats3 = {"s3": COND.ExportStats(k=48, max_active=64, active_fraction=0.66,
+                                     min_fan_in=48)}
+    stack3 = types.SimpleNamespace(name="s3", d_in=48, d_out=96)
+    out3 = AT.tune_registry([stack3], stats3, batch=1, reps=1)
+    assert set(out3) == {"s3", "s3@a64", "s3@structured"}
+    spec3 = F.spec_for_stack(stack3, stats3["s3"], 4)
+    assert AT.lookup_entry(F.StructuredFanIn.spec_tuning_key(
+        spec3, 1)) is not None
     # no ablation -> only the full shape is tuned
     stats2 = {"s2": COND.ExportStats(k=4, max_active=80, active_fraction=1.0)}
     out2 = AT.tune_registry(

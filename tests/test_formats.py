@@ -178,13 +178,20 @@ def test_tuning_key_stability(cls, wm):
     assert k1 == k2
     rt = jax.jit(lambda f: f)(fmt)
     assert rt.tuning_key(4, backend="cpu") == k1
-    if cls in F.CONDENSED_FAMILY:
+    if cls in F.CONDENSED_FAMILY or cls is F.StructuredFanIn:
         assert isinstance(k1, str) and "/b8" in k1  # batch 4 -> bucket 8
         # batches in the same bucket share the key; other buckets do not
         assert fmt.tuning_key(8, backend="cpu") == k1
         assert fmt.tuning_key(9, backend="cpu") != k1
     else:
-        assert k1 is None  # no tunable kernel behind masked/structured
+        assert k1 is None  # no tunable kernel behind masked
+    if cls is F.StructuredFanIn:
+        # the structured kernel's key space is tagged apart from condensed
+        assert "/structured-o" in k1
+    if cls is F.CondensedOverActive:
+        # the fused scatter-epilogue kernel's key space carries the dense
+        # scatter width (part of its VMEM geometry)
+        assert "/coa-o" in k1
 
 
 def test_tuning_key_matches_ops_trace_time_derivation(wm):
