@@ -48,9 +48,11 @@ every stack to masked also reports exactly 1.0.
 import argparse
 import json
 import statistics
+import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import configs
 from repro.launch.engine import ServingEngine
@@ -59,9 +61,12 @@ from repro.sparse import condensed as COND
 from repro.sparse import plan as PLAN
 from repro.sparse import registry as REG
 
-# v3: per-row "predicted_us_per_tok" (plan cost model at the bucket, sparse
-# stacks only) + per-row "ablation" fraction from the high-ablation sweep
-SCHEMA_VERSION = 3
+# v4: scheduler rows (path="scheduler") — Poisson-arrival trace through the
+# paged continuous-batching engine with p50/p99 end-to-end latency, plus the
+# padded-vs-exact full-bucket throughput comparison. The per-path format
+# rows keep running on the legacy exact-shape slab engine (paged=False) so
+# their us_per_tok stays comparable across PRs.
+SCHEMA_VERSION = 4
 
 BATCHES = (1, 32, 256)
 ABLATIONS = (0.0, 0.5)
@@ -117,8 +122,11 @@ def run(batches=BATCHES, arch: str = "qwen3-1.7b", results: list | None = None,
             prompts = jax.random.randint(key, (batch, PROMPT_LEN), 0,
                                          cfg.vocab_size)
             for path in PLAN.PATHS:
+                # legacy exact-shape engine: these rows track FORMAT decode
+                # throughput across PRs — the scheduler's padding/paging
+                # overheads are measured separately by run_scheduler
                 engine = ServingEngine(cfg, params, masks, reg, path=path,
-                                       profile=profile)
+                                       profile=profile, paged=False)
                 pkey = engine.plan_key(batch)
                 if path == "masked":
                     formats_chosen = {s.name: "masked" for s in reg}
@@ -179,6 +187,129 @@ def run(batches=BATCHES, arch: str = "qwen3-1.7b", results: list | None = None,
     return rows
 
 
+def run_scheduler(arch: str = "qwen3-1.7b", *, n_requests: int = 24,
+                  rate: float = 4.0, req_batch: int = 2, gen_len: int = 16,
+                  gen_chunk: int = 8, reps: int = REPS, seed: int = 0,
+                  results: list | None = None):
+    """SLA benchmark for the continuous-batching scheduler.
+
+    Drives a seeded Poisson arrival trace (``rate`` requests/s, ``req_batch``
+    streams each) through the paged engine with an event loop stepping ONE
+    decode chunk at a time — requests join at chunk boundaries and retire
+    mid-generation, exactly the serving regime. Reports p50/p99 end-to-end
+    latency (completion minus ARRIVAL, so queueing waits count against the
+    scheduler) and aggregate decode throughput.
+
+    Also measures the tentpole's price directly: full-bucket throughput of
+    bucket-PADDED slabs (several small requests admitted into one padded
+    dispatch) vs one exact-shape slab at the same total batch on the legacy
+    engine — ``padded_vs_exact`` is the ratio (>= 0.9 expected: padding work
+    on rows the masks discard is bandwidth the bucket already paid for).
+    Runs ``--path masked`` so the numbers isolate SCHEDULING, not formats.
+    """
+    cfg = configs.get_smoke_config(arch)
+    key = jax.random.PRNGKey(seed)
+    reg = REG.build_registry(cfg)
+    params = M.init_params(cfg, key, REG.k_fan_map(cfg, reg))
+    masks = REG.init_sparsity_state(cfg, key, reg)["masks"]
+    rng = np.random.default_rng(seed)
+    rows = []
+
+    # -- Poisson trace ------------------------------------------------------
+    engine = ServingEngine(cfg, params, masks, reg, path="masked",
+                           gen_chunk=gen_chunk)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            (req_batch, PROMPT_LEN)).astype(np.int32)
+               for _ in range(n_requests)]
+    # warm every program signature the trace will hit (one throwaway
+    # request), so the measured latencies are scheduling + compute only
+    warm_rid = engine.submit(prompts[0], gen_len)
+    engine.step()
+    engine.retire(warm_rid)
+
+    arrival_of: dict[int, float] = {}
+    latencies: list[float] = []
+    submitted = n_done = 0
+    t0 = time.perf_counter()
+    while n_done < n_requests:
+        now = time.perf_counter() - t0
+        while submitted < n_requests and arrivals[submitted] <= now:
+            rid = engine.submit(prompts[submitted], gen_len)
+            arrival_of[rid] = arrivals[submitted]
+            submitted += 1
+        busy = any(r.active for r in engine._runners.values())
+        if not engine._pending and not busy:
+            if submitted < n_requests:      # idle until the next arrival
+                time.sleep(max(arrivals[submitted] - now, 0.0))
+            continue
+        engine.step(max_chunks=1)
+        now = time.perf_counter() - t0
+        for res in engine.retire():
+            latencies.append(now - arrival_of[res.id])
+            n_done += 1
+    makespan = time.perf_counter() - t0
+    p50, p99 = (float(x) for x in np.percentile(latencies, [50, 99]))
+    trace_tok_s = n_requests * req_batch * gen_len / makespan
+    rows.append((f"serve_paths/scheduler/poisson_r{rate:g}", p50 * 1e3,
+                 f"p99_ms={p99 * 1e3:.1f};tok_s={trace_tok_s:.1f};"
+                 f"n={n_requests}"))
+
+    # -- padded vs exact at a full bucket -----------------------------------
+    bucket = engine.plan_key(req_batch).batch_bucket
+    n_fill = bucket // req_batch
+    fill_prompts = [rng.integers(0, cfg.vocab_size,
+                                 (req_batch, PROMPT_LEN)).astype(np.int32)
+                    for _ in range(n_fill)]
+    big_prompt = np.concatenate(fill_prompts, axis=0)
+
+    def padded_pass():
+        rids = [engine.submit(p, gen_len) for p in fill_prompts]
+        engine.step()
+        res = [engine.retire(r)[0] for r in rids]
+        return sum(r.tok_s for r in res)    # same dispatches: tok_s sums
+
+    legacy = ServingEngine(cfg, params, masks, reg, path="masked",
+                           paged=False)
+
+    def exact_pass():
+        rid = legacy.submit(big_prompt, gen_len)
+        legacy.step()
+        [res] = legacy.retire(rid)
+        return res.tok_s
+
+    for _ in range(max(WARMUP, 1)):
+        padded_pass(), exact_pass()
+    padded = statistics.median([padded_pass() for _ in range(max(reps, 1))])
+    exact = statistics.median([exact_pass() for _ in range(max(reps, 1))])
+    ratio = padded / exact
+    rows.append((f"serve_paths/scheduler/padded_vs_exact_b{bucket}",
+                 1e6 / padded,
+                 f"padded_tok_s={padded:.1f};exact_tok_s={exact:.1f};"
+                 f"ratio={ratio:.3f}"))
+
+    if results is not None:
+        results.append({
+            "arch": arch, "path": "scheduler", "kind": "poisson_trace",
+            "rate_per_s": rate, "n_requests": n_requests,
+            "req_batch": req_batch, "gen_len": gen_len,
+            "gen_chunk": gen_chunk, "plan_key_bucket": bucket,
+            "p50_latency_ms": round(p50 * 1e3, 2),
+            "p99_latency_ms": round(p99 * 1e3, 2),
+            "tok_s": round(trace_tok_s, 2),
+            "makespan_s": round(makespan, 3),
+        })
+        results.append({
+            "arch": arch, "path": "scheduler", "kind": "padded_vs_exact",
+            "plan_key_bucket": bucket, "req_batch": req_batch,
+            "gen_len": gen_len,
+            "padded_tok_s": round(padded, 2),
+            "exact_tok_s": round(exact, 2),
+            "padded_vs_exact": round(ratio, 4),
+        })
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -195,11 +326,24 @@ def main(argv=None):
                     help="comma-separated ablated-neuron fractions; each "
                          "re-runs the path x batch grid (0.5 exercises the "
                          "gathered structured and fused COA kernels)")
+    ap.add_argument("--trace-requests", type=int, default=24,
+                    help="Poisson-trace length for the scheduler SLA rows")
+    ap.add_argument("--trace-rate", type=float, default=4.0,
+                    help="Poisson arrival rate (requests/s)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: small grid, one rep, short trace "
+                         "(same artifact contract as the full run)")
     ap.add_argument("--out", default="BENCH_serve_paths.json",
                     help="machine-readable results (perf trajectory across PRs)")
     args = ap.parse_args(argv)
     batches = tuple(int(b) for b in args.batches.split(","))
     ablations = tuple(float(a) for a in args.ablations.split(","))
+    trace_n, gen_len = args.trace_requests, 16
+    if args.smoke:
+        batches = tuple(b for b in batches if b <= 32) or (1,)
+        ablations = (0.0,)
+        args.warmup, args.reps = 1, 1
+        trace_n, gen_len = 8, 8
     profile = (PLAN.HardwareProfile.measure()
                if args.profile == "measured" else PLAN.DEFAULT_PROFILE)
 
@@ -207,6 +351,9 @@ def main(argv=None):
     rows = run(batches=batches, arch=args.arch, results=results,
                profile=profile, warmup=args.warmup, reps=args.reps,
                ablations=ablations)
+    rows += run_scheduler(arch=args.arch, n_requests=trace_n,
+                          rate=args.trace_rate, gen_len=gen_len,
+                          reps=args.reps, results=results)
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     if args.out:

@@ -178,6 +178,61 @@ def lower_serve_engine(cfg, shape, mesh):
     return lower_serve_planned(cfg, shape, mesh, reps)
 
 
+def lower_serve_paged(cfg, shape, mesh):
+    """The continuous-batching decode program: one step against the paged
+    KV pool (block tables + per-stream lengths), lowered abstractly at this
+    shape's batch with the pool sharded page-wise over the batch axes.
+    Proves the scheduler's decode program compiles and the pool fits at
+    production scale. The dry-run pool holds exactly batch x pages-per-
+    stream pages (batch-axis divisible); the engine's extra reserved
+    garbage page rounds up to the next multiple in production."""
+    from repro.compat import NamedSharding
+    from repro.compat import PartitionSpec as P
+    from repro.models import paged as PG
+    if not M.supports_paged(cfg):
+        raise ValueError(
+            f"{cfg.name}: architecture outside the paged serving path "
+            "(windowed/ring caches, M-RoPE, audio or SSM state) — use "
+            "program=serve")
+    rules = ShardingRules(cfg, mesh)
+    registry = REG.build_registry(cfg)
+    k_fan = REG.k_fan_map(cfg, registry)
+    params_sds = _abstract(lambda k: M.init_params(cfg, k, k_fan),
+                           jax.random.PRNGKey(0))
+    if registry:
+        masks_sds = _abstract(
+            lambda k: REG.init_sparsity_state(cfg, k, registry)["masks"],
+            jax.random.PRNGKey(0))
+    else:
+        masks_sds = {}
+    bsz = shape.global_batch
+    bs_blk = 16
+    nb = PG.pages_for(shape.seq_len + bs_blk, bs_blk)
+    pool_sds = _abstract(lambda: M.init_paged_pool(cfg, bsz * nb, bs_blk))
+    table_sds = jax.ShapeDtypeStruct((bsz, nb), jnp.int32)
+    len_sds = jax.ShapeDtypeStruct((bsz,), jnp.int32)
+    batch_sds = make_batch_spec(cfg, shape)
+
+    p_sh = rules.params(params_sds)
+    m_sh = rules.masks(masks_sds)
+    c_sh = rules.cache(pool_sds, global_batch=bsz)
+    b_sh = rules.batch(batch_sds, shape=shape)
+    bax = rules.batch_axes(bsz)
+    t_sh = NamedSharding(mesh, P(bax or None, None))
+    l_sh = NamedSharding(mesh, P(bax or None))
+
+    def serve_step(params, masks, batch, pool, table, lengths):
+        return M.paged_decode_step(cfg, params, masks, batch, pool, table,
+                                   lengths)
+
+    jitted = jax.jit(serve_step,
+                     in_shardings=(p_sh, m_sh, b_sh, c_sh, t_sh, l_sh),
+                     out_shardings=(None, c_sh), donate_argnums=(3,))
+    with compat.use_mesh(mesh):
+        return jitted.lower(params_sds, masks_sds, batch_sds, pool_sds,
+                            table_sds, len_sds)
+
+
 def lower_serve(cfg, shape, mesh):
     if shape.kind == "prefill":
         # larger attention chunks for long-prompt prefill: fewer unrolled
@@ -224,7 +279,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, quiet: bool = False,
                 "serve_cond": lower_serve_condensed,
                 "serve_struct": lower_serve_structured,
                 "serve_plan": lower_serve_plan,
-                "serve_engine": lower_serve_engine}[
+                "serve_engine": lower_serve_engine,
+                "serve_paged": lower_serve_paged}[
         (("train" if shape.kind == "train" else "serve") if program == "auto"
          else program)]
     t0 = time.time()

@@ -1,10 +1,10 @@
-"""Programmatic serving engine: submit / step / retire over execution plans.
+"""Programmatic serving engine: a continuous-batching request scheduler.
 
 ``ServingEngine`` is the API the serve CLI, the benchmarks and the examples
 drive; it owns the pieces that used to be hand-wired per caller:
 
-* **Admission** — ``submit(prompts, gen_len)`` queues a request (a batch of
-  prompt streams) and returns its id.
+* **Admission** — ``submit(prompts, gen_len)`` validates a request (a batch
+  of int token streams in ``[0, vocab)``) and queues it.
 * **Grouping by plan key** — pending requests are grouped by ``PlanKey``:
   the request's BATCH BUCKET (``autotune.BATCH_BUCKETS`` — the same buckets
   that key the kernel autotune cache, so a group's tuned blocks and its
@@ -12,16 +12,30 @@ drive; it owns the pieces that used to be hand-wired per caller:
   signature the cost model picks at that bucket. One execution ``Plan``
   (serving pytree of ``repro.sparse.formats`` objects) is built lazily per
   key and shared by every request the key ever groups.
-* **Execution** — ``step()`` runs each group through the jitted
-  prefill + ``lax.scan`` greedy-decode programs (cache donated). Requests
-  in a group with the same (prompt_len, gen_len) are CONCATENATED along the
-  batch axis and decoded as one program dispatch — mixed-batch serving, the
-  ROADMAP item this engine exists for. Greedy decode is batch-independent,
-  so a request's tokens are identical whether it runs alone or fused into a
-  group slab.
-* **Retirement** — ``retire()`` pops finished ``Result``s (tokens +
-  timings); ``refresh(params, masks, mask_versions)`` propagates a training
-  job's incremental export into every cached plan.
+* **Execution** — ``step()`` SCHEDULES rather than fuses: every dispatch is
+  padded to the group's batch bucket (and prompts to their power-of-two
+  bucket), so ONE compiled prefill program per (bucket, prompt bucket) and
+  one decode program per (bucket, gen chunk) serve every request the key
+  ever groups — a slab can never exceed its bucket because the bucket IS
+  the dispatch shape. KV state lives in a paged pool (``repro.models.paged``:
+  per-stream block tables over shared pages; idle rows point at the reserved
+  garbage page 0), so requests are admitted at chunk boundaries into a
+  RUNNING generation and finished streams free their pages mid-flight — no
+  cache copies, no recompiles, no waiting for the slowest stream. Greedy
+  decode is batch-row independent and masked pad slots contribute exact
+  zeros, so a request's tokens are bitwise identical whether it runs alone,
+  padded, or beside strangers admitted mid-generation.
+* **Retirement** — ``retire()`` pops finished ``Result``s (tokens + timings
+  + a ``cold`` flag when a dispatch compiled inside the timed window;
+  ``warm=True`` pre-compiles new program signatures on garbage pages so SLA
+  timings never include XLA compiles); ``refresh(params, masks,
+  mask_versions)`` propagates a training job's incremental export into
+  every cached plan.
+
+Architectures outside ``model.supports_paged`` (windowed/ring caches, M-RoPE,
+audio, SSM state) — or ``paged=False`` — use the legacy slab path: requests
+sharing (prompt_len, gen_len) are concatenated and dispatched at their exact
+shape, split so no slab exceeds its plan's bucket.
 
 ``repro.launch.serve`` is a thin CLI over this module; the jitted
 prefill/decode primitives and the ``generate``/``serve_once`` helpers live
@@ -35,8 +49,10 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import model as M
+from repro.models import paged as PG
 from repro.sparse import autotune as AT
 from repro.sparse import condensed as COND
 from repro.sparse import plan as PLAN
@@ -117,6 +133,82 @@ def generate(cfg, params, masks, prompts: jax.Array, gen_len: int):
 
 
 # ---------------------------------------------------------------------------
+# paged (continuous-batching) execution primitives
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(4,))
+def _paged_prefill(cfg, params, masks, batch, pool, table, prompt_lens):
+    # one compiled program per (batch bucket, prompt bucket): every slab in
+    # the bucket is padded to this shape, so the cache never misses per-slab
+    return M.paged_prefill_step(cfg, params, masks, batch, pool, table,
+                                prompt_lens)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "chunk"),
+                   donate_argnums=(3,))
+def _paged_decode_chunk(cfg, params, masks, pool, table, lengths, cur,
+                        chunk: int):
+    """``chunk`` greedy decode steps over the paged pool as one scanned
+    program (pool donated). ``cur`` (B, 1) is each stream's next un-emitted
+    token; returns (emitted (B, chunk), next cur, pool) — the same emission
+    order as ``_decode_loop``, cut at chunk boundaries so the host can admit
+    and retire streams between dispatches."""
+    def body(carry, _):
+        cur, pool, lens = carry
+        logits, pool = M.paged_decode_step(cfg, params, masks,
+                                           {"tokens": cur}, pool, table, lens)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        return (nxt, pool, lens + 1), cur[:, 0]
+
+    (cur, pool, _), toks = jax.lax.scan(body, (cur, pool, lengths), None,
+                                        length=chunk)
+    return toks.T, cur, pool
+
+
+def _jit_entries(fn) -> int:
+    """Compiled-program count of a jitted function (-1 if the runtime does
+    not expose it) — the cold-dispatch detector and the test hook for the
+    one-program-per-bucket acceptance criterion."""
+    try:
+        return fn._cache_size()
+    except Exception:  # noqa: BLE001 — optional introspection only
+        return -1
+
+
+def _paged_prefill_dispatch(cfg, params, tree, tokens, pool, table,
+                            prompt_lens):
+    """Timed prefill dispatch. Returns (logits, pool, seconds, cold)."""
+    n0 = _jit_entries(_paged_prefill)
+    t0 = time.perf_counter()
+    logits, pool = _paged_prefill(cfg, params, tree, {"tokens": tokens},
+                                  pool, table, prompt_lens)
+    logits.block_until_ready()
+    return (logits, pool, time.perf_counter() - t0,
+            _jit_entries(_paged_prefill) != n0)
+
+
+def _paged_decode_dispatch(cfg, params, tree, pool, table, lengths, cur,
+                           chunk: int):
+    """Timed decode-chunk dispatch. Returns (toks, cur, pool, secs, cold)."""
+    n0 = _jit_entries(_paged_decode_chunk)
+    t0 = time.perf_counter()
+    toks, cur, pool = _paged_decode_chunk(cfg, params, tree, pool, table,
+                                          lengths, cur, chunk)
+    toks.block_until_ready()
+    return (toks, cur, pool, time.perf_counter() - t0,
+            _jit_entries(_paged_decode_chunk) != n0)
+
+
+def _pow2_bucket(n: int) -> int:
+    """Prompt-length bucket: next power of two (>= 1)."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+# ---------------------------------------------------------------------------
 # requests / plan keys / results
 # ---------------------------------------------------------------------------
 
@@ -155,15 +247,260 @@ class Result:
     prefill_s: float
     decode_s: float
     tok_s: float            # decode throughput of the slab this request ran in
+    cold: bool = False      # a dispatch this request rode compiled in-line
+                            # (never with warm=True — SLA timings stay clean)
 
 
 @dataclasses.dataclass(frozen=True)
 class GroupReport:
     """What one ``step()`` did for one plan-key group."""
     key: PlanKey
-    request_ids: tuple[int, ...]
-    n_slabs: int            # distinct (prompt_len, gen_len) program dispatches
+    request_ids: tuple[int, ...]    # requests ADMITTED during this step
+    n_slabs: int            # program dispatches that admitted them (paged:
+                            # bucket-padded prefills; legacy: exact slabs)
     total_batch: int
+
+
+# ---------------------------------------------------------------------------
+# paged runner: per-group scheduler state
+# ---------------------------------------------------------------------------
+
+
+_WARMED: set = set()        # (kind, cfg, path, key, shape...) signatures
+                            # already pre-compiled by a warm dispatch
+
+
+@dataclasses.dataclass
+class _Active:
+    """One in-flight request: which bucket rows it occupies, which pages it
+    owns, and the tokens collected so far."""
+    req: Request
+    rows: list
+    pages: list
+    remaining: int
+    prefill_s: float
+    cold: bool
+    toks: list = dataclasses.field(default_factory=list)
+    decode_s: float = 0.0
+
+
+class _PagedRunner:
+    """Device/host state for one plan-key group.
+
+    Owns the shared page pool (device, donated through every dispatch) and
+    the per-row host arrays (block tables, lengths, next tokens). Rows are
+    bucket slots: every dispatch runs at the full ``key.batch_bucket``, idle
+    rows carrying all-zero tables (the reserved garbage page) and length 0.
+    """
+
+    def __init__(self, eng: "ServingEngine", key: PlanKey):
+        self.eng = eng
+        self.key = key
+        self.bucket = key.batch_bucket
+        self.bs = eng.block_size
+        self.nb = 0                     # table width (pages per stream)
+        self.num_blocks = 1             # pool size incl. reserved page 0
+        self.pool = None                # device {"pk","pv"} or None
+        self.alloc = PG.BlockAllocator(1)
+        self.table = np.zeros((self.bucket, 0), np.int32)
+        self.lengths = np.zeros((self.bucket,), np.int32)
+        self.cur = np.zeros((self.bucket, 1), np.int32)
+        self.free_rows = list(range(self.bucket))
+        self.active: dict[int, _Active] = {}
+
+    # -- capacity -----------------------------------------------------------
+
+    def _ensure_capacity(self, nb_needed: int, pages_needed: int) -> None:
+        """Size (or grow) the pool so an admission of ``pages_needed`` fresh
+        pages with table width ``nb_needed`` fits. Growth reshapes the pool
+        (a recompile for this runner's programs — rare: only when a request
+        needs more per-stream capacity than anything seen before); existing
+        pages keep their ids, so in-flight streams are unaffected."""
+        nb = max(self.nb, nb_needed)
+        blocks = self.num_blocks
+        if pages_needed > self.alloc.available or nb > self.nb or self.pool is None:
+            blocks = max(self.num_blocks
+                         + max(pages_needed - self.alloc.available, 0),
+                         1 + self.bucket * nb)
+        if self.pool is None:
+            self.nb, self.num_blocks = nb, blocks
+            self.pool = M.init_paged_pool(self.eng.cfg, blocks, self.bs)
+            self.alloc = PG.BlockAllocator(blocks)
+            self.table = np.zeros((self.bucket, nb), np.int32)
+            return
+        if nb > self.nb:
+            self.table = np.concatenate(
+                [self.table, np.zeros((self.bucket, nb - self.nb), np.int32)],
+                axis=1)
+            self.nb = nb
+        if blocks > self.num_blocks:
+            pad = blocks - self.num_blocks
+            self.pool = jax.tree.map(
+                lambda a: jnp.concatenate(
+                    [a, jnp.zeros((a.shape[0], pad, *a.shape[2:]), a.dtype)],
+                    axis=1),
+                self.pool)
+            self.alloc.grow(blocks)
+            self.num_blocks = blocks
+
+    # -- warm-up ------------------------------------------------------------
+
+    def _warm(self, kind: str, t_or_chunk: int) -> None:
+        """Pre-compile a new program signature on garbage state (zero pool,
+        all tables at the reserved page) so the first TIMED dispatch through
+        it never includes the XLA compile."""
+        eng = self.eng
+        sig = (kind, eng.cfg, eng.path, self.key, t_or_chunk,
+               self.nb, self.num_blocks, self.bs)
+        if sig in _WARMED:
+            return
+        tree = eng.serving_tree_for(self.key)
+        pool = M.init_paged_pool(eng.cfg, self.num_blocks, self.bs)
+        table = jnp.zeros((self.bucket, self.nb), jnp.int32)
+        if kind == "prefill":
+            _paged_prefill_dispatch(
+                eng.cfg, eng.params, tree,
+                jnp.zeros((self.bucket, t_or_chunk), jnp.int32), pool, table,
+                jnp.zeros((self.bucket,), jnp.int32))
+        else:
+            _paged_decode_dispatch(
+                eng.cfg, eng.params, tree, pool, table,
+                jnp.zeros((self.bucket,), jnp.int32),
+                jnp.zeros((self.bucket, 1), jnp.int32), t_or_chunk)
+        _WARMED.add(sig)
+
+    # -- admission ----------------------------------------------------------
+
+    def admit(self, pending: list[Request]) -> list[Request]:
+        """Admit a FIFO prefix of ``pending`` into free rows with ONE
+        bucket-padded prefill dispatch. Prompts are right-padded to the
+        admitted set's power-of-two prompt bucket; idle rows (live streams
+        mid-decode included) get all-zero tables so the prefill cannot touch
+        their pages. Returns the admitted requests (possibly empty); on a
+        failed dispatch all bookkeeping is rolled back and nothing is
+        admitted."""
+        chosen, rows_needed = [], 0
+        for r in pending:
+            b = r.prompts.shape[0]
+            if rows_needed + b > len(self.free_rows):
+                break
+            chosen.append(r)
+            rows_needed += b
+        if not chosen:
+            return []
+
+        eng = self.eng
+        t_bucket = max(_pow2_bucket(r.prompts.shape[1]) for r in chosen)
+        # per-stream page budget: prompt bucket + generation, NO chunk
+        # slack. A stream that finishes mid-chunk rides the chunk out
+        # writing garbage tokens; those positions clamp into its own last
+        # page (paged_cache_write), whose real slots it no longer needs —
+        # every token it will EMIT was computed before the overshoot, and
+        # its pages are released at chunk end. Keeping capacity tight keeps
+        # the attention span (nb * bs) at the contiguous cache's size.
+        per_row = {r.id: PG.pages_for(t_bucket + r.gen_len, self.bs)
+                   for r in chosen}
+        self._ensure_capacity(
+            max(per_row.values()),
+            sum(per_row[r.id] * r.prompts.shape[0] for r in chosen))
+        if eng.warm:
+            self._warm("prefill", t_bucket)
+
+        tokens = np.zeros((self.bucket, t_bucket), np.int32)
+        prefill_table = np.zeros((self.bucket, self.nb), np.int32)
+        prompt_lens = np.zeros((self.bucket,), np.int32)
+        admitted: list[_Active] = []
+        try:
+            for r in chosen:
+                b, t = r.prompts.shape
+                rows = [self.free_rows.pop(0) for _ in range(b)]
+                prompts_np = np.asarray(r.prompts)
+                pages_all: list[int] = []
+                for i, row in enumerate(rows):
+                    pages = self.alloc.alloc(per_row[r.id])
+                    pages_all.extend(pages)
+                    self.table[row, :] = 0
+                    self.table[row, :len(pages)] = pages
+                    prefill_table[row] = self.table[row]
+                    tokens[row, :t] = prompts_np[i]
+                    prompt_lens[row] = t
+                admitted.append(_Active(req=r, rows=rows, pages=pages_all,
+                                        remaining=r.gen_len, prefill_s=0.0,
+                                        cold=False))
+            tree = eng.serving_tree_for(self.key)
+            logits, pool, dt, cold = _paged_prefill_dispatch(
+                eng.cfg, eng.params, tree, jnp.asarray(tokens), self.pool,
+                jnp.asarray(prefill_table), jnp.asarray(prompt_lens))
+        except Exception:
+            # roll back: nothing was admitted, the requests stay pending
+            for a in admitted:
+                self.alloc.release(a.pages)
+                for row in a.rows:
+                    self.table[row, :] = 0
+                    self.free_rows.append(row)
+            raise
+        self.pool = pool
+        first = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
+        for a in admitted:
+            a.prefill_s = dt
+            a.cold = cold
+            for row in a.rows:
+                self.cur[row, 0] = first[row]
+                self.lengths[row] = prompt_lens[row]
+            self.active[a.req.id] = a
+        return [a.req for a in admitted]
+
+    # -- decode -------------------------------------------------------------
+
+    def decode_chunk(self) -> None:
+        """One chunked decode dispatch over the full bucket. The chunk is
+        adaptive — ``min(gen_chunk, longest remaining)`` — so a nearly-done
+        group never pays for a full chunk; streams that finish inside the
+        chunk are retired (pages freed, rows recycled) before the next one."""
+        if not self.active:
+            return
+        eng = self.eng
+        chunk = min(eng.gen_chunk,
+                    max(a.remaining for a in self.active.values()))
+        live = np.zeros((self.bucket,), bool)
+        for a in self.active.values():
+            live[a.rows] = True
+        self.lengths[~live] = 0      # idle rows: writes pinned to page 0
+        if eng.warm:
+            self._warm("decode", chunk)
+        tree = eng.serving_tree_for(self.key)
+        toks, cur, pool, dt, cold = _paged_decode_dispatch(
+            eng.cfg, eng.params, tree, self.pool, jnp.asarray(self.table),
+            jnp.asarray(self.lengths), jnp.asarray(self.cur), chunk)
+        self.pool = pool
+        self.cur = np.array(cur)        # np.array: host copy stays writable
+        toks = np.asarray(toks)
+        self.lengths[live] += chunk
+        for a in list(self.active.values()):
+            take = min(chunk, a.remaining)
+            a.toks.append(toks[a.rows, :take])
+            a.remaining -= take
+            a.decode_s += dt
+            a.cold = a.cold or cold
+            if a.remaining == 0:
+                self._retire(a)
+
+    def _retire(self, a: _Active) -> None:
+        req = a.req
+        gen = np.concatenate(a.toks, axis=1)
+        out = jnp.concatenate(
+            [jnp.asarray(req.prompts, jnp.int32), jnp.asarray(gen)], axis=1)
+        b = req.prompts.shape[0]
+        self.eng._done[req.id] = Result(
+            id=req.id, tokens=out, plan_key=self.key, prefill_s=a.prefill_s,
+            decode_s=a.decode_s,
+            tok_s=b * req.gen_len / max(a.decode_s, 1e-9), cold=a.cold)
+        self.alloc.release(a.pages)
+        for row in a.rows:
+            self.table[row, :] = 0
+            self.lengths[row] = 0
+            self.free_rows.append(row)
+        del self.active[req.id]
 
 
 # ---------------------------------------------------------------------------
@@ -185,15 +522,36 @@ class ServingEngine:
     machine-calibrated one). Plans are built lazily per ``PlanKey`` at the
     BUCKET batch size and cached for the engine's lifetime; ``refresh``
     keeps them coherent with a live training job.
+
+    ``paged=None`` auto-selects the continuous-batching paged scheduler
+    when the architecture supports it (``model.supports_paged``), else the
+    legacy exact-shape slab path. ``block_size`` is the paged-pool page
+    size in tokens, ``gen_chunk`` the decode-dispatch granularity (streams
+    join/leave at chunk boundaries), and ``warm=True`` pre-compiles every
+    new program signature outside the timed window.
     """
 
     def __init__(self, cfg, params, masks, registry=None, *,
                  path: str = "auto",
                  profile: PLAN.HardwareProfile = PLAN.DEFAULT_PROFILE,
-                 mask_versions: dict | None = None):
+                 mask_versions: dict | None = None,
+                 paged: bool | None = None,
+                 block_size: int = 16,
+                 gen_chunk: int = 16,
+                 warm: bool = True):
         if path not in PLAN.PATHS:
             raise ValueError(
                 f"unknown serving path {path!r}; expected one of {PLAN.PATHS}")
+        if paged is None:
+            paged = M.supports_paged(cfg)
+        elif paged and not M.supports_paged(cfg):
+            raise ValueError(
+                "paged serving requires a causal architecture without "
+                "windowed/ring caches, M-RoPE or SSM state "
+                f"(family={cfg.family!r}); pass paged=None to auto-select "
+                "or paged=False for the legacy slab path")
+        if block_size < 1 or gen_chunk < 1:
+            raise ValueError("block_size and gen_chunk must be >= 1")
         self.cfg = cfg
         self.params = params
         self.masks = masks or {}
@@ -201,10 +559,15 @@ class ServingEngine:
                              else registry)
         self.path = path
         self.profile = profile
+        self.paged = bool(paged)
+        self.block_size = int(block_size)
+        self.gen_chunk = int(gen_chunk)
+        self.warm = bool(warm)
         self._mask_versions = mask_versions
         self._itemsize = jnp.dtype(cfg.param_dtype).itemsize
         self._stats: dict | None = None     # realized stats, computed once
         self._plans: dict[PlanKey, PLAN.Plan] = {}
+        self._runners: dict[PlanKey, _PagedRunner] = {}
         self._pending: list[Request] = []
         self._done: dict[int, Result] = {}
         self._next_id = 0
@@ -254,14 +617,27 @@ class ServingEngine:
     # -- request lifecycle --------------------------------------------------
 
     def submit(self, prompts, gen_len: int) -> int:
-        """Admit a request: ``prompts`` (B, T) int32, decode ``gen_len``
-        greedy tokens per stream. Returns the request id."""
+        """Queue a request: ``prompts`` (B, T) integer token ids in
+        ``[0, vocab_size)``, decode ``gen_len`` greedy tokens per stream.
+        Validates and casts to int32 at admission — a malformed request
+        fails HERE with a readable error, not as a device-side gather of
+        garbage rows three dispatches later. Returns the request id."""
         prompts = jnp.asarray(prompts)
-        if prompts.ndim != 2:
-            raise ValueError(f"prompts must be (batch, prompt_len); "
-                             f"got shape {prompts.shape}")
+        if prompts.ndim != 2 or 0 in prompts.shape:
+            raise ValueError(f"prompts must be (batch, prompt_len) with both "
+                             f"dims >= 1; got shape {prompts.shape}")
+        if not jnp.issubdtype(prompts.dtype, jnp.integer):
+            raise ValueError(
+                f"prompts must be integer token ids, got dtype "
+                f"{prompts.dtype}; cast explicitly if these are token ids")
         if gen_len < 1:
             raise ValueError("gen_len must be >= 1")
+        lo, hi = int(prompts.min()), int(prompts.max())
+        if lo < 0 or hi >= self.cfg.vocab_size:
+            raise ValueError(
+                f"token ids out of range: prompts span [{lo}, {hi}] but "
+                f"vocab_size is {self.cfg.vocab_size}")
+        prompts = prompts.astype(jnp.int32)
         rid = self._next_id
         self._next_id += 1
         self._pending.append(Request(id=rid, prompts=prompts,
@@ -276,15 +652,80 @@ class ServingEngine:
                               []).append(req.id)
         return groups
 
-    def step(self, quiet: bool = True) -> list[GroupReport]:
-        """Serve every pending request, one plan-key group at a time.
+    def step(self, quiet: bool = True,
+             max_chunks: int | None = None) -> list[GroupReport]:
+        """Advance serving, one plan-key group at a time.
+
+        Paged (default where supported): each group's runner loops
+        admit-then-decode — pending requests join free bucket rows at
+        chunk boundaries (one bucket-padded prefill per admission wave) and
+        each iteration decodes one adaptive chunk, retiring streams as they
+        finish. With ``max_chunks=None`` the step drains the group
+        completely; an event loop passes ``max_chunks=1`` to interleave
+        admission with arrival (continuous batching). Results land in the
+        retire queue.
+
+        Legacy (``paged=False``): requests sharing (prompt_len, gen_len)
+        fuse into exact-shape slabs, split at the bucket boundary so no
+        dispatch exceeds ``key.batch_bucket``.
+        """
+        if not self.paged:
+            return self._step_legacy(quiet)
+
+        groups: dict[PlanKey, list[Request]] = {}
+        for req in self._pending:
+            groups.setdefault(self.plan_key(req.prompts.shape[0]),
+                              []).append(req)
+        keys = list(groups)
+        for key, runner in self._runners.items():
+            if key not in groups and runner.active:
+                keys.append(key)        # drain groups with no new arrivals
+
+        reports = []
+        for key in keys:
+            runner = self._runners.get(key)
+            if runner is None:
+                runner = self._runners[key] = _PagedRunner(self, key)
+            admitted_ids: list[int] = []
+            n_prefills = total_b = chunks = 0
+            while True:
+                # requests leave the pending queue only once their prefill
+                # has actually executed: an exception mid-step (plan build,
+                # compile, OOM) must not silently drop queued work
+                pend = [r for r in self._pending
+                        if self.plan_key(r.prompts.shape[0]) == key]
+                if pend and runner.free_rows:
+                    admitted = runner.admit(pend)
+                    if admitted:
+                        served = {r.id for r in admitted}
+                        self._pending = [r for r in self._pending
+                                         if r.id not in served]
+                        admitted_ids.extend(sorted(served))
+                        n_prefills += 1
+                        total_b += sum(r.prompts.shape[0] for r in admitted)
+                        if not quiet:
+                            print(f"[engine] group {key.describe()}: "
+                                  f"admitted {len(admitted)} request(s) "
+                                  f"({total_b} stream(s)) into bucket "
+                                  f"{runner.bucket}")
+                if not runner.active:
+                    break
+                runner.decode_chunk()
+                chunks += 1
+                if max_chunks is not None and chunks >= max_chunks:
+                    break
+            reports.append(GroupReport(
+                key=key, request_ids=tuple(admitted_ids),
+                n_slabs=n_prefills, total_batch=total_b))
+        return reports
+
+    def _step_legacy(self, quiet: bool = True) -> list[GroupReport]:
+        """Exact-shape slab serving (architectures outside the paged path).
 
         Within a group, requests sharing (prompt_len, gen_len) are fused
-        into one batch slab and decoded by a single jitted program dispatch;
-        slabs with different shapes reuse the group's plan but compile their
-        own program (shape-polymorphic fusion — padding slabs up to the
-        bucket is the continuous-batching follow-up). Results land in the
-        retire queue.
+        into batch slabs, each SPLIT at the plan's bucket boundary — the
+        plan (and its tuned kernels) is calibrated at ``key.batch_bucket``,
+        so a fused slab must never exceed it.
         """
         groups: dict[PlanKey, list[Request]] = {}
         for req in self._pending:
@@ -302,28 +743,47 @@ class ServingEngine:
             for req in reqs:
                 slabs.setdefault((req.prompts.shape[1], req.gen_len),
                                  []).append(req)
+            n_dispatch = 0
             for (t, gen_len), slab in slabs.items():
-                prompts = jnp.concatenate([r.prompts for r in slab], axis=0)
-                b = prompts.shape[0]
-                out, prefill_s, decode_s, tok_s = _timed_serve(
-                    self.cfg, self.params, tree, prompts, gen_len)
-                row = 0
+                parts: list[list[Request]] = []
+                cur_part: list[Request] = []
+                cur_b = 0
                 for r in slab:
                     rb = r.prompts.shape[0]
-                    self._done[r.id] = Result(
-                        id=r.id, tokens=out[row:row + rb], plan_key=key,
-                        prefill_s=prefill_s, decode_s=decode_s, tok_s=tok_s)
-                    row += rb
-                served = {r.id for r in slab}
-                self._pending = [r for r in self._pending
-                                 if r.id not in served]
-                if not quiet:
-                    print(f"[engine] group {key.describe()}: "
-                          f"{len(slab)} request(s) fused at {b}x{t}+{gen_len} "
-                          f"({tok_s:.1f} tok/s)")
+                    if cur_part and cur_b + rb > key.batch_bucket:
+                        parts.append(cur_part)
+                        cur_part, cur_b = [], 0
+                    cur_part.append(r)
+                    cur_b += rb
+                parts.append(cur_part)
+                for part in parts:
+                    prompts = jnp.concatenate([r.prompts for r in part],
+                                              axis=0)
+                    b = prompts.shape[0]
+                    n0 = _jit_entries(_prefill) + _jit_entries(_decode_loop)
+                    out, prefill_s, decode_s, tok_s = _timed_serve(
+                        self.cfg, self.params, tree, prompts, gen_len)
+                    cold = (_jit_entries(_prefill)
+                            + _jit_entries(_decode_loop)) != n0
+                    n_dispatch += 1
+                    row = 0
+                    for r in part:
+                        rb = r.prompts.shape[0]
+                        self._done[r.id] = Result(
+                            id=r.id, tokens=out[row:row + rb], plan_key=key,
+                            prefill_s=prefill_s, decode_s=decode_s,
+                            tok_s=tok_s, cold=cold)
+                        row += rb
+                    served = {r.id for r in part}
+                    self._pending = [r for r in self._pending
+                                     if r.id not in served]
+                    if not quiet:
+                        print(f"[engine] group {key.describe()}: "
+                              f"{len(part)} request(s) fused at "
+                              f"{b}x{t}+{gen_len} ({tok_s:.1f} tok/s)")
             reports.append(GroupReport(
                 key=key, request_ids=tuple(r.id for r in reqs),
-                n_slabs=len(slabs), total_batch=sum(r.prompts.shape[0]
+                n_slabs=n_dispatch, total_batch=sum(r.prompts.shape[0]
                                                     for r in reqs)))
         return reports
 

@@ -36,9 +36,14 @@ Greedy decode for masked / condensed / condensed_over_active / auto is
 token-identical: all evaluate the same masked weights, only the
 storage/compute representation differs.
 
-The generation loop is a single jitted ``lax.scan`` over decode steps with the
-KV/SSM cache donated (no per-token Python dispatch, no cache copies) — see
-repro.launch.engine for the primitives.
+Execution is the engine's continuous-batching scheduler where the arch
+supports it: dispatches are padded to the batch bucket, KV state lives in a
+paged pool (block tables over shared pages), and decode runs in chunked
+jitted ``lax.scan`` programs with the pool donated — so one request here
+compiles the exact programs a full request mix would reuse. ``--no-paged``
+(or an arch outside ``model.supports_paged``) falls back to the legacy
+exact-shape slab path: one ``lax.scan`` over the whole generation against a
+contiguous donated cache.
 
 Calibration knobs (this machine, not a spec sheet):
 
@@ -109,6 +114,9 @@ def main(argv=None):
                          "on this machine (two gather batch points; cached "
                          "per backend in the autotune cache file) instead "
                          "of the built-in v5e-like constants")
+    ap.add_argument("--no-paged", action="store_true",
+                    help="force the legacy exact-shape slab path instead of "
+                         "the paged continuous-batching scheduler")
     ap.add_argument("--autotune", action="store_true",
                     help="run the timed kernel block-shape search for every "
                          "condensed stack shape at this batch bucket before "
@@ -138,7 +146,8 @@ def main(argv=None):
               + " GFLOP/s")
 
     engine = ServingEngine(cfg, params, masks, reg, path=args.path,
-                           profile=profile)
+                           profile=profile,
+                           paged=False if args.no_paged else None)
 
     if args.autotune and args.path == "masked":
         print("[serve] --autotune skipped: --path masked never dispatches "

@@ -297,6 +297,17 @@ class ShardingRules:
             s = leaf.shape[-3]
             sx = seq_ax if _div(s, _axsize(self.mesh, seq_ax)) else None
             return P(*([None] * lead + [b_ax, sx, None, None]))
+        if name in ("pk", "pv"):
+            # paged pool (lead..., P, bs, Hkv, D): the PAGE axis carries the
+            # batch parallelism — pages are per-stream, so sharding pages
+            # over the batch axes is the paged analog of batch sharding;
+            # the within-page token axis stays local (block scatters are
+            # page-addressed)
+            lead = nd - 4
+            p = leaf.shape[-4]
+            px = bax if (batch_sharded
+                         and _div(p, _axsize(self.mesh, bax))) else None
+            return P(*([None] * lead + [px, None, None, None]))
         if name == "h":  # SSM state (lead..., B, H, P, N): N over model
             lead = nd - 4
             n = leaf.shape[-1]

@@ -181,6 +181,67 @@ def decode_attention(
     return out[:, None].transpose(0, 1, 2, 3).reshape(b, 1, h, d)
 
 
+def paged_decode_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_table: jax.Array,
+    lengths: jax.Array,
+    *,
+    head_to_kv: tuple,
+) -> jax.Array:
+    """Single-token attention against a paged KV pool with per-stream lengths.
+
+    q: (B, 1, H, D); k_pool/v_pool: (P, bs, Hkv, D) — one layer's page pool;
+    block_table: (B, NB) int32 page ids in position order; lengths: (B,)
+    int32 tokens per stream *including* the one just written. Token ``t`` of
+    stream ``b`` lives at ``(block_table[b, t // bs], t % bs)``.
+
+    Slots at or beyond a stream's length are masked to ``NEG_INF`` before
+    the softmax, so their weights underflow to exact 0.0 — results are
+    bitwise independent of whatever garbage the masked pages hold (pad rows
+    point their whole table at the reserved page 0). This is the same
+    exact-zero argument ``chunked_attention`` uses for its kv-tail padding.
+    """
+    b, _, h, d = q.shape
+    nb = block_table.shape[1]
+    bs = k_pool.shape[1]
+    scale = d ** -0.5
+
+    # gather each stream's pages; position order is the table's entry order
+    k = k_pool[block_table].reshape(b, nb * bs, *k_pool.shape[2:])
+    v = v_pool[block_table].reshape(b, nb * bs, *v_pool.shape[2:])
+    k_exp = expand_kv(k, head_to_kv)
+    v_exp = expand_kv(v, head_to_kv)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q * scale, k_exp,
+                        preferred_element_type=jnp.float32)[:, :, 0]  # (B, H, S)
+
+    valid = jnp.arange(nb * bs)[None, :] < lengths[:, None]          # (B, S)
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p.astype(v_exp.dtype), v_exp)
+    return out[:, None]
+
+
+def paged_cache_write(k_pool, v_pool, k_new, v_new, block_table, positions):
+    """Scatter T new tokens per stream into a paged pool.
+
+    k_pool/v_pool: (P, bs, Hkv, D); k_new/v_new: (B, T, Hkv, D);
+    block_table: (B, NB) int32; positions: (B, T) int32 absolute token slots.
+    Positions past a stream's table extent clamp into its last table entry —
+    idle rows keep an all-zero table, so overshooting writes land in the
+    reserved garbage page 0 and never touch a live stream's pages.
+    """
+    bs = k_pool.shape[1]
+    nb = block_table.shape[1]
+    page = jnp.minimum(positions // bs, nb - 1)                       # (B, T)
+    blk = jnp.take_along_axis(block_table, page, axis=1)              # (B, T)
+    off = positions % bs
+    k_pool = k_pool.at[blk, off].set(k_new.astype(k_pool.dtype))
+    v_pool = v_pool.at[blk, off].set(v_new.astype(v_pool.dtype))
+    return k_pool, v_pool
+
+
 def cache_write(k_cache, v_cache, k_new, v_new, cache_len):
     """Write T_new tokens into the cache (ring semantics if cache is smaller).
 

@@ -280,10 +280,15 @@ def _heads(x, n, hd):
 
 def attn_sublayer(cfg, p: dict, m: dict, x: jax.Array, *,
                   positions, window: int, q_offset: int = 0,
-                  cache: tuple | None = None, decode: bool = False):
+                  cache: tuple | None = None, decode: bool = False,
+                  paged: tuple | None = None):
     """Pre-norm attention sublayer (residual added by caller).
 
     cache: (k_cache, v_cache, cache_len) for decode / prefill-write.
+    paged: (k_pool, v_pool, block_table, lengths) — one layer's paged KV
+    pool slice instead of a contiguous cache (``supports_paged`` families
+    only; window must be 0). Prefill writes positions [0, T) through the
+    table; decode writes one token per stream at its own length.
     Returns (out, new_cache_kv or None).
     """
     h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
@@ -303,7 +308,30 @@ def attn_sublayer(cfg, p: dict, m: dict, x: jax.Array, *,
         k = L.apply_rope(k, positions, cfg.rope_theta)
 
     new_cache = None
-    if decode:
+    if paged is not None:
+        k_pool, v_pool, block_table, lengths = paged
+        if decode:
+            k_pool, v_pool = A.paged_cache_write(
+                k_pool, v_pool, k, v, block_table, lengths[:, None])
+            attn = A.paged_decode_attention(q, k_pool, v_pool, block_table,
+                                            lengths + 1,
+                                            head_to_kv=cfg.head_to_kv)
+        else:
+            # prefill: attention over the in-flight k/v (chunked, causal —
+            # right-padded rows' pads sit after every real token, so real
+            # rows never attend them); the pool write covers all T slots,
+            # pad slots hold garbage until decode overwrites them and are
+            # masked by ``lengths`` meanwhile
+            attn = A.chunked_attention(
+                q, k, v, head_to_kv=cfg.head_to_kv, causal=cfg.causal,
+                window=window, q_offset=q_offset, q_chunk=cfg.attn_q_chunk,
+                kv_chunk=cfg.attn_kv_chunk)
+            t = k.shape[1]
+            pos = jnp.broadcast_to(jnp.arange(t)[None], (k.shape[0], t))
+            k_pool, v_pool = A.paged_cache_write(k_pool, v_pool, k, v,
+                                                 block_table, pos)
+        new_cache = (k_pool, v_pool)
+    elif decode:
         k_cache, v_cache, cache_len = cache
         k_cache, v_cache = A.cache_write(k_cache, v_cache, k, v, cache_len)
         attn = A.decode_attention(q, k_cache, v_cache, cache_len + 1,
@@ -354,20 +382,22 @@ def ssm_sublayer(cfg, p: dict, m: dict, x: jax.Array, *,
 # ===========================================================================
 
 def attn_mlp_block(cfg, p, m, x, *, positions, window, q_offset=0,
-                   cache=None, decode=False):
+                   cache=None, decode=False, paged=None):
     p, m = gather_weights(cfg, p), gather_weights(cfg, m)
     a, new_cache = attn_sublayer(cfg, p, m, x, positions=positions, window=window,
-                                 q_offset=q_offset, cache=cache, decode=decode)
+                                 q_offset=q_offset, cache=cache, decode=decode,
+                                 paged=paged)
     x = x + a
     x = x + mlp_sublayer(cfg, p, m, x)
     return seq_shard(cfg, x), new_cache
 
 
 def attn_moe_block(cfg, p, m, x, *, positions, window, q_offset=0,
-                   cache=None, decode=False):
+                   cache=None, decode=False, paged=None):
     p, m = gather_weights(cfg, p), gather_weights(cfg, m)
     a, new_cache = attn_sublayer(cfg, p, m, x, positions=positions, window=window,
-                                 q_offset=q_offset, cache=cache, decode=decode)
+                                 q_offset=q_offset, cache=cache, decode=decode,
+                                 paged=paged)
     x = x + a
     y, aux = moe_sublayer(cfg, p, m, x)
     return seq_shard(cfg, x + y), new_cache, aux
@@ -674,6 +704,112 @@ def init_cache(cfg, bsz: int, max_len: int) -> dict:
             cache["m_rem"] = _ssm_cache(cfg, rem, bsz, dt)
         cache["shared_attn"] = _attn_cache(cfg, g, bsz, max_len, dt)
     return cache
+
+
+# ---------------------------------------------------------------------------
+# paged serving (continuous batching): shared page pool + per-stream tables
+# ---------------------------------------------------------------------------
+
+def supports_paged(cfg) -> bool:
+    """Can this arch decode against a paged KV pool?
+
+    The paged read/write path covers the uniform full-attention stacks
+    (dense/vlm/moe "blocks" layouts). Windowed ring buffers, gemma's
+    local/global grouping, M-RoPE position triples, multi-codebook audio
+    and SSM state are served by the legacy contiguous-cache path.
+    """
+    return (cfg.family in ("dense", "vlm", "moe")
+            and cfg.causal
+            and not cfg.local_global_ratio
+            and not cfg.sliding_window
+            and not cfg.mrope)
+
+
+def init_paged_pool(cfg, num_blocks: int, block_size: int) -> dict:
+    """Layer-stacked page pool: {"pk"/"pv": (L, P, bs, Hkv, D)}.
+
+    Page 0 is reserved as the garbage page (see repro.models.paged) —
+    allocators must never hand it out.
+    """
+    dt = _dt(cfg)
+    shape = (cfg.n_layers, num_blocks, block_size,
+             cfg.n_kv_heads_padded, cfg.head_dim)
+    return {"pk": jnp.zeros(shape, dt), "pv": jnp.zeros(shape, dt)}
+
+
+def _paged_attn_scan(cfg, x, params, masks, pool, block_table, lengths,
+                     positions, decode: bool):
+    """Scan the attention(+mlp/moe) stack with per-layer pool slices as
+    scan xs/ys (same structure the contiguous k/v caches use)."""
+    has_moe = cfg.family == "moe"
+
+    def body(carry, xs):
+        h = carry
+        p_i, m_i, kp, vp = xs
+        pg = (kp, vp, block_table, lengths)
+        if has_moe:
+            h, (nk, nv), _aux = attn_moe_block(
+                cfg, p_i, m_i, h, positions=positions, window=0,
+                paged=pg, decode=decode)
+        else:
+            h, (nk, nv) = attn_mlp_block(
+                cfg, p_i, m_i, h, positions=positions, window=0,
+                paged=pg, decode=decode)
+        return h, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["blocks"], masks.get("blocks", {}),
+                  pool["pk"], pool["pv"]))
+    return x, {"pk": nk, "pv": nv}
+
+
+def _lm_logits(cfg, params, last: jax.Array) -> jax.Array:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    head = vocab_hint(cfg, head)
+    logits = (last @ head.astype(last.dtype)).astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab_size:
+        logits = jnp.where(jnp.arange(cfg.vocab_padded) < cfg.vocab_size,
+                           logits, -jnp.inf)
+    return logits
+
+
+def paged_prefill_step(cfg, params: Params, masks: Masks, batch: dict,
+                       pool: dict, block_table: jax.Array,
+                       prompt_lens: jax.Array):
+    """Prefill right-padded prompts into a paged KV pool.
+
+    batch["tokens"]: (B, T) right-padded to the prompt bucket;
+    prompt_lens: (B,) real lengths (0 for idle rows, whose all-zero table
+    rows point at the reserved garbage page). Causal chunked attention means
+    real tokens never attend a pad; each row's logits are read at its OWN
+    last real token, so results are bitwise those of an unpadded prefill.
+    Returns (logits (B, V), new pool).
+    """
+    masks = masks or {}
+    x, positions = embed_inputs(cfg, params, batch)
+    x, new_pool = _paged_attn_scan(cfg, x, params, masks, pool, block_table,
+                                   prompt_lens, positions, decode=False)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last = x[jnp.arange(x.shape[0]), jnp.maximum(prompt_lens - 1, 0)]
+    return _lm_logits(cfg, params, last), new_pool
+
+
+def paged_decode_step(cfg, params: Params, masks: Masks, batch: dict,
+                      pool: dict, block_table: jax.Array, lengths: jax.Array):
+    """One-token decode against the paged pool, per-stream positions.
+
+    batch["tokens"]: (B, 1); lengths: (B,) tokens already present per
+    stream (the new token is written at slot ``lengths[b]`` and attends
+    ``lengths[b] + 1`` slots — exactly the contiguous decode_step math with
+    the scalar cache length replaced by a vector). Returns (logits, pool).
+    """
+    masks = masks or {}
+    x, positions = embed_inputs(cfg, params, batch)
+    positions = positions + lengths[:, None]
+    x, new_pool = _paged_attn_scan(cfg, x, params, masks, pool, block_table,
+                                   lengths, positions, decode=True)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _lm_logits(cfg, params, x[:, 0]), new_pool
 
 
 def _decode_attn_scan(cfg, stack_p, stack_m, kc, vc, x, positions, window, cache_len):

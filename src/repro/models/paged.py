@@ -1,0 +1,76 @@
+"""Paged KV cache: a shared block pool + per-stream block tables.
+
+The continuous-batching scheduler (repro.launch.engine) keeps ONE compiled
+decode program per batch bucket and changes group membership between chunk
+dispatches — streams are admitted and retired without copying anyone's KV
+state. The enabling layout is paging (vLLM-style, adapted to the functional
+JAX serving loop):
+
+* **Pool** — per layer, ``num_blocks`` fixed-size pages of ``block_size``
+  token slots: ``{"pk": (L, P, bs, Hkv, D), "pv": ...}`` (see
+  ``model.init_paged_pool``). The pool is donated through every jitted
+  dispatch, so serving memory stays at one pool regardless of how many
+  requests flow through it.
+* **Block table** — per stream, an int32 row of page ids in position order;
+  token ``t`` of a stream lives at ``(table[t // bs], t % bs)``. Tables and
+  per-stream lengths are small host-managed arrays passed into each
+  dispatch; reshaping GROUP membership is a host-side table edit, never a
+  device copy.
+* **Block 0 is reserved** as a garbage page: idle rows of a bucket-padded
+  dispatch point their whole table at it, so their writes land harmlessly
+  and their reads are masked by ``lengths == 0``. Real streams never have
+  page 0 in their table, which is what makes bucket-padding exact: a padded
+  dispatch cannot touch a live stream's pages.
+
+The device-side read/write primitives live in ``repro.models.attention``
+(``paged_decode_attention`` / ``paged_cache_write``); this module owns the
+host-side accounting.
+"""
+from __future__ import annotations
+
+
+def pages_for(tokens: int, block_size: int) -> int:
+    """Pages needed to hold ``tokens`` slots of one stream."""
+    return -(-max(int(tokens), 0) // int(block_size))
+
+
+class BlockAllocator:
+    """Host-side free list over a pool's page ids (page 0 reserved).
+
+    Allocation is LIFO (recently freed pages are reused first — they are the
+    ones most likely still warm in cache) and all-or-nothing: ``alloc``
+    either returns exactly ``n`` pages or raises without side effects.
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 1:
+            raise ValueError("num_blocks must be >= 1 (page 0 is reserved)")
+        self.num_blocks = int(num_blocks)
+        self._free = list(range(1, self.num_blocks))
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"paged KV pool exhausted: requested {n} pages, "
+                f"{len(self._free)}/{self.num_blocks - 1} free")
+        out = [self._free.pop() for _ in range(n)]
+        return out
+
+    def release(self, pages) -> None:
+        for p in pages:
+            if p == 0:
+                raise ValueError("page 0 is the reserved garbage page")
+            if p in self._free or not (0 < p < self.num_blocks):
+                raise ValueError(f"double free / bad page id {p}")
+            self._free.append(p)
+
+    def grow(self, new_num_blocks: int) -> None:
+        """Extend the free list after the pool itself grew."""
+        if new_num_blocks < self.num_blocks:
+            raise ValueError("pool can only grow")
+        self._free.extend(range(self.num_blocks, new_num_blocks))
+        self.num_blocks = int(new_num_blocks)

@@ -55,11 +55,18 @@ _STATE: dict = {"path": None, "data": None}
 
 
 def batch_bucket(b: int) -> int:
-    """Smallest bucket >= b (the last bucket absorbs everything above it)."""
+    """Smallest bucket >= b; above the table the geometric x4 progression
+    continues unbounded. The bucket is a CEILING by contract — plans are
+    priced, kernels tuned and (since the continuous-batching engine) slabs
+    padded at the bucket, so silently clamping an oversized batch DOWN
+    would price/tune/pad it at a bucket smaller than its real shape."""
     for v in BATCH_BUCKETS:
         if b <= v:
             return v
-    return BATCH_BUCKETS[-1]
+    v = BATCH_BUCKETS[-1]
+    while v < b:
+        v *= 4
+    return v
 
 
 # ---------------------------------------------------------------------------

@@ -87,11 +87,15 @@ def test_batch_bucket_monotonic_and_covering():
     assert AT.batch_bucket(2) == 8
     assert AT.batch_bucket(8) == 8
     assert AT.batch_bucket(9) == 32
-    assert AT.batch_bucket(10**9) == AT.BATCH_BUCKETS[-1]
+    # above the table the geometric x4 progression continues: the bucket
+    # must COVER the batch (a plan calibrated below the dispatch batch was
+    # the slab-overflow bug), never silently clamp down
+    assert AT.batch_bucket(2049) == 8192
+    assert AT.batch_bucket(10**9) >= 10**9
     prev = 0
-    for b in range(1, 3000):
+    for b in list(range(1, 3000)) + [10**6, 10**9]:
         cur = AT.batch_bucket(b)
-        assert cur >= b or cur == AT.BATCH_BUCKETS[-1]
+        assert cur >= b
         assert cur >= prev
         prev = cur
 

@@ -146,8 +146,9 @@ def test_engine_matches_pre_redesign_serve_cli_output(smoke_setup):
 
 
 def test_mixed_shape_requests_in_one_group_decode_correctly(smoke_setup):
-    """Different (prompt_len, gen_len) under one plan key: separate slabs,
-    shared plan, correct per-request shapes and tokens."""
+    """Different (prompt_len, gen_len) under one plan key: ONE bucket-padded
+    prefill admits both (prompts padded to the shared prompt bucket), shared
+    plan, correct per-request shapes and tokens."""
     cfg, reg, params, masks = smoke_setup
     eng = ENG.ServingEngine(cfg, params, masks, reg, path="condensed")
     pa = _prompts(2, 8, seed=31, vocab=cfg.vocab_size)
@@ -155,7 +156,7 @@ def test_mixed_shape_requests_in_one_group_decode_correctly(smoke_setup):
     ra = eng.submit(pa, 4)
     rb = eng.submit(pb, 5)
     reports = eng.step()
-    assert len(reports) == 1 and reports[0].n_slabs == 2
+    assert len(reports) == 1 and reports[0].n_slabs == 1
     tree = serve.build_serving_masks(cfg, reg, params, masks, "condensed")
     [res_a] = eng.retire(ra)
     [res_b] = eng.retire(rb)
@@ -229,6 +230,143 @@ def test_engine_refresh_keeps_serving_live_training(smoke_setup):
     np.testing.assert_array_equal(np.array(res.tokens), np.array(ref))
 
 
+# ---------------------------------------------------------------------------
+# continuous batching: compile economy, mid-flight admission, cold flags
+# ---------------------------------------------------------------------------
+
+def test_adversarial_mix_compiles_one_prefill_and_one_decode(smoke_setup):
+    """The tentpole acceptance criterion: requests with adversarially varied
+    (batch, prompt_len) inside one bucket share ONE compiled prefill program
+    (bucket x prompt bucket) and ONE decode program (bucket x chunk) —
+    asserted via the jit cache-miss counters."""
+    cfg, reg, params, masks = smoke_setup
+    # unique block_size so this test's program shapes are fresh regardless
+    # of what other tests already compiled into the module-level caches
+    eng = ENG.ServingEngine(cfg, params, masks, reg, path="condensed",
+                            block_size=4, gen_chunk=8)
+    if ENG._jit_entries(ENG._paged_prefill) == -1:
+        pytest.skip("jit cache introspection unavailable on this jax")
+
+    n_pre = ENG._jit_entries(ENG._paged_prefill)
+    n_dec = ENG._jit_entries(ENG._paged_decode_chunk)
+    for b, t, seed in ((2, 8, 71), (3, 6, 72), (2, 5, 73)):
+        eng.submit(_prompts(b, t, seed=seed, vocab=cfg.vocab_size), 6)
+    eng.step()
+    assert ENG._jit_entries(ENG._paged_prefill) - n_pre == 1
+    assert ENG._jit_entries(ENG._paged_decode_chunk) - n_dec == 1
+
+    # a second adversarial wave reuses both programs: zero new compiles,
+    # and (warm=True default) nothing rode a compile in its timed window
+    n_pre = ENG._jit_entries(ENG._paged_prefill)
+    n_dec = ENG._jit_entries(ENG._paged_decode_chunk)
+    for b, t, seed in ((3, 8, 75), (3, 3, 76), (2, 4, 77)):
+        eng.submit(_prompts(b, t, seed=seed, vocab=cfg.vocab_size), 6)
+    eng.step()
+    assert ENG._jit_entries(ENG._paged_prefill) - n_pre == 0
+    assert ENG._jit_entries(ENG._paged_decode_chunk) - n_dec == 0
+    results = eng.retire()
+    assert len(results) == 6
+    assert not any(r.cold for r in results)
+
+
+def test_mid_generation_admission_and_early_retirement_identity(smoke_setup):
+    """A stream admitted into a RUNNING generation, and one retired while
+    others continue, each produce exactly their standalone tokens."""
+    cfg, reg, params, masks = smoke_setup
+    eng = ENG.ServingEngine(cfg, params, masks, reg, path="condensed",
+                            gen_chunk=2)
+    pa = _prompts(2, 8, seed=81, vocab=cfg.vocab_size)
+    pb = _prompts(2, 6, seed=82, vocab=cfg.vocab_size)
+    ra = eng.submit(pa, 8)
+    eng.step(max_chunks=1)              # ra admitted, 2/8 tokens decoded
+    assert eng.retire() == []
+    rb = eng.submit(pb, 3)              # joins mid-generation of ra
+    eng.step(max_chunks=1)
+    for _ in range(8):
+        if not eng._runners[eng.plan_key(2)].active:
+            break
+        eng.step(max_chunks=1)          # rb retires early, ra continues
+    tree = serve.build_serving_masks(cfg, reg, params, masks, "condensed",
+                                     batch_size=eng.plan_key(2).batch_bucket)
+    [res_a] = eng.retire(ra)
+    [res_b] = eng.retire(rb)
+    np.testing.assert_array_equal(
+        np.array(res_a.tokens), np.array(serve.generate(cfg, params, tree,
+                                                        pa, 8)))
+    np.testing.assert_array_equal(
+        np.array(res_b.tokens), np.array(serve.generate(cfg, params, tree,
+                                                        pb, 3)))
+
+
+def test_submit_validation_rejects_malformed_tokens(smoke_setup):
+    cfg, reg, params, masks = smoke_setup
+    eng = ENG.ServingEngine(cfg, params, masks, reg, path="auto")
+    with pytest.raises(ValueError, match="integer token ids"):
+        eng.submit(jnp.zeros((1, 4), jnp.float32), 2)
+    with pytest.raises(ValueError, match="out of range"):
+        eng.submit(jnp.full((1, 4), cfg.vocab_size, jnp.int32), 2)
+    with pytest.raises(ValueError, match="out of range"):
+        eng.submit(jnp.full((1, 4), -1, jnp.int32), 2)
+    with pytest.raises(ValueError, match="both dims"):
+        eng.submit(jnp.zeros((0, 4), jnp.int32), 2)
+    # valid int64 input is cast, not rejected
+    rid = eng.submit(np.zeros((1, 4), np.int64), 2)
+    assert eng._pending[-1].prompts.dtype == jnp.int32
+    assert eng._pending[-1].id == rid
+
+
+def test_cold_flag_marks_unwarmed_first_dispatch(smoke_setup):
+    """warm=False: the first request through a fresh program signature is
+    flagged cold (its timings include the XLA compile); the next request
+    through the same signature is not."""
+    cfg, reg, params, masks = smoke_setup
+    eng = ENG.ServingEngine(cfg, params, masks, reg, path="condensed",
+                            block_size=5, gen_chunk=3, warm=False)
+    if ENG._jit_entries(ENG._paged_prefill) == -1:
+        pytest.skip("jit cache introspection unavailable on this jax")
+    r1 = eng.submit(_prompts(2, 8, seed=91, vocab=cfg.vocab_size), 3)
+    eng.step()
+    [res1] = eng.retire(r1)
+    assert res1.cold
+    r2 = eng.submit(_prompts(2, 8, seed=92, vocab=cfg.vocab_size), 3)
+    eng.step()
+    [res2] = eng.retire(r2)
+    assert not res2.cold
+
+
+def test_legacy_path_splits_slabs_at_bucket_boundary(smoke_setup,
+                                                     monkeypatch):
+    """The original overflow bug, pinned: same-(T, gen) requests totaling
+    more streams than the bucket must NOT fuse into one oversized slab —
+    the plan (and its tuned kernels) is calibrated at the bucket."""
+    cfg, reg, params, masks = smoke_setup
+    eng = ENG.ServingEngine(cfg, params, masks, reg, path="condensed",
+                            paged=False)
+    batches = []
+    real = ENG._timed_serve
+
+    def spy(cfg_, params_, tree_, prompts, gen_len):
+        batches.append(prompts.shape[0])
+        return real(cfg_, params_, tree_, prompts, gen_len)
+
+    monkeypatch.setattr(ENG, "_timed_serve", spy)
+    prompts = [_prompts(3, 8, seed=s, vocab=cfg.vocab_size)
+               for s in (101, 102, 103)]
+    rids = [eng.submit(p, 4) for p in prompts]
+    [report] = eng.step()               # 9 streams in a bucket-8 group
+    assert report.key.batch_bucket == 8
+    assert report.n_slabs == 2          # split, not one 9-stream slab
+    assert all(b <= report.key.batch_bucket for b in batches)
+    assert sum(batches) == 9
+    tree = serve.build_serving_masks(cfg, reg, params, masks, "condensed",
+                                     batch_size=8)
+    for rid, p in zip(rids, prompts):
+        [res] = eng.retire(rid)
+        np.testing.assert_array_equal(
+            np.array(res.tokens),
+            np.array(serve.generate(cfg, params, tree, p, 4)))
+
+
 def test_step_failure_keeps_unexecuted_requests_pending(smoke_setup,
                                                         monkeypatch):
     """An exception mid-step must not silently drop queued work: requests
@@ -239,7 +377,7 @@ def test_step_failure_keeps_unexecuted_requests_pending(smoke_setup,
     rb = eng.submit(_prompts(2, 8, seed=62, vocab=cfg.vocab_size), 3)
 
     calls = {"n": 0}
-    real = ENG._timed_serve
+    real = ENG._paged_prefill_dispatch
 
     def flaky(*args, **kw):
         calls["n"] += 1
@@ -247,7 +385,7 @@ def test_step_failure_keeps_unexecuted_requests_pending(smoke_setup,
             raise RuntimeError("injected slab failure")
         return real(*args, **kw)
 
-    monkeypatch.setattr(ENG, "_timed_serve", flaky)
+    monkeypatch.setattr(ENG, "_paged_prefill_dispatch", flaky)
     with pytest.raises(RuntimeError, match="injected"):
         eng.step()
     # NEITHER request was served; BOTH are still queued (the failed slab's

@@ -1,0 +1,219 @@
+"""Paged KV cache: host-side page accounting (repro.models.paged), the
+device read/write primitives (attention.paged_*), and the model-level
+paged prefill/decode entry points.
+
+The load-bearing property is BITWISE identity: a stream decoded against
+the paged pool — bucket-padded, right-padded prompt, non-contiguous rows,
+garbage page 0 carrying other streams' stale writes — must emit exactly
+the tokens the contiguous-cache ``generate`` path emits. Masked slots hit
+``NEG_INF`` before the softmax, their weights underflow to exact 0.0, and
+exact zeros change no sums.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.launch import serve
+from repro.models import attention as A
+from repro.models import model as M
+from repro.models import paged as PG
+from repro.sparse import registry as REG
+
+
+# ---------------------------------------------------------------------------
+# host-side accounting
+# ---------------------------------------------------------------------------
+
+def test_pages_for_rounds_up():
+    assert PG.pages_for(0, 16) == 0
+    assert PG.pages_for(1, 16) == 1
+    assert PG.pages_for(16, 16) == 1
+    assert PG.pages_for(17, 16) == 2
+    assert PG.pages_for(-3, 16) == 0
+
+
+def test_allocator_reserves_page_zero():
+    al = PG.BlockAllocator(5)
+    assert al.available == 4
+    pages = al.alloc(4)
+    assert sorted(pages) == [1, 2, 3, 4]        # page 0 never handed out
+    with pytest.raises(ValueError, match="reserved"):
+        al.release([0])
+    with pytest.raises(ValueError):
+        PG.BlockAllocator(0)
+
+
+def test_allocator_alloc_release_cycle():
+    al = PG.BlockAllocator(8)
+    a = al.alloc(3)
+    b = al.alloc(2)
+    assert al.available == 2
+    al.release(a)
+    assert al.available == 5
+    with pytest.raises(ValueError, match="double free"):
+        al.release(a)
+    c = al.alloc(5)
+    assert not (set(b) & set(c))
+    with pytest.raises(RuntimeError, match="exhausted"):
+        al.alloc(1)
+
+
+def test_allocator_grow_extends_free_list():
+    al = PG.BlockAllocator(3)
+    al.alloc(2)
+    al.grow(6)
+    assert al.available == 3
+    assert al.num_blocks == 6
+    with pytest.raises(ValueError, match="only grow"):
+        al.grow(4)
+
+
+# ---------------------------------------------------------------------------
+# device primitives: paged == contiguous
+# ---------------------------------------------------------------------------
+
+def test_paged_write_then_attend_matches_contiguous():
+    """Scatter tokens through a block table (rows deliberately owning
+    shuffled, non-adjacent pages), read back via paged attention, and
+    compare with the contiguous decode path on identical content."""
+    key = jax.random.PRNGKey(0)
+    b, s, hkv, h, d, bs = 2, 12, 2, 4, 8, 4
+    nb = s // bs
+    head_to_kv = (0, 0, 1, 1)
+    k1, k2, k3 = jax.random.split(key, 3)
+    k_all = jax.random.normal(k1, (b, s, hkv, d))
+    v_all = jax.random.normal(k2, (b, s, hkv, d))
+    q = jax.random.normal(k3, (b, 1, h, d))
+
+    # contiguous reference: full caches, every slot valid
+    ref = A.decode_attention(q, k_all, v_all, jnp.int32(s),
+                             head_to_kv=head_to_kv)
+
+    # paged: pool pre-filled with garbage, shuffled page ownership
+    pool_k = jax.random.normal(jax.random.PRNGKey(9), (16, bs, hkv, d))
+    pool_v = jax.random.normal(jax.random.PRNGKey(10), (16, bs, hkv, d))
+    table = jnp.asarray([[7, 3, 11], [2, 9, 5]], jnp.int32)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    pool_k, pool_v = A.paged_cache_write(pool_k, pool_v, k_all, v_all,
+                                         table, positions)
+    out = A.paged_decode_attention(q, pool_k, pool_v, table,
+                                   jnp.full((b,), s, jnp.int32),
+                                   head_to_kv=head_to_kv)
+    np.testing.assert_array_equal(np.array(ref), np.array(out))
+
+
+def test_paged_attention_masks_beyond_length_exactly():
+    """Slots at/after a stream's length must contribute EXACT zeros: the
+    result cannot depend on garbage in the unread tail of its pages."""
+    key = jax.random.PRNGKey(1)
+    b, hkv, d, bs, nb = 1, 2, 8, 4, 2
+    head_to_kv = (0, 1)
+    q = jax.random.normal(key, (b, 1, 2, d))
+    table = jnp.asarray([[1, 2]], jnp.int32)
+    lengths = jnp.asarray([5], jnp.int32)
+    base_k = jax.random.normal(jax.random.PRNGKey(2), (3, bs, hkv, d))
+    base_v = jax.random.normal(jax.random.PRNGKey(3), (3, bs, hkv, d))
+    out1 = A.paged_decode_attention(q, base_k, base_v, table, lengths,
+                                    head_to_kv=head_to_kv)
+    # scribble over every slot past the length (and all of page 0)
+    junk_k = base_k.at[2, 1:].set(99.0).at[0].set(-7.0)
+    junk_v = base_v.at[2, 1:].set(-99.0).at[0].set(7.0)
+    out2 = A.paged_decode_attention(q, junk_k, junk_v, table, lengths,
+                                    head_to_kv=head_to_kv)
+    np.testing.assert_array_equal(np.array(out1), np.array(out2))
+
+
+def test_paged_write_overshoot_lands_in_garbage_page():
+    """Positions past a table's extent clamp into its LAST entry; an idle
+    row's all-zero table pins every write to the reserved page 0 — so a
+    bucket-padded dispatch can never corrupt a live stream's pages."""
+    bs, hkv, d = 4, 1, 2
+    pool_k = jnp.zeros((3, bs, hkv, d))
+    pool_v = jnp.zeros((3, bs, hkv, d))
+    live = pool_k[1:]  # pages 1..2 belong to (hypothetical) live streams
+    table = jnp.zeros((1, 2), jnp.int32)            # idle row
+    k_new = jnp.ones((1, 1, hkv, d))
+    positions = jnp.asarray([[37]], jnp.int32)      # far past any extent
+    pool_k, pool_v = A.paged_cache_write(pool_k, pool_v, k_new, k_new,
+                                         table, positions)
+    np.testing.assert_array_equal(np.array(pool_k[1:]), np.array(live))
+    assert float(pool_k[0].sum()) != 0.0            # landed in page 0
+
+
+# ---------------------------------------------------------------------------
+# model entry points
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = configs.get_smoke_config("qwen3-1.7b")
+    key = jax.random.PRNGKey(0)
+    reg = REG.build_registry(cfg)
+    params = M.init_params(cfg, key, REG.k_fan_map(cfg, reg))
+    masks = REG.init_sparsity_state(cfg, key, reg)["masks"]
+    return cfg, params, masks
+
+
+def test_supports_paged_gates_on_architecture(smoke_model):
+    cfg, _, _ = smoke_model
+    assert M.supports_paged(cfg)
+    assert not M.supports_paged(dataclasses.replace(cfg, sliding_window=16))
+    assert not M.supports_paged(dataclasses.replace(cfg, mrope=True))
+    assert not M.supports_paged(dataclasses.replace(cfg, family="ssm"))
+
+
+def test_init_paged_pool_shapes(smoke_model):
+    cfg, _, _ = smoke_model
+    pool = M.init_paged_pool(cfg, num_blocks=7, block_size=4)
+    assert pool["pk"].shape == (cfg.n_layers, 7, 4, cfg.n_kv_heads_padded,
+                                cfg.head_dim)
+    assert pool["pk"].shape == pool["pv"].shape
+
+
+def test_paged_generation_bitwise_matches_contiguous(smoke_model):
+    """End-to-end identity under maximal adversity: bucket padding (2 live
+    streams in an 8-row dispatch), non-contiguous row placement, a prompt
+    right-padded past its length, and a pool whose garbage page has been
+    written through by the pad rows."""
+    cfg, params, masks = smoke_model
+    bucket, t, t_short, gen, bs = 8, 8, 6, 5, 4
+    prompts = jax.random.randint(jax.random.PRNGKey(7), (2, t), 0,
+                                 cfg.vocab_size)
+    rows = [5, 2]                                   # deliberately scattered
+    nb = PG.pages_for(t + gen, bs)
+    pool = M.init_paged_pool(cfg, 1 + bucket * nb, bs)
+    al = PG.BlockAllocator(1 + bucket * nb)
+
+    table = np.zeros((bucket, nb), np.int32)
+    tokens = np.zeros((bucket, t), np.int32)
+    lens = np.zeros((bucket,), np.int32)
+    for i, row in enumerate(rows):
+        table[row] = al.alloc(nb)
+        take = t if i == 0 else t_short
+        tokens[row, :take] = np.asarray(prompts[i, :take])
+        lens[row] = take
+
+    logits, pool = M.paged_prefill_step(
+        cfg, params, masks, {"tokens": jnp.asarray(tokens)}, pool,
+        jnp.asarray(table), jnp.asarray(lens))
+    cur = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    lengths = jnp.asarray(lens)
+    toks = []
+    for _ in range(gen):
+        toks.append(np.array(cur[:, 0]))
+        logits, pool = M.paged_decode_step(
+            cfg, params, masks, {"tokens": cur}, pool, jnp.asarray(table),
+            lengths)
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        lengths = lengths + 1
+    gen_toks = np.stack(toks, axis=1)               # (bucket, gen)
+
+    for i, row in enumerate(rows):
+        take = t if i == 0 else t_short
+        ref = serve.generate(cfg, params, masks, prompts[i:i + 1, :take],
+                             gen)
+        np.testing.assert_array_equal(gen_toks[row], np.array(ref[0, take:]))

@@ -74,6 +74,32 @@ def test_cache_specs_divisible(name):
         _map_with_path(f, cache_sds)
 
 
+@pytest.mark.parametrize("name", configs.ALL_ARCHS)
+def test_paged_pool_specs_page_sharded_and_divisible(name):
+    """The paged KV pool shards its PAGE axis over the batch axes (the
+    paged analog of batch sharding) whenever the page count divides."""
+    cfg = configs.get_config(name)
+    if not M.supports_paged(cfg):
+        pytest.skip("outside the paged serving path")
+    mesh = FakeMesh({"data": 16, "model": 16})
+    rules = ShardingRules(cfg, mesh)
+    for shape in configs.shapes_for(name, cfg.family, cfg.causal):
+        if shape.kind != "decode":
+            continue
+        nb = -(-(shape.seq_len + 16) // 16)
+        pool_sds = jax.eval_shape(
+            lambda: M.init_paged_pool(cfg, shape.global_batch * nb, 16))
+
+        def f(path, leaf):
+            spec = rules.cache_spec(path, leaf,
+                                    global_batch=shape.global_batch)
+            _check_divisible(path, leaf, spec, mesh.shape)
+            if shape.global_batch % 16 == 0:
+                assert spec[-4] is not None, (name, path, spec)
+
+        _map_with_path(f, pool_sds)
+
+
 def test_dst_compute_specs_put_model_on_neuron_axis():
     cfg = configs.get_config("mistral-large-123b")
     mesh = FakeMesh({"data": 16, "model": 16})
