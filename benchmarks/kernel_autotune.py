@@ -57,6 +57,18 @@ SMOKE_SHAPES = [
     ("smoke_w_down", 128, 64, 26),
 ]
 
+# quantized decode smoke: ONE int8 shape tuned under the wint8 key space
+# (the dequant-fused kernel streams 1-byte values + a per-neuron f32 scale
+# row; its block rankings are tuned and cached separately from the float
+# keys). Same tuned>=default no-regression contract as the float rows —
+# these rows join the exit-code check.
+SMOKE_QUANT_SHAPES = [
+    ("smoke_w_gate@int8", 64, 128, 13),
+]
+FULL_QUANT_SHAPES = [
+    ("vit_b16_mlp@90int8", 3072, 768, 307),
+]
+
 # Structured (column-gathered) kernel shapes: (name, d_in, a_pad, d_out) —
 # the ablation-only Fig. 4 point, a_pad = lane-padded surviving columns.
 # Same tuned>=default contract as the condensed shapes, under the
@@ -119,6 +131,22 @@ def tune_rows(shapes, batches, reps: int) -> list[dict]:
             res = AT.autotune_blocks(b, d_in, n_out, k, reps=reps)
             rows.append(_tune_row(name, b, res, kind="condensed", d_in=d_in,
                                   n_out=n_out, k=k))
+    return rows
+
+
+def quantized_tune_rows(shapes, batches, reps: int,
+                        values_dtype: str = "int8") -> list[dict]:
+    """Tuned-vs-default rows for the dequant-fused condensed kernel: the
+    tuner quantizes its synthetic operands and times every candidate with
+    the fused scale epilogue, persisting winners under the ``w<dtype>``
+    tuning keys the serving engine looks up at trace time."""
+    rows = []
+    for name, d_in, n_out, k in shapes:
+        for b in batches:
+            res = AT.autotune_blocks(b, d_in, n_out, k, reps=reps,
+                                     values_dtype=values_dtype)
+            rows.append(_tune_row(name, b, res, kind="condensed", d_in=d_in,
+                                  n_out=n_out, k=k, values_dtype=values_dtype))
     return rows
 
 
@@ -254,11 +282,13 @@ def run(smoke: bool = True, reps: int = 0):
     """benchmarks.run harness entry: CSV rows only (no JSON artifact)."""
     shapes = SMOKE_SHAPES if smoke else FULL_SHAPES
     sshapes = SMOKE_STRUCT_SHAPES if smoke else FULL_STRUCT_SHAPES
+    qshapes = SMOKE_QUANT_SHAPES if smoke else FULL_QUANT_SHAPES
     xshapes = SMOKE_CROSSOVER_SHAPES if smoke else FULL_CROSSOVER_SHAPES
     reps = reps or (3 if smoke else 5)
     rows = []
     for r in (tune_rows(shapes, DECODE_BATCHES, reps)
-              + structured_tune_rows(sshapes, DECODE_BATCHES, reps)):
+              + structured_tune_rows(sshapes, DECODE_BATCHES, reps)
+              + quantized_tune_rows(qshapes, DECODE_BATCHES[:1], reps)):
         blk = ("decode" if r["tuned_block_b"] is None
                else str(r["tuned_block_b"])) + f"x{r['tuned_block_n']}"
         rows.append((f"kernel_autotune/{r['kind']}/{r['shape']}/b{r['batch']}",
@@ -284,6 +314,7 @@ def main(argv=None):
 
     shapes = SMOKE_SHAPES if args.smoke else FULL_SHAPES
     sshapes = SMOKE_STRUCT_SHAPES if args.smoke else FULL_STRUCT_SHAPES
+    qshapes = SMOKE_QUANT_SHAPES if args.smoke else FULL_QUANT_SHAPES
     xshapes = SMOKE_CROSSOVER_SHAPES if args.smoke else FULL_CROSSOVER_SHAPES
     reps = args.reps or (3 if args.smoke else 5)
     backend = jax.default_backend()
@@ -291,7 +322,8 @@ def main(argv=None):
     print(f"[kernel_autotune] backend={backend} "
           f"interpret={cm.default_interpret()}")
     tuned = (tune_rows(shapes, DECODE_BATCHES, reps)
-             + structured_tune_rows(sshapes, DECODE_BATCHES, reps))
+             + structured_tune_rows(sshapes, DECODE_BATCHES, reps)
+             + quantized_tune_rows(qshapes, DECODE_BATCHES[:1], reps))
     for r in tuned:
         blk = ("decode" if r["tuned_block_b"] is None
                else str(r["tuned_block_b"])) + f"x{r['tuned_block_n']}"

@@ -58,6 +58,7 @@ from repro import configs
 from repro.launch.engine import ServingEngine
 from repro.models import model as M
 from repro.sparse import condensed as COND
+from repro.sparse import formats as F
 from repro.sparse import plan as PLAN
 from repro.sparse import registry as REG
 
@@ -66,7 +67,14 @@ from repro.sparse import registry as REG
 # padded-vs-exact full-bucket throughput comparison. The per-path format
 # rows keep running on the legacy exact-shape slab engine (paged=False) so
 # their us_per_tok stays comparable across PRs.
-SCHEMA_VERSION = 4
+# v5: every row records ``values_dtype`` (existing rows: "f32" — all v4
+# fields are unchanged, so v4 consumers keep parsing byte-identically), and
+# the default sweep adds quantized condensed rows (int8 at B=1 and B=256,
+# kind="quantized") measuring greedy token agreement vs the f32 condensed
+# engine plus the values-stream byte ratio both PRICED
+# (formats.Condensed.estimate_values_bytes) and MEASURED (device array
+# nbytes of the exported values+scales).
+SCHEMA_VERSION = 5
 
 BATCHES = (1, 32, 256)
 ABLATIONS = (0.0, 0.5)
@@ -183,7 +191,102 @@ def run(batches=BATCHES, arch: str = "qwen3-1.7b", results: list | None = None,
                         # but is recorded on every row for a self-describing
                         # artifact
                         "profile": profile.name,
+                        "values_dtype": "f32",
                     })
+    rows += _quantized_rows(cfg, reg, params, base_masks, batches,
+                            profile=profile, warmup=warmup, reps=reps,
+                            arch=arch, key=key, results=results)
+    return rows
+
+
+# int8 condensed joins the default sweep at the decode end (B=1) and the
+# MXU end (B=256) of the batch range — the two points the crossover claim
+# is anchored at
+QUANT_BATCHES = (1, 256)
+
+
+def _quantized_rows(cfg, reg, params, masks, batches, *, profile, warmup,
+                    reps, arch, key, results):
+    """Quantized condensed rows: int8 decode vs the f32 condensed engine.
+
+    Measures what the tentpole claims rather than assuming it: greedy token
+    agreement over the generated tokens (int8 engine vs f32 engine, same
+    prompts), and the values-stream byte ratio both priced
+    (``estimate_values_bytes``) and measured (``values.nbytes`` +
+    ``scales.nbytes`` of the exported leaves). The measured ratio exceeds
+    the large-k asymptote ``(k+4)/(4k)`` on tiny smoke stacks (the f32
+    scales row amortizes over few weights) — the row records the stacks'
+    realized k so the artifact is self-interpreting.
+    """
+    q_batches = [b for b in QUANT_BATCHES if b in batches] or [min(batches)]
+    stats = COND.export_stats(reg, masks)
+    itemsize = jnp.dtype(cfg.param_dtype).itemsize
+    rows = []
+    for batch in q_batches:
+        prompts = jax.random.randint(key, (batch, PROMPT_LEN), 0,
+                                     cfg.vocab_size)
+        engines = {
+            "f32": ServingEngine(cfg, params, masks, reg, path="condensed",
+                                 profile=profile, paged=False),
+            "int8": ServingEngine(cfg, params, masks, reg, path="condensed",
+                                  profile=profile, paged=False,
+                                  values_dtype="int8"),
+        }
+        plans = {vd: e.plan_for(e.plan_key(batch))
+                 for vd, e in engines.items()}
+        serving = {vd: p.weight_bytes()[0] for vd, p in plans.items()}
+        masked_ref = plans["f32"].weight_bytes()[1]
+        priced = {vd: 0 for vd in engines}
+        measured = {vd: 0 for vd in engines}
+        for s in reg:
+            for vd in engines:
+                spec = F.spec_for_stack(s, stats[s.name], itemsize,
+                                        None if vd == "f32" else vd)
+                priced[vd] += F.Condensed.estimate_values_bytes(spec)
+                leaf = REG.get_path(plans[vd].serving_tree, s.path)
+                measured[vd] += leaf.values.nbytes
+                if leaf.scales is not None:
+                    measured[vd] += leaf.scales.nbytes
+
+        def timed_pass(eng):
+            rid = eng.submit(prompts, GEN_LEN)
+            eng.step()
+            [res] = eng.retire(rid)
+            return res
+
+        for eng in engines.values():
+            for _ in range(max(warmup, 1)):
+                timed_pass(eng)
+        f32_res = [timed_pass(engines["f32"]) for _ in range(max(reps, 1))]
+        q_res = [timed_pass(engines["int8"]) for _ in range(max(reps, 1))]
+        tok_s = statistics.median(r.tok_s for r in q_res)
+        gen_f = np.asarray(f32_res[-1].tokens[:, -GEN_LEN:])
+        gen_q = np.asarray(q_res[-1].tokens[:, -GEN_LEN:])
+        agreement = float(np.mean(gen_f == gen_q))
+        vals_priced = priced["int8"] / max(priced["f32"], 1)
+        vals_meas = measured["int8"] / max(measured["f32"], 1)
+        ks = sorted({stats[s.name].k for s in reg})
+        rows.append((f"serve_paths/condensed_int8/b{batch}", 1e6 / tok_s,
+                     f"tok_s={tok_s:.1f};values_bytes_vs_f32={vals_meas:.3f};"
+                     f"token_agreement={agreement:.3f}"))
+        if results is not None:
+            results.append({
+                "arch": arch, "batch": batch, "path": "condensed",
+                "kind": "quantized", "ablation": 0.0,
+                "plan_key_bucket": engines["int8"].plan_key(batch).batch_bucket,
+                "values_dtype": "int8",
+                "tok_s": round(tok_s, 2),
+                "us_per_tok": round(1e6 / tok_s, 2),
+                "weight_bytes_ratio": round(serving["int8"]
+                                            / max(masked_ref, 1), 4),
+                "weight_bytes_ratio_vs_f32": round(serving["int8"]
+                                                   / max(serving["f32"], 1), 4),
+                "values_bytes_ratio_priced": round(vals_priced, 4),
+                "values_bytes_ratio_measured": round(vals_meas, 4),
+                "token_agreement_vs_f32": round(agreement, 4),
+                "stack_fan_ins": ks,
+                "profile": profile.name,
+            })
     return rows
 
 

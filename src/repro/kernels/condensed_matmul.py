@@ -7,7 +7,12 @@ TPU adaptation of the paper's Alg. 1 (a CPU loop / CUDA gather kernel):
   TPU analogue of CUDA shared-memory gathers. HBM traffic for the weights is
   exactly ``2 * n_out * k`` words (values + indices): sparsity converts
   directly into HBM-byte savings, which is what matters for the bandwidth-
-  bound decode/online-inference shapes this kernel targets.
+  bound decode/online-inference shapes this kernel targets. The quantized
+  variant (``scales`` passed) streams values at ONE byte per element
+  (int8/fp8) plus ``4 * n_out`` bytes of per-neuron f32 scales; the
+  dequantization is fused into the gather-reduce (one multiply per output
+  element, after the k-reduction — exact, since the scale is per output
+  neuron), so the HBM weight stream shrinks ~4x with no extra passes.
 * Grid is (batch tiles x neuron tiles); each grid step gathers
   ``x_tile[:, idx_tile]`` -> (B_blk, N_blk, k) on the VPU and reduces over k.
 * ``d_in`` is NOT blocked (constant fan-in indices may reference any input
@@ -17,9 +22,19 @@ TPU adaptation of the paper's Alg. 1 (a CPU loop / CUDA gather kernel):
       dw:       B_blk*N_blk + B_blk*d_in + 2*N_blk*k          words
                 (dy tile      x tile       idx tile + dw tile)
 
-  against the per-backend VMEM cap (~16 MiB/core on v5e-class TPUs, half of
-  which is budgeted here to leave room for double buffering and compiler
-  temporaries). ``block_candidates`` / ``dw_block_candidates`` enumerate the
+  against the per-backend VMEM cap. The 16 MiB/core figure in ``VMEM_BYTES``
+  is the published v5e (and v4) per-core VMEM size; Mosaic's ACTUAL
+  per-kernel budget is the scoped-VMEM limit the compiler enforces
+  (``pltpu.CompilerParams(vmem_limit_bytes=...)`` /
+  ``xla_tpu_scoped_vmem_limit_kib``), which defaults to less than the full
+  core VMEM — that is why only ``VMEM_USABLE_FRACTION`` (half) of the cap is
+  budgeted here, leaving room for double buffering and compiler temporaries.
+  On parts with a different VMEM size, or to mirror an explicitly lowered
+  ``vmem_limit_bytes``, override the cap with ``REPRO_VMEM_CAP_BYTES``
+  (bytes; the usable fraction still applies). The budget formulas charge
+  every tile at 4 B/elem even for 1-byte quantized values — conservative by
+  ``3 * N_blk * k`` bytes, so a block that fits at f32 always fits
+  quantized. ``block_candidates`` / ``dw_block_candidates`` enumerate the
   8x128-aligned shapes that fit; ``default_blocks`` picks an untimed default
   and ``repro.sparse.autotune`` runs the timed search.
 * Decode shapes (B <= 8) use a specialized variant: the grid runs over
@@ -75,7 +90,19 @@ def default_interpret(backend: str | None = None) -> bool:
 
 
 def vmem_budget_bytes(backend: str | None = None) -> int:
-    cap = VMEM_BYTES.get(backend or jax.default_backend(), VMEM_BYTES["tpu"])
+    """Usable per-kernel VMEM budget in bytes.
+
+    ``REPRO_VMEM_CAP_BYTES`` overrides the per-backend cap (use it on parts
+    whose VMEM differs from the 16 MiB v5e figure, or to mirror an explicit
+    ``pltpu.CompilerParams(vmem_limit_bytes=...)``); the usable fraction
+    still applies on top, preserving double-buffering headroom.
+    """
+    env = os.environ.get("REPRO_VMEM_CAP_BYTES")
+    if env:
+        cap = int(env)
+    else:
+        cap = VMEM_BYTES.get(backend or jax.default_backend(),
+                             VMEM_BYTES["tpu"])
     return int(cap * VMEM_USABLE_FRACTION)
 
 
@@ -224,6 +251,23 @@ def _fwd_kernel(x_ref, w_ref, idx_ref, out_ref):
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
+def _fwd_scaled_kernel(x_ref, w_ref, idx_ref, scale_ref, out_ref):
+    """Quantized variant of ``_fwd_kernel``: ``w_ref`` holds int8/fp8 codes
+    and ``scale_ref`` a (1, N_blk) tile of per-neuron f32 scales. The scale
+    multiply is applied AFTER the k-reduction — exact (the scale is constant
+    over a neuron's fan-in) and one multiply per output element instead of
+    one per weight."""
+    x = x_ref[...]
+    w = w_ref[...].astype(jnp.float32)
+    idx = idx_ref[...]
+    n_blk, k = idx.shape
+    gathered = jnp.take(x, idx.reshape(-1), axis=1).astype(jnp.float32)
+    gathered = gathered.reshape(x.shape[0], n_blk, k)
+    acc = jnp.sum(gathered * w[None], axis=-1)  # f32 accumulate
+    acc = acc * scale_ref[...].astype(jnp.float32)  # (1, N_blk) broadcast
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
 def _dw_kernel(dy_ref, x_ref, idx_ref, dw_ref):
     """dw tile: dw[n, k] = sum_b dy[b, n] * x[b, idx[n, k]].
 
@@ -256,9 +300,11 @@ def _dw_kernel(dy_ref, x_ref, idx_ref, dw_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "block_n", "interpret"))
-def _fwd_tiled(x, values, indices, *, block_b: int, block_n: int,
+def _fwd_tiled(x, values, indices, scales=None, *, block_b: int, block_n: int,
                interpret: bool):
-    """General forward: grid over (batch tiles, neuron tiles)."""
+    """General forward: grid over (batch tiles, neuron tiles). ``scales``
+    (per-neuron f32, quantized values) adds a (1, block_n) tile and routes
+    to the dequant-fused kernel."""
     b, d_in = x.shape
     n_out, k = values.shape
     bp, np_ = _ceil_to(max(b, 1), block_b), _ceil_to(n_out, block_n)
@@ -266,23 +312,34 @@ def _fwd_tiled(x, values, indices, *, block_b: int, block_n: int,
     wp = jnp.pad(values, ((0, np_ - n_out), (0, 0)))
     ip = jnp.pad(indices.astype(jnp.int32), ((0, np_ - n_out), (0, 0)))
 
+    in_specs = [
+        pl.BlockSpec((block_b, d_in), lambda i, j: (i, 0)),
+        pl.BlockSpec((block_n, k), lambda i, j: (j, 0)),
+        pl.BlockSpec((block_n, k), lambda i, j: (j, 0)),
+    ]
+    operands = [xp, wp, ip]
+    kernel = _fwd_kernel
+    if scales is not None:
+        sp = jnp.pad(scales.astype(jnp.float32),
+                     (0, np_ - n_out)).reshape(1, np_)
+        in_specs.append(pl.BlockSpec((1, block_n), lambda i, j: (0, j)))
+        operands.append(sp)
+        kernel = _fwd_scaled_kernel
+
     out = pl.pallas_call(
-        _fwd_kernel,
+        kernel,
         grid=(bp // block_b, np_ // block_n),
-        in_specs=[
-            pl.BlockSpec((block_b, d_in), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_n, k), lambda i, j: (j, 0)),
-            pl.BlockSpec((block_n, k), lambda i, j: (j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((bp, np_), x.dtype),
         interpret=interpret,
-    )(xp, wp, ip)
+    )(*operands)
     return out[:b, :n_out]
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def _fwd_decode(x, values, indices, *, block_n: int, interpret: bool):
+def _fwd_decode(x, values, indices, scales=None, *, block_n: int,
+                interpret: bool):
     """Decode-specialized forward: batch staged whole (padded to the 8-row
     sublane unit, not a 128-row batch tile), grid over neuron tiles only."""
     b, d_in = x.shape
@@ -292,18 +349,28 @@ def _fwd_decode(x, values, indices, *, block_n: int, interpret: bool):
     wp = jnp.pad(values, ((0, np_ - n_out), (0, 0)))
     ip = jnp.pad(indices.astype(jnp.int32), ((0, np_ - n_out), (0, 0)))
 
+    in_specs = [
+        pl.BlockSpec((bp, d_in), lambda j: (0, 0)),
+        pl.BlockSpec((block_n, k), lambda j: (j, 0)),
+        pl.BlockSpec((block_n, k), lambda j: (j, 0)),
+    ]
+    operands = [xp, wp, ip]
+    kernel = _fwd_kernel
+    if scales is not None:
+        sp = jnp.pad(scales.astype(jnp.float32),
+                     (0, np_ - n_out)).reshape(1, np_)
+        in_specs.append(pl.BlockSpec((1, block_n), lambda j: (0, j)))
+        operands.append(sp)
+        kernel = _fwd_scaled_kernel
+
     out = pl.pallas_call(
-        _fwd_kernel,
+        kernel,
         grid=(np_ // block_n,),
-        in_specs=[
-            pl.BlockSpec((bp, d_in), lambda j: (0, 0)),
-            pl.BlockSpec((block_n, k), lambda j: (j, 0)),
-            pl.BlockSpec((block_n, k), lambda j: (j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bp, block_n), lambda j: (0, j)),
         out_shape=jax.ShapeDtypeStruct((bp, np_), x.dtype),
         interpret=interpret,
-    )(xp, wp, ip)
+    )(*operands)
     return out[:b, :n_out]
 
 
@@ -312,6 +379,7 @@ def condensed_matmul(
     values: jax.Array,
     indices: jax.Array,
     *,
+    scales: jax.Array | None = None,
     block_b: int | None = None,
     block_n: int | None = None,
     interpret: bool | None = None,
@@ -323,14 +391,17 @@ def condensed_matmul(
     default (see default_blocks; repro.sparse.autotune supplies timed
     choices). ``interpret=None`` resolves from the backend (CPU only).
     Explicit ``block_b`` forces the general tiled kernel.
+
+    ``scales`` (shape (n_out,), f32) marks ``values`` as quantized codes
+    (int8/fp8); dequantization fuses into the kernel epilogue.
     """
     b, d_in = x.shape
     n_out, k = values.shape
     if interpret is None:
         interpret = default_interpret()
     if block_b is None and b <= SMALL_BATCH_MAX:
-        return condensed_matmul_decode(x, values, indices, block_n=block_n,
-                                       interpret=interpret)
+        return condensed_matmul_decode(x, values, indices, scales=scales,
+                                       block_n=block_n, interpret=interpret)
     if block_b is None and block_n is None:
         block_b, block_n = default_blocks(b, d_in, n_out, k)
     elif block_b is None:
@@ -340,8 +411,8 @@ def condensed_matmul(
     elif block_n is None:
         block_n = _fit_block_n(fwd_vmem_words, block_b, n_out, d_in, k,
                                cap=128)
-    return _fwd_tiled(x, values, indices, block_b=block_b, block_n=block_n,
-                      interpret=interpret)
+    return _fwd_tiled(x, values, indices, scales, block_b=block_b,
+                      block_n=block_n, interpret=interpret)
 
 
 def condensed_matmul_decode(
@@ -349,6 +420,7 @@ def condensed_matmul_decode(
     values: jax.Array,
     indices: jax.Array,
     *,
+    scales: jax.Array | None = None,
     block_n: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
@@ -363,7 +435,7 @@ def condensed_matmul_decode(
         interpret = default_interpret()
     if block_n is None:
         _, block_n = default_blocks(min(b, SMALL_BATCH_MAX), d_in, n_out, k)
-    return _fwd_decode(x, values, indices, block_n=block_n,
+    return _fwd_decode(x, values, indices, scales, block_n=block_n,
                        interpret=interpret)
 
 

@@ -38,7 +38,8 @@ from repro.kernels import structured_matmul as sm
 
 def _resolve_blocks(batch: int, d_in: int, n_out: int, k: int,
                     block_b, block_n, itemsize: int, kind: str = "condensed",
-                    scatter_width: int | None = None):
+                    scatter_width: int | None = None,
+                    values_dtype: str | None = None):
     """Caller-forced blocks win; else the autotune cache; else (None, None)
     so the kernel module applies its VMEM-budget default.
 
@@ -53,7 +54,9 @@ def _resolve_blocks(batch: int, d_in: int, n_out: int, k: int,
     dim is forced: a tuned winner was validated as a PAIR, so splicing one
     of its dims against an arbitrary caller-forced other dim could exceed
     the VMEM budget — with a half-forced call the remaining dim goes to the
-    kernel module's budget fit instead."""
+    kernel module's budget fit instead. ``values_dtype`` (quantized storage:
+    "int8"/"fp8") selects the quantized key space — quantized shapes are
+    timed on the dequant-fused kernels, whose balance differs."""
     if block_b is not None or block_n is not None:
         return block_b, block_n
     # lazy imports: keep kernels importable alone
@@ -61,7 +64,8 @@ def _resolve_blocks(batch: int, d_in: int, n_out: int, k: int,
     from repro.sparse import formats
     tuned = autotune.lookup_entry(
         formats.shape_tuning_key(d_in, n_out, k, batch, itemsize=itemsize,
-                                 kind=kind, scatter_width=scatter_width))
+                                 kind=kind, scatter_width=scatter_width,
+                                 values_dtype=values_dtype))
     if tuned is not None:
         return tuned["block_b"], tuned["block_n"]
     return None, None
@@ -96,10 +100,30 @@ def _bwd(block_b, block_n, res, dy):
 condensed_linear.defvjp(_fwd, _bwd)
 
 
-def condensed_linear_nd(x: jax.Array, values: jax.Array, indices: jax.Array, **kw) -> jax.Array:
-    """Rank-polymorphic wrapper: flattens leading dims to the batch axis."""
+def _quantized_name(values: jax.Array) -> str:
+    """Tuning-key tag for quantized storage ("int8" / "fp8")."""
+    from repro.sparse import formats
+    return formats.resolve_quantize_spec(values.dtype)
+
+
+def condensed_linear_nd(x: jax.Array, values: jax.Array, indices: jax.Array,
+                        *, scales: jax.Array | None = None, **kw) -> jax.Array:
+    """Rank-polymorphic wrapper: flattens leading dims to the batch axis.
+
+    ``scales`` marks ``values`` as int8/fp8 codes and routes to the
+    dequant-fused kernel (inference-only: no custom VJP — quantized storage
+    is a serving artifact, training runs the masked path)."""
     lead = x.shape[:-1]
-    y = condensed_linear(x.reshape(-1, x.shape[-1]), values, indices, **kw)
+    x2 = x.reshape(-1, x.shape[-1])
+    if scales is None:
+        y = condensed_linear(x2, values, indices, **kw)
+        return y.reshape(*lead, values.shape[0])
+    bb, bn = _resolve_blocks(x2.shape[0], x2.shape[-1], *values.shape,
+                             kw.get("block_b"), kw.get("block_n"),
+                             jnp.dtype(x.dtype).itemsize,
+                             values_dtype=_quantized_name(values))
+    y = cm.condensed_matmul(x2, values, indices, scales=scales,
+                            block_b=bb, block_n=bn)
     return y.reshape(*lead, values.shape[0])
 
 
@@ -163,12 +187,26 @@ condensed_over_active_linear.defvjp(_coa_fwd, _coa_bwd)
 
 def condensed_over_active_linear_nd(x: jax.Array, values: jax.Array,
                                     indices: jax.Array, out_index: jax.Array,
-                                    d_out: int, **kw) -> jax.Array:
+                                    d_out: int, *,
+                                    scales: jax.Array | None = None,
+                                    **kw) -> jax.Array:
     """Rank-polymorphic wrapper over the FUSED condensed-over-active kernel
-    (flattens leading dims to the batch axis)."""
+    (flattens leading dims to the batch axis). ``scales`` routes to the
+    dequant-fused quantized kernel (inference-only, no custom VJP)."""
     lead = x.shape[:-1]
-    y = condensed_over_active_linear(x.reshape(-1, x.shape[-1]), values,
-                                     indices, out_index, d_out, **kw)
+    x2 = x.reshape(-1, x.shape[-1])
+    if scales is None:
+        y = condensed_over_active_linear(x2, values, indices, out_index,
+                                         d_out, **kw)
+        return y.reshape(*lead, d_out)
+    bb, bn = _resolve_blocks(x2.shape[0], x2.shape[-1], *values.shape,
+                             kw.get("block_b"), kw.get("block_n"),
+                             jnp.dtype(x.dtype).itemsize, kind="coa",
+                             scatter_width=d_out,
+                             values_dtype=_quantized_name(values))
+    y = sm.condensed_over_active_matmul(x2, values, indices, out_index,
+                                        d_out, scales=scales,
+                                        block_b=bb, block_n=bn)
     return y.reshape(*lead, d_out)
 
 
@@ -262,3 +300,27 @@ def structured_linear_nd(x: jax.Array, w: jax.Array,
     lead = x.shape[:-1]
     y = structured_linear(x.reshape(-1, x.shape[-1]), w, active_index, **kw)
     return y.reshape(*lead, w.shape[-1])
+
+
+def structured_gathered_linear_nd(x: jax.Array, panel: jax.Array,
+                                  active_index: jax.Array, d_out: int, *,
+                                  values_dtype: str | None = None,
+                                  **kw) -> jax.Array:
+    """Structured matmul over a caller-supplied compact (d_in, a) panel —
+    the serving entry for quantized StructuredFanIn storage, whose stored
+    representation IS the compact panel (dequantized in XLA before this
+    call; no dense weight exists to gather from). Inference-only: no custom
+    VJP. Tuned blocks resolve under the same ``kind="structured"`` keys as
+    ``structured_linear`` — the kernels are identical, only the gather pass
+    is absent."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    bb, bn = _resolve_blocks(x2.shape[0], x2.shape[-1],
+                             active_index.shape[0], 0, kw.pop("block_b", None),
+                             kw.pop("block_n", None),
+                             jnp.dtype(x.dtype).itemsize, kind="structured",
+                             scatter_width=d_out, values_dtype=values_dtype)
+    y = sm.structured_matmul_pregathered(x2, panel.astype(x.dtype),
+                                         active_index, d_out,
+                                         block_b=bb, block_n=bn, **kw)
+    return y.reshape(*lead, d_out)

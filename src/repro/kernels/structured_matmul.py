@@ -17,7 +17,13 @@ instead of a masked-out dense pass:
   axis) happens once per compiled program: the weight and ``active_index``
   are loop-invariant in the decode ``lax.scan``, so XLA hoists the gather
   out of the token loop and every decode step streams only the compact
-  ``(d_in, a_pad)`` panel.
+  ``(d_in, a_pad)`` panel. The gather is tagged with
+  ``jax.named_scope("hoisted_column_gather")`` so HLO tests can count it;
+  the scalar-prefetch decode variant below removes it entirely.
+* ``structured_matmul_pregathered`` — same kernels, but the caller supplies
+  the compact ``(d_in, a_pad)`` panel directly (e.g. dequantized from
+  int8/fp8 quantized storage, where no dense ``d_in x d_out`` weight exists
+  to gather from). No gather pass appears in the program at all.
 * ``condensed_over_active_matmul`` — the combined Fig. 4 point, fused. The
   condensed constant fan-in gather (same VMEM-local formulation as
   ``condensed_matmul``) runs over the ``a <= d_out`` surviving rows and the
@@ -25,7 +31,11 @@ instead of a masked-out dense pass:
   dense output layout inside the kernel. This replaces the previous
   compose-then-scatter lowering (``y.at[:, out_index].add``) that wrote the
   compact activations to HBM and re-read them in a separate scatter op —
-  one full activation round trip per layer on the decode hot path.
+  one full activation round trip per layer on the decode hot path. With
+  ``scales`` (per-row f32), ``values`` are int8/fp8 codes and the
+  dequantize fuses into the kernel (one multiply per compact row output,
+  after the k-reduction — exact, the scale is constant over a row's
+  fan-in), so the weight stream shrinks to ~1 byte/elem.
 
 Scatter epilogue (shared): for an index tile ``ai`` (compact position ->
 dense column, padding == ``d_out``) the kernel builds the one-hot selection
@@ -39,19 +49,48 @@ one-hot dot passes the value through bit-exactly (v * 1.0 + exact zeros),
 and padding slots (``ai == d_out``) match no column, so they are dropped
 exactly like the old ``mode="drop"`` scatter.
 
-VMEM budgets (words; ``d_in`` and ``d_out`` are structurally unblocked —
-the gather needs the whole activation row, the scatter the whole output
-row):
+Out-blocked epilogue (``block_o``): the default kernels keep the full
+``(B_blk, d_out)`` output block and ``(N_blk, d_out)`` one-hot tile resident
+in VMEM — fine to ``d_out ~ 8k``, not beyond. Passing ``block_o`` (a
+128-multiple) adds a ``d_out`` tile axis to the grid: the one-hot is built
+against tile-local columns (``iota + o * block_o``) and only a
+``(B_blk, block_o)`` output block + ``(N_blk, block_o)`` one-hot tile stay
+resident. Cost: each compact tile's ``y`` is recomputed once per ``d_out``
+tile (the compact->dense mapping is data-dependent, so every (o, j) pair
+must be visited) — a FLOP-for-VMEM trade that only pays off when ``d_out``
+does not fit; bit-identical to the unblocked epilogue (each dense column
+still matched by exactly one (o, j) one-hot hit).
+
+Scalar-prefetch decode variant (``prefetch_gather``): the decode-scan gather
+hoist above still costs one XLA gather pass per compiled program plus an
+HBM round trip for the ``(d_in, a_pad)`` panel. The prefetch variant
+(``pltpu.PrefetchScalarGridSpec``) instead prefetches ``active_index`` as a
+scalar operand, stages the FULL dense ``(d_in, d_out)`` weight in VMEM, and
+performs the column gather inside the kernel per compact tile — no XLA
+gather pass, no intermediate panel buffer. The price is full-weight VMEM
+residency (``d_in * d_out`` words), so it is gated on the VMEM budget and
+applies to decode shapes; enable via ``prefetch_gather=True`` or
+``REPRO_PREFETCH_GATHER=1``.
+
+VMEM budgets (words; ``d_in`` is structurally unblocked — the gather needs
+the whole activation row; ``d_out`` is unblocked only when ``block_o`` is
+not used):
 
     structured: B_blk*d_in + d_in*N_blk + N_blk + B_blk*N_blk
-                + N_blk*d_out + B_blk*d_out
+                + N_blk*O_blk + B_blk*O_blk          (O_blk = block_o or d_out)
     coa fused:  B_blk*d_in + N_blk*k*2 + N_blk + B_blk*N_blk
-                + N_blk*d_out + B_blk*d_out
+                + N_blk*O_blk + B_blk*O_blk
+    prefetch:   B_pad*d_in + d_in*d_out + N_blk + B_pad*d_out + N_blk*d_out
 
 checked against the same per-backend cap as ``condensed_matmul``
-(``vmem_budget_bytes``). The ``N_blk*d_out`` one-hot tile is the dominant
-term at large ``d_out``; the budget shrinks the blocks accordingly, and the
-(8, 128) minimum is kept even over budget (documented stance shared with
+(``vmem_budget_bytes`` — 16 MiB/core published v5e figure, halved for
+double-buffering headroom, overridable via ``REPRO_VMEM_CAP_BYTES``; see
+that module's docstring for the Mosaic scoped-VMEM-limit cross-check).
+Quantized tiles are charged at 4 B/elem like everything else — conservative
+for 1-byte codes, so a block that fits at f32 always fits quantized. The
+``N_blk*d_out`` one-hot tile is the dominant term at large ``d_out``; the
+budget shrinks the blocks accordingly, and the (8, 128) minimum is kept
+even over budget (documented stance shared with
 ``condensed_matmul._aligned_candidates``). Decode shapes (B <=
 ``SMALL_BATCH_MAX``) use specialized variants that stage the sublane-padded
 batch whole. ``repro.sparse.autotune`` runs the timed block search under the
@@ -63,10 +102,16 @@ and token-identical to the masked path (COA) in interpret mode on CPU.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+try:  # TPU-specific grid specs (scalar prefetch); present on CPU jaxlib too
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover - exotic builds
+    pltpu = None
 
 from repro.kernels import condensed_matmul as cm
 
@@ -90,19 +135,29 @@ def padded_active_count(a: int, d_out: int) -> int:
 
 
 def structured_vmem_words(block_b: int, block_n: int, d_in: int,
-                          d_out: int) -> int:
+                          d_out: int, block_o: int | None = None) -> int:
     """x tile + gathered-weight tile + index tile + compact-y tile + one-hot
-    tile + resident (B_blk, d_out) output block."""
+    tile + resident output block (``block_o`` tiles the last two)."""
+    o_blk = min(block_o or d_out, d_out)
     return (block_b * d_in + d_in * block_n + block_n + block_b * block_n
-            + block_n * d_out + block_b * d_out)
+            + block_n * o_blk + block_b * o_blk)
 
 
 def coa_vmem_words(block_b: int, block_n: int, d_in: int, k: int,
-                   d_out: int) -> int:
+                   d_out: int, block_o: int | None = None) -> int:
     """x tile + (values + indices) tiles + out_index tile + compact-y tile +
-    one-hot tile + resident output block."""
+    one-hot tile + resident output block (``block_o`` tiles the last two)."""
+    o_blk = min(block_o or d_out, d_out)
     return (block_b * d_in + block_n * k * 2 + block_n + block_b * block_n
-            + block_n * d_out + block_b * d_out)
+            + block_n * o_blk + block_b * o_blk)
+
+
+def prefetch_vmem_words(b_pad: int, block_n: int, d_in: int,
+                        d_out: int) -> int:
+    """Scalar-prefetch decode working set: whole batch + FULL dense weight +
+    compact-y tile + resident dense output block + one-hot tile."""
+    return (b_pad * d_in + d_in * d_out + b_pad * block_n
+            + b_pad * d_out + block_n * d_out)
 
 
 def structured_block_candidates(b: int, d_in: int, a: int, d_out: int, *,
@@ -137,34 +192,45 @@ def default_coa_blocks(b: int, d_in: int, a: int, k: int, d_out: int, *,
         coa_block_candidates(b, d_in, a, k, d_out, backend=backend), b, a)
 
 
+def _prefetch_default() -> bool:
+    return os.environ.get("REPRO_PREFETCH_GATHER", "0") != "0"
+
+
 # ---------------------------------------------------------------------------
 # kernels
 # ---------------------------------------------------------------------------
 
 
-def _onehot_scatter(y: jax.Array, idx_row: jax.Array, d_out: int) -> jax.Array:
+def _onehot_scatter(y: jax.Array, idx_row: jax.Array, d_out: int,
+                    col_offset=0) -> jax.Array:
     """Scatter a compact (B_blk, N_blk) tile to dense columns via a one-hot
     MXU matmul. ``idx_row``: (1, N_blk) int32 dense positions; out-of-range
     entries (== d_out) match no column and are dropped exactly. Exact: each
-    surviving value is multiplied by 1.0 and summed with exact zeros."""
+    surviving value is multiplied by 1.0 and summed with exact zeros.
+    ``col_offset`` shifts the column window for out-blocked epilogues (the
+    tile then covers dense columns [col_offset, col_offset + width))."""
     cols = jax.lax.broadcasted_iota(jnp.int32, (idx_row.shape[1], d_out), 1)
-    sel = (idx_row.T == cols).astype(jnp.float32)        # (N_blk, d_out)
+    sel = (idx_row.T == cols + col_offset).astype(jnp.float32)  # (N_blk, O)
     return jnp.dot(y, sel, preferred_element_type=jnp.float32)
 
 
-def _structured_kernel(x_ref, w_ref, ai_ref, out_ref, *, grid_axis: int):
+def _structured_kernel(x_ref, w_ref, ai_ref, out_ref, *, grid_axis: int,
+                       o_axis: int | None = None, block_o: int | None = None):
     """One compact-column tile of the gathered structured matmul.
 
     x_ref  : (B_blk, d_in)    VMEM
     w_ref  : (d_in, N_blk)    VMEM — pre-gathered surviving columns
     ai_ref : (1, N_blk)       VMEM int32 — dense position of each column
     out_ref: (B_blk, d_out)   VMEM — resident across the compact-tile axis
+             ((B_blk, block_o) when the epilogue is out-blocked; the one-hot
+             then selects only this tile's column window)
     """
     j = pl.program_id(grid_axis)
     y = jnp.dot(x_ref[...].astype(jnp.float32),
                 w_ref[...].astype(jnp.float32),
                 preferred_element_type=jnp.float32)      # (B_blk, N_blk)
-    contrib = _onehot_scatter(y, ai_ref[...], out_ref.shape[-1])
+    offset = 0 if o_axis is None else pl.program_id(o_axis) * block_o
+    contrib = _onehot_scatter(y, ai_ref[...], out_ref.shape[-1], offset)
 
     @pl.when(j == 0)
     def _init():
@@ -175,13 +241,51 @@ def _structured_kernel(x_ref, w_ref, ai_ref, out_ref, *, grid_axis: int):
         out_ref[...] = out_ref[...] + contrib.astype(out_ref.dtype)
 
 
-def _coa_kernel(x_ref, w_ref, idx_ref, oi_ref, out_ref, *, grid_axis: int):
+def _structured_prefetch_kernel(ai_ref, x_ref, w_ref, out_ref, *,
+                                block_n: int):
+    """Scalar-prefetch decode kernel: ``ai_ref`` is the PREFETCHED compact
+    index vector (whole (a_pad,) int32, SMEM), ``w_ref`` the FULL dense
+    (d_in, d_out) weight staged in VMEM. The column gather runs in-kernel
+    per compact tile — no XLA gather pass, no (d_in, a_pad) panel buffer.
+
+    x_ref  : (B_pad, d_in)   VMEM, whole sublane-padded batch
+    out_ref: (B_pad, d_out)  VMEM, resident across the grid
+    """
+    j = pl.program_id(0)
+    d_out = out_ref.shape[-1]
+    idx = jax.lax.dynamic_slice(ai_ref[...], (j * block_n,), (block_n,))
+    # padding entries (== d_out) clip to the last column; their (finite)
+    # products are dropped by the all-zero one-hot row at scatter time
+    wg = jnp.take(w_ref[...].astype(jnp.float32),
+                  jnp.minimum(idx, d_out - 1), axis=1)   # (d_in, N_blk)
+    y = jnp.dot(x_ref[...].astype(jnp.float32), wg,
+                preferred_element_type=jnp.float32)
+    contrib = _onehot_scatter(y, idx.reshape(1, block_n), d_out)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = contrib.astype(out_ref.dtype)
+
+    @pl.when(j != 0)
+    def _accumulate():
+        out_ref[...] = out_ref[...] + contrib.astype(out_ref.dtype)
+
+
+def _coa_kernel(x_ref, w_ref, idx_ref, oi_ref, *rest, grid_axis: int,
+                scaled: bool = False, o_axis: int | None = None,
+                block_o: int | None = None):
     """One surviving-row tile of the fused condensed-over-active matmul:
     the condensed VMEM-local gather-reduce followed by the scatter epilogue.
 
     x_ref  : (B_blk, d_in)  w_ref/idx_ref : (N_blk, k)  oi_ref : (1, N_blk)
-    out_ref: (B_blk, d_out) resident across the row-tile axis.
+    out_ref: (B_blk, d_out) resident across the row-tile axis ((B_blk,
+    block_o) when out-blocked). ``scaled`` inserts a (1, N_blk) per-row f32
+    scale tile before the output ref: ``w_ref`` then holds int8/fp8 codes
+    and the dequantize multiply fuses here, after the k-reduction (exact —
+    the scale is constant over a row's fan-in).
     """
+    scale_ref = rest[0] if scaled else None
+    out_ref = rest[-1]
     j = pl.program_id(grid_axis)
     x = x_ref[...]
     w = w_ref[...].astype(jnp.float32)
@@ -190,7 +294,10 @@ def _coa_kernel(x_ref, w_ref, idx_ref, oi_ref, out_ref, *, grid_axis: int):
     gathered = jnp.take(x, idx.reshape(-1), axis=1).astype(jnp.float32)
     gathered = gathered.reshape(x.shape[0], n_blk, k)
     y = jnp.sum(gathered * w[None], axis=-1)             # (B_blk, N_blk) f32
-    contrib = _onehot_scatter(y, oi_ref[...], out_ref.shape[-1])
+    if scaled:
+        y = y * scale_ref[...].astype(jnp.float32)       # (1, N_blk) bcast
+    offset = 0 if o_axis is None else pl.program_id(o_axis) * block_o
+    contrib = _onehot_scatter(y, oi_ref[...], out_ref.shape[-1], offset)
 
     @pl.when(j == 0)
     def _init():
@@ -209,64 +316,138 @@ def _coa_kernel(x_ref, w_ref, idx_ref, oi_ref, out_ref, *, grid_axis: int):
 def _gather_columns(w: jax.Array, active_index: jax.Array) -> jax.Array:
     """(d_in, a) panel of surviving columns. Padding entries clip to the last
     column — their (garbage but finite) products are dropped by the all-zero
-    one-hot row at scatter time, so no masking multiply is needed."""
-    d_out = w.shape[-1]
-    return jnp.take(w, jnp.minimum(active_index, d_out - 1), axis=1)
+    one-hot row at scatter time, so no masking multiply is needed.
+
+    Wrapped in ``jax.named_scope("hoisted_column_gather")``: this is the ONE
+    XLA gather pass the decode scan hoists (loop-invariant operands), and
+    the scope tag is what the HLO dispatch-count tests — and the assertion
+    that the scalar-prefetch variant removes it — key on."""
+    with jax.named_scope("hoisted_column_gather"):
+        d_out = w.shape[-1]
+        return jnp.take(w, jnp.minimum(active_index, d_out - 1), axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "block_n", "interpret"))
-def _structured_tiled(x, w, active_index, *, block_b: int, block_n: int,
-                      interpret: bool):
-    """General gathered matmul: grid (batch tiles, compact-column tiles)."""
+@functools.partial(jax.jit, static_argnames=("d_out", "block_b", "block_n",
+                                             "block_o", "interpret"))
+def _structured_tiled(x, wa, active_index, *, d_out: int, block_b: int,
+                      block_n: int, block_o: int | None, interpret: bool):
+    """General gathered matmul over a PRE-GATHERED (d_in, a) panel: grid
+    (batch tiles, compact-column tiles), plus a d_out tile axis when the
+    epilogue is out-blocked."""
     b, d_in = x.shape
-    d_out = w.shape[-1]
     a = active_index.shape[0]
     bp, ap = _ceil_to(max(b, 1), block_b), _ceil_to(max(a, 1), block_n)
     xp = jnp.pad(x, ((0, bp - b), (0, 0)))
-    wa = jnp.pad(_gather_columns(w, active_index), ((0, 0), (0, ap - a)))
+    wap = jnp.pad(wa, ((0, 0), (0, ap - a)))
     aip = jnp.pad(active_index.astype(jnp.int32), (0, ap - a),
                   constant_values=d_out).reshape(1, ap)
 
+    if block_o is None:
+        out = pl.pallas_call(
+            functools.partial(_structured_kernel, grid_axis=1),
+            grid=(bp // block_b, ap // block_n),
+            in_specs=[
+                pl.BlockSpec((block_b, d_in), lambda i, j: (i, 0)),
+                pl.BlockSpec((d_in, block_n), lambda i, j: (0, j)),
+                pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((block_b, d_out), lambda i, j: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((bp, d_out), x.dtype),
+            interpret=interpret,
+        )(xp, wap, aip)
+        return out[:b]
+
+    dop = _ceil_to(d_out, block_o)
     out = pl.pallas_call(
-        functools.partial(_structured_kernel, grid_axis=1),
-        grid=(bp // block_b, ap // block_n),
+        functools.partial(_structured_kernel, grid_axis=2, o_axis=1,
+                          block_o=block_o),
+        grid=(bp // block_b, dop // block_o, ap // block_n),
         in_specs=[
-            pl.BlockSpec((block_b, d_in), lambda i, j: (i, 0)),
-            pl.BlockSpec((d_in, block_n), lambda i, j: (0, j)),
-            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((block_b, d_in), lambda i, o, j: (i, 0)),
+            pl.BlockSpec((d_in, block_n), lambda i, o, j: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, o, j: (0, j)),
         ],
-        out_specs=pl.BlockSpec((block_b, d_out), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bp, d_out), x.dtype),
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, o, j: (i, o)),
+        out_shape=jax.ShapeDtypeStruct((bp, dop), x.dtype),
         interpret=interpret,
-    )(xp, wa, aip)
-    return out[:b]
+    )(xp, wap, aip)
+    return out[:b, :d_out]
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def _structured_decode(x, w, active_index, *, block_n: int, interpret: bool):
+@functools.partial(jax.jit, static_argnames=("d_out", "block_n", "block_o",
+                                             "interpret"))
+def _structured_decode(x, wa, active_index, *, d_out: int, block_n: int,
+                       block_o: int | None, interpret: bool):
     """Decode-specialized variant: sublane-padded batch staged whole, grid
-    over compact-column tiles only."""
+    over compact-column tiles only (plus a d_out tile axis when
+    out-blocked)."""
     b, d_in = x.shape
-    d_out = w.shape[-1]
     a = active_index.shape[0]
     bp, ap = _ceil_to(max(b, 1), SUBLANE), _ceil_to(max(a, 1), block_n)
     xp = jnp.pad(x, ((0, bp - b), (0, 0)))
-    wa = jnp.pad(_gather_columns(w, active_index), ((0, 0), (0, ap - a)))
+    wap = jnp.pad(wa, ((0, 0), (0, ap - a)))
     aip = jnp.pad(active_index.astype(jnp.int32), (0, ap - a),
                   constant_values=d_out).reshape(1, ap)
 
+    if block_o is None:
+        out = pl.pallas_call(
+            functools.partial(_structured_kernel, grid_axis=0),
+            grid=(ap // block_n,),
+            in_specs=[
+                pl.BlockSpec((bp, d_in), lambda j: (0, 0)),
+                pl.BlockSpec((d_in, block_n), lambda j: (0, j)),
+                pl.BlockSpec((1, block_n), lambda j: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((bp, d_out), lambda j: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((bp, d_out), x.dtype),
+            interpret=interpret,
+        )(xp, wap, aip)
+        return out[:b]
+
+    dop = _ceil_to(d_out, block_o)
     out = pl.pallas_call(
-        functools.partial(_structured_kernel, grid_axis=0),
+        functools.partial(_structured_kernel, grid_axis=1, o_axis=0,
+                          block_o=block_o),
+        grid=(dop // block_o, ap // block_n),
+        in_specs=[
+            pl.BlockSpec((bp, d_in), lambda o, j: (0, 0)),
+            pl.BlockSpec((d_in, block_n), lambda o, j: (0, j)),
+            pl.BlockSpec((1, block_n), lambda o, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bp, block_o), lambda o, j: (0, o)),
+        out_shape=jax.ShapeDtypeStruct((bp, dop), x.dtype),
+        interpret=interpret,
+    )(xp, wap, aip)
+    return out[:b, :d_out]
+
+
+@functools.partial(jax.jit, static_argnames=("d_out", "block_n", "interpret"))
+def _structured_prefetch_decode(x, w, active_index, *, d_out: int,
+                                block_n: int, interpret: bool):
+    """Scalar-prefetch decode: active_index prefetched scalar, FULL dense
+    weight staged in VMEM, gather in-kernel (see module docstring)."""
+    b, d_in = x.shape
+    a = active_index.shape[0]
+    bp, ap = _ceil_to(max(b, 1), SUBLANE), _ceil_to(max(a, 1), block_n)
+    xp = jnp.pad(x, ((0, bp - b), (0, 0)))
+    aip = jnp.pad(active_index.astype(jnp.int32), (0, ap - a),
+                  constant_values=d_out)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(ap // block_n,),
         in_specs=[
-            pl.BlockSpec((bp, d_in), lambda j: (0, 0)),
-            pl.BlockSpec((d_in, block_n), lambda j: (0, j)),
-            pl.BlockSpec((1, block_n), lambda j: (0, j)),
+            pl.BlockSpec((bp, d_in), lambda j, ai: (0, 0)),
+            pl.BlockSpec((d_in, d_out), lambda j, ai: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((bp, d_out), lambda j: (0, 0)),
+        out_specs=pl.BlockSpec((bp, d_out), lambda j, ai: (0, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_structured_prefetch_kernel, block_n=block_n),
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bp, d_out), x.dtype),
         interpret=interpret,
-    )(xp, wa, aip)
+    )(aip, xp, w)
     return out[:b]
 
 
@@ -277,7 +458,9 @@ def structured_matmul(
     *,
     block_b: int | None = None,
     block_n: int | None = None,
+    block_o: int | None = None,
     interpret: bool | None = None,
+    prefetch_gather: bool | None = None,
 ) -> jax.Array:
     """Column-gathered structured matmul. x: (B, d_in), w: (d_in, d_out),
     active_index: (a,) int32 surviving-column ids (out-of-range == padding).
@@ -286,7 +469,9 @@ def structured_matmul(
     ``block_b=None`` routes decode shapes (B <= SMALL_BATCH_MAX) to the
     decode-specialized variant; otherwise the VMEM-budget default applies
     (``repro.sparse.autotune`` supplies timed choices through
-    ``kernels.ops.structured_linear``). Bit-identical to
+    ``kernels.ops.structured_linear``). ``block_o`` tiles the scatter
+    epilogue over d_out (see module docstring); ``prefetch_gather`` selects
+    the scalar-prefetch decode variant. Bit-identical to
     ``kernels.ops.structured_dense`` for any active set.
     """
     b, d_in = x.shape
@@ -295,8 +480,9 @@ def structured_matmul(
     if interpret is None:
         interpret = cm.default_interpret()
     if block_b is None and b <= SMALL_BATCH_MAX:
-        return structured_matmul_decode(x, w, active_index, block_n=block_n,
-                                        interpret=interpret)
+        return structured_matmul_decode(
+            x, w, active_index, block_n=block_n, block_o=block_o,
+            interpret=interpret, prefetch_gather=prefetch_gather)
     if block_b is None and block_n is None:
         block_b, block_n = default_structured_blocks(b, d_in, a, d_out)
     elif block_b is None:
@@ -307,8 +493,10 @@ def structured_matmul(
         block_n = cm._fit_block_n(
             lambda bb, bn, _d, _k: structured_vmem_words(bb, bn, d_in, d_out),
             block_b, a, d_in, 0, cap=128)
-    return _structured_tiled(x, w, active_index, block_b=block_b,
-                             block_n=block_n, interpret=interpret)
+    wa = _gather_columns(w, active_index)
+    return _structured_tiled(x, wa, active_index, d_out=d_out,
+                             block_b=block_b, block_n=block_n,
+                             block_o=block_o, interpret=interpret)
 
 
 def structured_matmul_decode(
@@ -317,11 +505,19 @@ def structured_matmul_decode(
     active_index: jax.Array,
     *,
     block_n: int | None = None,
+    block_o: int | None = None,
     interpret: bool | None = None,
+    prefetch_gather: bool | None = None,
 ) -> jax.Array:
     """Decode-specialized structured matmul (batch staged whole). Bit-
     identical to the general variant: the d_in contraction and the one-hot
-    scatter are independent of how the batch axis is padded or tiled."""
+    scatter are independent of how the batch axis is padded or tiled.
+
+    ``prefetch_gather=True`` forces the scalar-prefetch variant (caller
+    takes responsibility for VMEM); ``None`` consults
+    ``REPRO_PREFETCH_GATHER`` and additionally gates on the VMEM budget —
+    full-weight residency is the variant's price (see prefetch_vmem_words).
+    """
     b, d_in = x.shape
     d_out = w.shape[-1]
     a = active_index.shape[0]
@@ -330,8 +526,64 @@ def structured_matmul_decode(
     if block_n is None:
         _, block_n = default_structured_blocks(min(b, SMALL_BATCH_MAX), d_in,
                                                a, d_out)
-    return _structured_decode(x, w, active_index, block_n=block_n,
+    use_prefetch = prefetch_gather
+    if use_prefetch is None and pltpu is not None and block_o is None:
+        bp = _ceil_to(max(b, 1), SUBLANE)
+        fits = (prefetch_vmem_words(bp, block_n, d_in, d_out) * cm._WORD
+                <= cm.vmem_budget_bytes())
+        use_prefetch = _prefetch_default() and fits
+    if use_prefetch:
+        return _structured_prefetch_decode(x, w, active_index, d_out=d_out,
+                                           block_n=block_n,
+                                           interpret=interpret)
+    wa = _gather_columns(w, active_index)
+    return _structured_decode(x, wa, active_index, d_out=d_out,
+                              block_n=block_n, block_o=block_o,
                               interpret=interpret)
+
+
+def structured_matmul_pregathered(
+    x: jax.Array,
+    panel: jax.Array,
+    active_index: jax.Array,
+    d_out: int,
+    *,
+    block_b: int | None = None,
+    block_n: int | None = None,
+    block_o: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Structured matmul over a caller-supplied compact panel.
+
+    ``panel``: (d_in, a) surviving columns, already gathered — the entry
+    point for quantized StructuredFanIn storage, where the compact panel IS
+    the stored representation (dequantized in XLA) and no dense weight
+    exists to gather from. Same kernels, no gather pass in the program.
+    """
+    b, d_in = x.shape
+    a = active_index.shape[0]
+    if interpret is None:
+        interpret = cm.default_interpret()
+    if block_b is None and b <= SMALL_BATCH_MAX:
+        if block_n is None:
+            _, block_n = default_structured_blocks(min(b, SMALL_BATCH_MAX),
+                                                   d_in, a, d_out)
+        return _structured_decode(x, panel, active_index, d_out=d_out,
+                                  block_n=block_n, block_o=block_o,
+                                  interpret=interpret)
+    if block_b is None and block_n is None:
+        block_b, block_n = default_structured_blocks(b, d_in, a, d_out)
+    elif block_b is None:
+        block_b = cm._fit_block_b(
+            lambda bb, bn, _d, _k: structured_vmem_words(bb, bn, d_in, d_out),
+            block_n, b, d_in, 0, cap=128)
+    elif block_n is None:
+        block_n = cm._fit_block_n(
+            lambda bb, bn, _d, _k: structured_vmem_words(bb, bn, d_in, d_out),
+            block_b, a, d_in, 0, cap=128)
+    return _structured_tiled(x, panel, active_index, d_out=d_out,
+                             block_b=block_b, block_n=block_n,
+                             block_o=block_o, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -349,54 +601,116 @@ def _coa_pad(values, indices, out_index, d_out: int, ap: int):
 
 
 @functools.partial(jax.jit, static_argnames=("d_out", "block_b", "block_n",
-                                             "interpret"))
-def _coa_tiled(x, values, indices, out_index, *, d_out: int, block_b: int,
-               block_n: int, interpret: bool):
+                                             "block_o", "interpret"))
+def _coa_tiled(x, values, indices, out_index, scales=None, *, d_out: int,
+               block_b: int, block_n: int, block_o: int | None,
+               interpret: bool):
     b, d_in = x.shape
     a, k = values.shape
     bp, ap = _ceil_to(max(b, 1), block_b), _ceil_to(max(a, 1), block_n)
     xp = jnp.pad(x, ((0, bp - b), (0, 0)))
     vp, ip, oip = _coa_pad(values, indices, out_index, d_out, ap)
 
-    out = pl.pallas_call(
-        functools.partial(_coa_kernel, grid_axis=1),
-        grid=(bp // block_b, ap // block_n),
-        in_specs=[
+    scaled = scales is not None
+    operands = [xp, vp, ip, oip]
+    if scaled:
+        operands.append(jnp.pad(scales.astype(jnp.float32),
+                                (0, ap - a)).reshape(1, ap))
+
+    if block_o is None:
+        in_specs = [
             pl.BlockSpec((block_b, d_in), lambda i, j: (i, 0)),
             pl.BlockSpec((block_n, k), lambda i, j: (j, 0)),
             pl.BlockSpec((block_n, k), lambda i, j: (j, 0)),
             pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((block_b, d_out), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bp, d_out), x.dtype),
+        ]
+        if scaled:
+            in_specs.append(pl.BlockSpec((1, block_n), lambda i, j: (0, j)))
+        out = pl.pallas_call(
+            functools.partial(_coa_kernel, grid_axis=1, scaled=scaled),
+            grid=(bp // block_b, ap // block_n),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((block_b, d_out), lambda i, j: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((bp, d_out), x.dtype),
+            interpret=interpret,
+        )(*operands)
+        return out[:b]
+
+    dop = _ceil_to(d_out, block_o)
+    in_specs = [
+        pl.BlockSpec((block_b, d_in), lambda i, o, j: (i, 0)),
+        pl.BlockSpec((block_n, k), lambda i, o, j: (j, 0)),
+        pl.BlockSpec((block_n, k), lambda i, o, j: (j, 0)),
+        pl.BlockSpec((1, block_n), lambda i, o, j: (0, j)),
+    ]
+    if scaled:
+        in_specs.append(pl.BlockSpec((1, block_n), lambda i, o, j: (0, j)))
+    out = pl.pallas_call(
+        functools.partial(_coa_kernel, grid_axis=2, scaled=scaled, o_axis=1,
+                          block_o=block_o),
+        grid=(bp // block_b, dop // block_o, ap // block_n),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, o, j: (i, o)),
+        out_shape=jax.ShapeDtypeStruct((bp, dop), x.dtype),
         interpret=interpret,
-    )(xp, vp, ip, oip)
-    return out[:b]
+    )(*operands)
+    return out[:b, :d_out]
 
 
-@functools.partial(jax.jit, static_argnames=("d_out", "block_n", "interpret"))
-def _coa_decode(x, values, indices, out_index, *, d_out: int, block_n: int,
-                interpret: bool):
+@functools.partial(jax.jit, static_argnames=("d_out", "block_n", "block_o",
+                                             "interpret"))
+def _coa_decode(x, values, indices, out_index, scales=None, *, d_out: int,
+                block_n: int, block_o: int | None, interpret: bool):
     b, d_in = x.shape
     a, k = values.shape
     bp, ap = _ceil_to(max(b, 1), SUBLANE), _ceil_to(max(a, 1), block_n)
     xp = jnp.pad(x, ((0, bp - b), (0, 0)))
     vp, ip, oip = _coa_pad(values, indices, out_index, d_out, ap)
 
-    out = pl.pallas_call(
-        functools.partial(_coa_kernel, grid_axis=0),
-        grid=(ap // block_n,),
-        in_specs=[
+    scaled = scales is not None
+    operands = [xp, vp, ip, oip]
+    if scaled:
+        operands.append(jnp.pad(scales.astype(jnp.float32),
+                                (0, ap - a)).reshape(1, ap))
+
+    if block_o is None:
+        in_specs = [
             pl.BlockSpec((bp, d_in), lambda j: (0, 0)),
             pl.BlockSpec((block_n, k), lambda j: (j, 0)),
             pl.BlockSpec((block_n, k), lambda j: (j, 0)),
             pl.BlockSpec((1, block_n), lambda j: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((bp, d_out), lambda j: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((bp, d_out), x.dtype),
+        ]
+        if scaled:
+            in_specs.append(pl.BlockSpec((1, block_n), lambda j: (0, j)))
+        out = pl.pallas_call(
+            functools.partial(_coa_kernel, grid_axis=0, scaled=scaled),
+            grid=(ap // block_n,),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((bp, d_out), lambda j: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((bp, d_out), x.dtype),
+            interpret=interpret,
+        )(*operands)
+        return out[:b]
+
+    dop = _ceil_to(d_out, block_o)
+    in_specs = [
+        pl.BlockSpec((bp, d_in), lambda o, j: (0, 0)),
+        pl.BlockSpec((block_n, k), lambda o, j: (j, 0)),
+        pl.BlockSpec((block_n, k), lambda o, j: (j, 0)),
+        pl.BlockSpec((1, block_n), lambda o, j: (0, j)),
+    ]
+    if scaled:
+        in_specs.append(pl.BlockSpec((1, block_n), lambda o, j: (0, j)))
+    out = pl.pallas_call(
+        functools.partial(_coa_kernel, grid_axis=1, scaled=scaled, o_axis=0,
+                          block_o=block_o),
+        grid=(dop // block_o, ap // block_n),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bp, block_o), lambda o, j: (0, o)),
+        out_shape=jax.ShapeDtypeStruct((bp, dop), x.dtype),
         interpret=interpret,
-    )(xp, vp, ip, oip)
-    return out[:b]
+    )(*operands)
+    return out[:b, :d_out]
 
 
 def condensed_over_active_matmul(
@@ -406,8 +720,10 @@ def condensed_over_active_matmul(
     out_index: jax.Array,
     d_out: int,
     *,
+    scales: jax.Array | None = None,
     block_b: int | None = None,
     block_n: int | None = None,
+    block_o: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Fused condensed-over-active matmul: the condensed gather runs over the
@@ -417,6 +733,10 @@ def condensed_over_active_matmul(
     accumulation, the same single downcast, the same drop semantics for
     out-of-range padding rows — without the separate scatter dispatch or the
     compact-activation HBM round trip.
+
+    ``scales`` (shape (a,), f32) marks ``values`` as int8/fp8 codes; the
+    dequantize fuses into the kernel. ``block_o`` tiles the scatter
+    epilogue over d_out (see module docstring).
     """
     b, d_in = x.shape
     a, k = values.shape
@@ -424,8 +744,8 @@ def condensed_over_active_matmul(
         interpret = cm.default_interpret()
     if block_b is None and b <= SMALL_BATCH_MAX:
         return condensed_over_active_matmul_decode(
-            x, values, indices, out_index, d_out, block_n=block_n,
-            interpret=interpret)
+            x, values, indices, out_index, d_out, scales=scales,
+            block_n=block_n, block_o=block_o, interpret=interpret)
     if block_b is None and block_n is None:
         block_b, block_n = default_coa_blocks(b, d_in, a, k, d_out)
     elif block_b is None:
@@ -436,8 +756,9 @@ def condensed_over_active_matmul(
         block_n = cm._fit_block_n(
             lambda bb, bn, _d, _k: coa_vmem_words(bb, bn, d_in, k, d_out),
             block_b, a, d_in, k, cap=128)
-    return _coa_tiled(x, values, indices, out_index, d_out=d_out,
-                      block_b=block_b, block_n=block_n, interpret=interpret)
+    return _coa_tiled(x, values, indices, out_index, scales, d_out=d_out,
+                      block_b=block_b, block_n=block_n, block_o=block_o,
+                      interpret=interpret)
 
 
 def condensed_over_active_matmul_decode(
@@ -447,7 +768,9 @@ def condensed_over_active_matmul_decode(
     out_index: jax.Array,
     d_out: int,
     *,
+    scales: jax.Array | None = None,
     block_n: int | None = None,
+    block_o: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Decode-specialized fused COA matmul (batch staged whole)."""
@@ -458,5 +781,5 @@ def condensed_over_active_matmul_decode(
     if block_n is None:
         _, block_n = default_coa_blocks(min(b, SMALL_BATCH_MAX), d_in, a, k,
                                         d_out)
-    return _coa_decode(x, values, indices, out_index, d_out=d_out,
-                       block_n=block_n, interpret=interpret)
+    return _coa_decode(x, values, indices, out_index, scales, d_out=d_out,
+                       block_n=block_n, block_o=block_o, interpret=interpret)

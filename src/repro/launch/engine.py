@@ -55,6 +55,7 @@ from repro.models import model as M
 from repro.models import paged as PG
 from repro.sparse import autotune as AT
 from repro.sparse import condensed as COND
+from repro.sparse import formats as F
 from repro.sparse import plan as PLAN
 from repro.sparse import registry as REG
 
@@ -529,6 +530,16 @@ class ServingEngine:
     size in tokens, ``gen_chunk`` the decode-dispatch granularity (streams
     join/leave at chunk boundaries), and ``warm=True`` pre-compiles every
     new program signature outside the timed window.
+
+    ``values_dtype`` (``"bf16"``/``"int8"``/``"fp8"``; None keeps the param
+    dtype) is an ENGINE-level setting, not part of ``PlanKey``: every plan
+    this engine builds exports value-storing leaves at that width, the cost
+    model prices the real stored bytes, and ``autotune`` times the quantized
+    kernels under the matching cache keys. One engine serves one precision —
+    a deployment that wants both runs two engines, exactly as it would for
+    two checkpoints. Masked-dense stacks read the live params and are
+    unaffected (quantized decode is a serving artifact of the exported
+    formats).
     """
 
     def __init__(self, cfg, params, masks, registry=None, *,
@@ -538,7 +549,8 @@ class ServingEngine:
                  paged: bool | None = None,
                  block_size: int = 16,
                  gen_chunk: int = 16,
-                 warm: bool = True):
+                 warm: bool = True,
+                 values_dtype: str | None = None):
         if path not in PLAN.PATHS:
             raise ValueError(
                 f"unknown serving path {path!r}; expected one of {PLAN.PATHS}")
@@ -563,6 +575,7 @@ class ServingEngine:
         self.block_size = int(block_size)
         self.gen_chunk = int(gen_chunk)
         self.warm = bool(warm)
+        self.values_dtype = F.resolve_quantize_spec(values_dtype)
         self._mask_versions = mask_versions
         self._itemsize = jnp.dtype(cfg.param_dtype).itemsize
         self._stats: dict | None = None     # realized stats, computed once
@@ -591,7 +604,8 @@ class ServingEngine:
         sig = tuple(
             (s.name, PLAN.select_representation(
                 s, batch_size=bucket, itemsize=self._itemsize,
-                stats=stats[s.name], profile=self.profile).representation)
+                stats=stats[s.name], profile=self.profile,
+                values_dtype=self.values_dtype).representation)
             for s in self.registry)
         return PlanKey(batch_bucket=bucket, formats=sig)
 
@@ -602,7 +616,8 @@ class ServingEngine:
             plan = PLAN.build_plan(
                 self.cfg, self.registry, self.params, self.masks,
                 batch_size=key.batch_bucket, path=self.path,
-                mask_versions=self._mask_versions, profile=self.profile)
+                mask_versions=self._mask_versions, profile=self.profile,
+                values_dtype=self.values_dtype)
             self._plans[key] = plan
         return plan
 
@@ -826,7 +841,8 @@ class ServingEngine:
         tuning pass would never be looked up by a bf16 serving run)."""
         dtype = jnp.dtype(self.cfg.dtype if dtype is None else dtype)
         return AT.tune_registry(self.registry, self.stats(),
-                                batch=batch_size, dtype=dtype, reps=reps)
+                                batch=batch_size, dtype=dtype, reps=reps,
+                                values_dtype=self.values_dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -76,11 +76,12 @@ PATHS = PLAN.PATHS
 
 def build_plan(cfg, registry, params, masks, path: str, *,
                batch_size: int = 1, mask_versions=None,
-               profile: PLAN.HardwareProfile = PLAN.DEFAULT_PROFILE) -> PLAN.Plan:
+               profile: PLAN.HardwareProfile = PLAN.DEFAULT_PROFILE,
+               values_dtype: str | None = None) -> PLAN.Plan:
     """Per-stack execution plan for ``path`` at the request batch shape."""
     return PLAN.build_plan(cfg, registry, params, masks, path=path,
                            batch_size=batch_size, mask_versions=mask_versions,
-                           profile=profile)
+                           profile=profile, values_dtype=values_dtype)
 
 
 def build_serving_masks(cfg, registry, params, masks, path: str,
@@ -107,6 +108,15 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--path", choices=PATHS, default="masked",
                     help="serving representation for sparse linears")
+    ap.add_argument("--values-dtype", choices=("f32", "bf16", "int8", "fp8"),
+                    default="f32",
+                    help="stored width of the exported sparse values: int8/"
+                         "fp8 quantize per output neuron (symmetric absmax "
+                         "scale, dequant fused into the Pallas kernels — "
+                         "~1 byte/weight streamed at decode), bf16 is a "
+                         "plain storage cast, f32 keeps the param dtype. "
+                         "Engine-wide setting; masked stacks read the live "
+                         "params and are unaffected")
     ap.add_argument("--profile", choices=("default", "measured"),
                     default="default",
                     help="cost-model hardware profile for --path auto: "
@@ -145,9 +155,14 @@ def main(argv=None):
                  if profile.gather_flops_per_s_large else "")
               + " GFLOP/s")
 
+    if (args.values_dtype != "f32" and args.path == "masked"):
+        print("[serve] note: --path masked serves the live dense params; "
+              f"--values-dtype {args.values_dtype} only affects exported "
+              "value-storing formats (condensed/structured paths or auto)")
     engine = ServingEngine(cfg, params, masks, reg, path=args.path,
                            profile=profile,
-                           paged=False if args.no_paged else None)
+                           paged=False if args.no_paged else None,
+                           values_dtype=args.values_dtype)
 
     if args.autotune and args.path == "masked":
         print("[serve] --autotune skipped: --path masked never dispatches "
@@ -165,6 +180,12 @@ def main(argv=None):
     rid = engine.submit(prompts, args.gen)
     if args.path == "auto" and reg:
         print(engine.plan_for(engine.plan_key(args.batch)).describe())
+    if args.values_dtype != "f32" and reg and args.path != "masked":
+        plan = engine.plan_for(engine.plan_key(args.batch))
+        serving, masked_ref = plan.weight_bytes()
+        print(f"[serve] values_dtype={args.values_dtype}: serving weight "
+              f"bytes {serving} ({serving / max(masked_ref, 1):.3f}x of the "
+              f"masked-dense reference)")
     engine.step()
     [res] = engine.retire(rid)
     b, t = prompts.shape

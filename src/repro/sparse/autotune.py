@@ -197,9 +197,21 @@ def _label(block_b: int | None, block_n: int) -> str:
     return f"decode x{block_n}" if block_b is None else f"{block_b}x{block_n}"
 
 
+def _quantized_operands(vals_f32, values_dtype: str | None):
+    """(values, scales) timing operands: quantize the f32 representative
+    values when a quantized ``values_dtype`` is requested (the timed kernel
+    must be the dequant-fused one the serving dispatch will run)."""
+    from repro.sparse import formats as F  # lazy: formats imports this module
+    vd = F.resolve_quantize_spec(values_dtype)
+    if vd not in F.QUANTIZED_DTYPES:
+        return vals_f32, None
+    return F.quantize_values(vals_f32, vd)
+
+
 def autotune_blocks(batch: int, d_in: int, n_out: int, k: int, *,
                     dtype=jnp.float32, reps: int = 3, seed: int = 0,
                     backend: str | None = None, interpret: bool | None = None,
+                    values_dtype: str | None = None,
                     save: bool = True) -> TuneResult:
     """Timed search over candidate block shapes for one (shape, batch bucket).
 
@@ -209,6 +221,8 @@ def autotune_blocks(batch: int, d_in: int, n_out: int, k: int, *,
     kernel module, the decode-specialized variant when the bucket is small,
     and always the legacy 128x128 general-kernel default as the baseline —
     so the winner is never slower than the default on the measured table.
+    ``values_dtype`` ("int8"/"fp8") times the dequant-fused quantized kernel
+    on quantized operands and records the entry under the quantized key.
     """
     b = batch_bucket(batch)
     itemsize = jnp.dtype(dtype).itemsize
@@ -217,6 +231,7 @@ def autotune_blocks(batch: int, d_in: int, n_out: int, k: int, *,
     vals = jax.random.normal(jax.random.fold_in(key, 1), (n_out, k),
                              jnp.float32).astype(dtype)
     idx = jax.random.randint(jax.random.fold_in(key, 2), (n_out, k), 0, d_in)
+    vals, scales = _quantized_operands(vals, values_dtype)
     if interpret is None:
         interpret = cm.default_interpret(backend)
 
@@ -232,14 +247,17 @@ def autotune_blocks(batch: int, d_in: int, n_out: int, k: int, *,
     for bb, bn in cands:
         if bb is None:
             fn = lambda x, v, i, bn=bn: cm.condensed_matmul_decode(
-                x, v, i, block_n=bn, interpret=interpret)
+                x, v, i, scales=scales, block_n=bn, interpret=interpret)
         else:
             fn = lambda x, v, i, bb=bb, bn=bn: cm.condensed_matmul(
-                x, v, i, block_b=bb, block_n=bn, interpret=interpret)
+                x, v, i, scales=scales, block_b=bb, block_n=bn,
+                interpret=interpret)
         table[_label(bb, bn)] = _time_us(fn, x, vals, idx, reps=reps)
 
+    from repro.sparse import formats as F
     return _finish_result(
-        kernel_key(d_in, n_out, k, b, backend=backend, itemsize=itemsize),
+        F.shape_tuning_key(d_in, n_out, k, b, backend=backend,
+                           itemsize=itemsize, values_dtype=values_dtype),
         cands, table, default_label=_label(128, 128), interpret=interpret,
         save=save)
 
@@ -278,11 +296,16 @@ def autotune_structured_blocks(batch: int, d_in: int, a: int, d_out: int, *,
                                dtype=jnp.float32, reps: int = 3, seed: int = 0,
                                backend: str | None = None,
                                interpret: bool | None = None,
+                               values_dtype: str | None = None,
                                save: bool = True) -> TuneResult:
     """Timed block search for the column-gathered structured kernel at one
     (shape, batch bucket). ``a`` is the padded active-column count the
     exported ``active_index`` carries; the baseline is the untimed
-    VMEM-budget default (``structured_matmul.default_structured_blocks``)."""
+    VMEM-budget default (``structured_matmul.default_structured_blocks``).
+    ``values_dtype`` only tags the cache key (quantized StructuredFanIn
+    dequantizes its panel in XLA, so the kernel timing is dtype-invariant —
+    but the key must match what the quantized format's ``tuning_key``
+    derives)."""
     from repro.sparse import formats as F  # lazy: formats imports this module
     b = batch_bucket(batch)
     itemsize = jnp.dtype(dtype).itemsize
@@ -314,7 +337,8 @@ def autotune_structured_blocks(batch: int, d_in: int, a: int, d_out: int, *,
 
     return _finish_result(
         F.shape_tuning_key(d_in, a, 0, b, backend=backend, itemsize=itemsize,
-                           kind="structured", scatter_width=d_out),
+                           kind="structured", scatter_width=d_out,
+                           values_dtype=values_dtype),
         cands, table, default_label=_label(*default), interpret=interpret,
         save=save)
 
@@ -323,10 +347,12 @@ def autotune_coa_blocks(batch: int, d_in: int, a: int, k: int, d_out: int, *,
                         dtype=jnp.float32, reps: int = 3, seed: int = 0,
                         backend: str | None = None,
                         interpret: bool | None = None,
+                        values_dtype: str | None = None,
                         save: bool = True) -> TuneResult:
     """Timed block search for the FUSED condensed-over-active kernel at one
     (shape, batch bucket): ``a`` surviving rows of fan-in ``k``, scattered
-    into a ``d_out``-wide output block in-kernel."""
+    into a ``d_out``-wide output block in-kernel. ``values_dtype``
+    ("int8"/"fp8") times the dequant-fused variant under the quantized key."""
     from repro.sparse import formats as F  # lazy: formats imports this module
     b = batch_bucket(batch)
     itemsize = jnp.dtype(dtype).itemsize
@@ -336,6 +362,7 @@ def autotune_coa_blocks(batch: int, d_in: int, a: int, k: int, d_out: int, *,
                              jnp.float32).astype(dtype)
     idx = jax.random.randint(jax.random.fold_in(key, 2), (a, k), 0, d_in)
     oi = _sorted_active_index(jax.random.fold_in(key, 3), a, d_out)
+    vals, scales = _quantized_operands(vals, values_dtype)
     if interpret is None:
         interpret = cm.default_interpret(backend)
 
@@ -351,21 +378,25 @@ def autotune_coa_blocks(batch: int, d_in: int, a: int, k: int, d_out: int, *,
     for bb, bn in cands:
         if bb is None:
             fn = lambda x, v, i, o, bn=bn: sm.condensed_over_active_matmul_decode(
-                x, v, i, o, d_out, block_n=bn, interpret=interpret)
+                x, v, i, o, d_out, scales=scales, block_n=bn,
+                interpret=interpret)
         else:
             fn = lambda x, v, i, o, bb=bb, bn=bn: sm.condensed_over_active_matmul(
-                x, v, i, o, d_out, block_b=bb, block_n=bn, interpret=interpret)
+                x, v, i, o, d_out, scales=scales, block_b=bb, block_n=bn,
+                interpret=interpret)
         table[_label(bb, bn)] = _time_us(fn, x, vals, idx, oi, reps=reps)
 
     return _finish_result(
         F.shape_tuning_key(d_in, a, k, b, backend=backend, itemsize=itemsize,
-                           kind="coa", scatter_width=d_out),
+                           kind="coa", scatter_width=d_out,
+                           values_dtype=values_dtype),
         cands, table, default_label=_label(*default), interpret=interpret,
         save=save)
 
 
 def tune_registry(registry, stats: dict, *, batch: int, dtype=jnp.float32,
-                  reps: int = 3, backend: str | None = None) -> dict[str, TuneResult]:
+                  reps: int = 3, backend: str | None = None,
+                  values_dtype: str | None = None) -> dict[str, TuneResult]:
     """Tune every DISTINCT kernel-dispatch shape among ``registry``'s stacks
     at their realized fan-in (``stats`` from condensed.export_stats).
 
@@ -379,33 +410,37 @@ def tune_registry(registry, stats: dict, *, batch: int, dtype=jnp.float32,
     (``min_fan_in == d_in``) additionally tune ``StructuredFanIn``'s key on
     the column-gathered structured kernel — the representation the auto
     plan can now pick for them. Already-cached shapes are skipped. Used by
-    ``serve --autotune``."""
+    ``serve --autotune``. ``values_dtype`` ("int8"/"fp8") tunes the
+    dequant-fused kernels on quantized operands under the quantized keys —
+    the registry a quantized-serving engine consumes."""
     from repro.sparse import formats as F  # lazy: formats imports this module
     out: dict[str, TuneResult] = {}
     seen: set[str] = set()
     itemsize = jnp.dtype(dtype).itemsize
+    vd = F.resolve_quantize_spec(values_dtype)
     for s in registry:
         st = stats[s.name]
-        spec = F.spec_for_stack(s, st, itemsize)
+        spec = F.spec_for_stack(s, st, itemsize, vd)
         a = spec.max_active
 
         def tuners():
             yield (s.name, F.Condensed,
                    lambda: autotune_blocks(batch, s.d_in, s.d_out, spec.k,
                                            dtype=dtype, reps=reps,
-                                           backend=backend))
+                                           backend=backend, values_dtype=vd))
             if a < s.d_out:
                 yield (f"{s.name}@a{a}", F.CondensedOverActive,
                        lambda: autotune_coa_blocks(batch, s.d_in, a, spec.k,
                                                    s.d_out, dtype=dtype,
-                                                   reps=reps, backend=backend))
+                                                   reps=reps, backend=backend,
+                                                   values_dtype=vd))
                 if st.min_fan_in >= s.d_in:
                     a_pad = sm.padded_active_count(a, s.d_out)
                     yield (f"{s.name}@structured",
                            F.StructuredFanIn,
                            lambda: autotune_structured_blocks(
                                batch, s.d_in, a_pad, s.d_out, dtype=dtype,
-                               reps=reps, backend=backend))
+                               reps=reps, backend=backend, values_dtype=vd))
 
         for label, cls, tune in tuners():
             key = cls.spec_tuning_key(spec, batch, backend=backend)

@@ -102,7 +102,8 @@ def structured_stack_leaf(mask, *, d_in: int | None = None,
 
 def recondense_stack_leaf(weight, mask, stats: ExportStats, old_leaf, *,
                           over_active: bool = False,
-                          donate: bool = True) -> F.SparseFormat:
+                          donate: bool = True,
+                          quantize_spec=None) -> F.SparseFormat:
     """Re-condense one stack for Plan.refresh, reusing ``old_leaf``'s device
     buffers when the new arrays' avals match (see the donated-program notes
     in repro.sparse.formats).
@@ -111,13 +112,19 @@ def recondense_stack_leaf(weight, mask, stats: ExportStats, old_leaf, *,
     callers must not read them afterwards. Falls back to a fresh (non-
     donating) export when the realized fan-in / active count changed shape.
     Accepts legacy dict leaves through the deprecation shim.
+
+    ``quantize_spec`` only matters on the fresh-export fallback (the plan's
+    values dtype for a leaf whose representation just changed); the donated
+    path re-exports under the OLD leaf's own ``values_dtype``, which for a
+    plan-managed leaf is the same thing.
     """
     if isinstance(old_leaf, dict):
         old_leaf = F.from_legacy_leaf(old_leaf, d_in=weight.shape[-2],
                                       d_out=weight.shape[-1])
     cls = F.CondensedOverActive if over_active else F.Condensed
     if not isinstance(old_leaf, cls):  # representation changed: fresh export
-        return cls.export_from_dense(weight, mask, stats)
+        return cls.export_from_dense(weight, mask, stats,
+                                     quantize_spec=quantize_spec)
     return old_leaf.donate_refresh(weight, mask, stats, donate=donate)
 
 

@@ -98,6 +98,12 @@ class FormatSpec:
     (``spec_for_stack``) or from a live format instance (``fmt.spec()``) —
     the allocation-free half of the protocol, used by the plan cost model
     and the autotune key derivation before any export has happened.
+
+    ``values_dtype`` is the canonical short name of the exported values
+    storage dtype (``"int8"``/``"fp8"`` for the quantized formats, None for
+    "same as ``itemsize``'s dtype") — the pricing methods read the REAL byte
+    width from it so ``--path auto`` re-derives its crossovers honestly
+    under quantization.
     """
     d_in: int
     d_out: int
@@ -106,22 +112,105 @@ class FormatSpec:
     k: int                  # constant fan-in
     max_active: int         # exported row count for condensed-over-active
     active_fraction: float  # mean active-neuron fraction
+    values_dtype: str | None = None  # canonical name; None = itemsize's dtype
 
 
-def spec_for_stack(stack, stats: ExportStats, itemsize: int) -> FormatSpec:
+# ---------------------------------------------------------------------------
+# quantized values: canonical dtype names + per-neuron symmetric scales
+# ---------------------------------------------------------------------------
+
+# canonical names accepted by quantize_spec / --values-dtype. fp8 resolves to
+# e4m3 (the inference-weight variant) where this jax build carries it.
+_FP8_DTYPE = getattr(jnp, "float8_e4m3fn", None)
+VALUES_DTYPES: dict[str, typing.Any] = {
+    "f32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8,
+    **({"fp8": _FP8_DTYPE} if _FP8_DTYPE is not None else {}),
+}
+QUANTIZED_DTYPES = ("int8", "fp8")
+# symmetric per-neuron scale maps the row's absmax onto the code's top value
+_QMAX = {"int8": 127.0, "fp8": 448.0}  # e4m3 finite max = 448
+
+
+def resolve_quantize_spec(spec) -> str | None:
+    """Normalize a quantize spec (canonical name / dtype / None) to a
+    canonical name, validating backend support. ``"f32"``/None mean "no
+    quantization" (the export keeps float values, no scales)."""
+    if spec is None or spec == "f32":
+        return None
+    if isinstance(spec, str):
+        name = spec
+    else:
+        dt = jnp.dtype(spec)
+        by_dtype = {jnp.dtype(v): k for k, v in VALUES_DTYPES.items()}
+        name = by_dtype.get(dt, dt.name)
+    if name in ("f32", "float32"):
+        return None
+    if name == "fp8" and _FP8_DTYPE is None:
+        raise ValueError("fp8 values need a jax build with float8_e4m3fn; "
+                         "this one has none — use int8 instead")
+    if name not in VALUES_DTYPES:
+        raise ValueError(f"unknown values dtype {spec!r}; expected one of "
+                         f"{sorted(VALUES_DTYPES)}")
+    return name
+
+
+def values_itemsize(spec: FormatSpec) -> int:
+    """Byte width of one stored value under ``spec`` (the real streamed
+    width, not the compute dtype's)."""
+    if spec.values_dtype is None:
+        return spec.itemsize
+    return jnp.dtype(VALUES_DTYPES[spec.values_dtype]).itemsize
+
+
+def quantize_values(values, name: str, *, axis: int = -1):
+    """Per-neuron symmetric quantization of a float values array.
+
+    ``axis`` is the within-neuron axis reduced for the scale (fan-in ``k``
+    for the condensed layouts, ``d_in`` for the structured gathered panel).
+    Returns ``(q, scales)`` with ``scales = absmax/qmax`` as float32 and
+    ``q ~ values/scales`` in the target dtype. All-zero rows (and the exact-
+    zero padding slots the exports guarantee) quantize to exact 0 under a
+    scale of 1, so dequantization reproduces their zeros bit-exactly.
+    """
+    name = typing.cast(str, resolve_quantize_spec(name))
+    if name not in QUANTIZED_DTYPES:
+        raise ValueError(f"quantize_values needs one of {QUANTIZED_DTYPES}, "
+                         f"got {name!r}")
+    v = values.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(v), axis=axis, keepdims=True)
+    scales = jnp.where(amax > 0, amax / _QMAX[name], 1.0).astype(jnp.float32)
+    scaled = v / scales
+    if name == "int8":
+        q = jnp.clip(jnp.round(scaled), -127.0, 127.0).astype(jnp.int8)
+    else:
+        q = scaled.astype(VALUES_DTYPES[name])
+    return q, jnp.squeeze(scales, axis=axis)
+
+
+def dequantize_values(q, scales, *, axis: int = -1, dtype=jnp.float32):
+    """Inverse of ``quantize_values``: broadcast the per-neuron scale back
+    over ``axis`` (the reference dequantization the kernels fuse)."""
+    return (q.astype(jnp.float32)
+            * jnp.expand_dims(scales.astype(jnp.float32), axis)).astype(dtype)
+
+
+def spec_for_stack(stack, stats: ExportStats, itemsize: int,
+                   values_dtype: str | None = None) -> FormatSpec:
     """``stack`` is duck-typed (registry.SparseStack or any object with
     d_in/d_out; n_replicas defaults to 1 — benchmarks price bare shapes)."""
     return FormatSpec(d_in=stack.d_in, d_out=stack.d_out,
                       n_replicas=getattr(stack, "n_replicas", 1),
                       itemsize=itemsize,
                       k=max(stats.k, 1), max_active=max(stats.max_active, 1),
-                      active_fraction=min(max(stats.active_fraction, 0.0), 1.0))
+                      active_fraction=min(max(stats.active_fraction, 0.0), 1.0),
+                      values_dtype=resolve_quantize_spec(values_dtype))
 
 
 def shape_tuning_key(d_in: int, n_out: int, k: int, batch: int, *,
                      backend: str | None = None, itemsize: int = 4,
                      kind: str = "condensed",
-                     scatter_width: int | None = None) -> str:
+                     scatter_width: int | None = None,
+                     values_dtype: str | None = None) -> str:
     """Canonical autotune-cache key for a sparse kernel dispatch shape.
 
     Single definition shared by the formats' ``tuning_key`` methods, by
@@ -143,10 +232,19 @@ def shape_tuning_key(d_in: int, n_out: int, k: int, batch: int, *,
     * ``"coa"`` — the fused condensed-over-active kernel; ``n_out``/``k``
       are the surviving-row condensed arrays' dims and ``scatter_width`` is
       again the dense output width.
+
+    ``values_dtype`` (a canonical name from ``VALUES_DTYPES``) distinguishes
+    quantized key spaces: int8 and fp8 both store 1 byte per value, so the
+    plain ``w{bits}`` width component cannot tell them apart — quantized
+    dispatches key as ``w<name>`` (e.g. ``wint8``) instead. Float dtypes
+    keep the byte-identical legacy ``w{bits}`` layout so every existing
+    cache entry stays valid.
     """
     from repro.sparse import autotune as AT  # lazy: autotune is optional at import
     backend = backend or jax.default_backend()
-    key = (f"{backend}/w{itemsize * 8}/d{d_in}/n{n_out}/k{k}"
+    vd = resolve_quantize_spec(values_dtype)
+    width = f"w{vd}" if vd in QUANTIZED_DTYPES else f"w{itemsize * 8}"
+    key = (f"{backend}/{width}/d{d_in}/n{n_out}/k{k}"
            f"/b{AT.batch_bucket(batch)}")
     if kind != "condensed":
         key += f"/{kind}-o{scatter_width}"
@@ -248,8 +346,11 @@ class SparseFormat:
         return key in self._array_fields
 
     def to_legacy_dict(self) -> dict:
-        """The pre-redesign dict leaf this format replaces."""
-        return {f: getattr(self, f) for f in self._array_fields}
+        """The pre-redesign dict leaf this format replaces. ``None`` fields
+        (optional fields the instance does not carry, e.g. unquantized
+        ``scales``) are omitted — the legacy layouts never had them."""
+        return {f: getattr(self, f) for f in self._array_fields
+                if getattr(self, f) is not None}
 
     def map_arrays_with_names(self, fn):
         """Rebuild with each array field replaced by ``fn(name, value)`` —
@@ -265,7 +366,8 @@ class SparseFormat:
         raise NotImplementedError
 
     @classmethod
-    def export_from_dense(cls, w, mask, stats: ExportStats | None = None):
+    def export_from_dense(cls, w, mask, stats: ExportStats | None = None, *,
+                          quantize_spec=None):
         raise NotImplementedError
 
     def spec(self) -> FormatSpec:
@@ -283,6 +385,13 @@ class SparseFormat:
     def estimate_weight_bytes(cls, spec: FormatSpec) -> int:
         """Per-step weight-side HBM traffic this format actually reads."""
         raise NotImplementedError
+
+    @classmethod
+    def estimate_values_bytes(cls, spec: FormatSpec) -> int:
+        """The VALUE stream alone (weights + per-neuron scales, excluding
+        index/topology arrays both a float and a quantized export of the
+        same mask share) — the bytes quantization actually shrinks."""
+        return cls.estimate_weight_bytes(spec)
 
     def tuning_key(self, batch: int, *, backend: str | None = None) -> str | None:
         """Autotune-cache key for this instance's kernel dispatch (None when
@@ -317,6 +426,15 @@ class SparseFormat:
         (``missing``: field names the restore found no arrays for). Default:
         keep the template's values. Overridden where a derived field must
         stay consistent with restored ones."""
+        return self
+
+    def restore_finalize(self) -> "SparseFormat":
+        """Reconcile restored arrays with the template's declared storage
+        dtype. Checkpoint restore keeps each array at the ARCHIVE's dtype,
+        so a pre-quantization archive restored into a quantized template
+        arrives with float values (re-quantize), and a quantized archive
+        restored into a float template arrives with int8/fp8 values plus
+        adopted scales (dequantize). Default: nothing to reconcile."""
         return self
 
 
@@ -409,6 +527,96 @@ def _revalue_active_donated(weight, mask, old_values, indices, out_index):
                               out_index).astype(old_values.dtype)
 
 
+# quantized variants: same donation contract, with the per-neuron quantize
+# epilogue fused into the jitted program so the new int8/fp8 values and f32
+# scales are written straight into the OLD quantized buffers — a live
+# quantized plan refreshes without ever holding a float copy of the stack.
+
+@functools.partial(jax.jit, static_argnames=("k", "qdt"),
+                   donate_argnums=(2, 3, 4), keep_unused=True)
+def _recondense_quantized_donated(weight, mask, old_values, old_indices,
+                                  old_scales, *, k: int, qdt: str):
+    fn = lambda w, m: topology.dense_to_condensed(w * m, m, k)
+    vals, idx = _vmap_lead(fn, weight.ndim - 2)(weight, mask)
+    q, s = quantize_values(vals, qdt)
+    return q, idx, s
+
+
+@functools.partial(jax.jit, static_argnames=("k", "a", "qdt"),
+                   donate_argnums=(2, 3, 4, 5), keep_unused=True)
+def _recondense_active_quantized_donated(weight, mask, old_values, old_indices,
+                                         old_out_index, old_scales, *,
+                                         k: int, a: int, qdt: str):
+    vals, idx, oi = _condense_active_stack(weight, mask, k, a)
+    q, s = quantize_values(vals, qdt)
+    return q, idx, oi, s
+
+
+@functools.partial(jax.jit, static_argnames=("qdt",), donate_argnums=(2, 3),
+                   keep_unused=True)
+def _revalue_quantized_donated(weight, mask, old_values, old_scales, indices,
+                               *, qdt: str):
+    return quantize_values(_gather_at_indices(weight, mask, indices), qdt)
+
+
+@functools.partial(jax.jit, static_argnames=("qdt",), donate_argnums=(2, 3),
+                   keep_unused=True)
+def _revalue_active_quantized_donated(weight, mask, old_values, old_scales,
+                                      indices, out_index, *, qdt: str):
+    return quantize_values(
+        _gather_at_indices(weight, mask, indices, out_index), qdt)
+
+
+def _gather_active_panel(weight, mask, active_index):
+    """(lead..., d_in, a_pad) surviving-column panel of ``weight * mask``.
+    Sentinel (padding) slots are zeroed so they quantize to exact 0 and
+    never pollute a real column's scale."""
+    def fn(w, m, ai):
+        d_out = w.shape[-1]
+        g = jnp.take(w * m, jnp.minimum(ai, d_out - 1), axis=1)
+        return jnp.where((ai < d_out)[None, :], g, 0.0)
+
+    return _vmap_lead(fn, weight.ndim - 2)(weight, mask, active_index)
+
+
+@functools.partial(jax.jit, static_argnames=("qdt",), donate_argnums=(3, 4),
+                   keep_unused=True)
+def _revalue_structured_quantized_donated(weight, mask, active_index,
+                                          old_values, old_scales, *, qdt: str):
+    return quantize_values(_gather_active_panel(weight, mask, active_index),
+                           qdt, axis=-2)
+
+
+def is_quantized_storage(arr_or_dtype) -> bool:
+    """Is this array (or dtype) stored in one of the quantized values
+    dtypes? Used by checkpoint restore to decide when a template/archive
+    dtype mismatch means "re-/de-quantize" rather than "cast"."""
+    dt = jnp.dtype(getattr(arr_or_dtype, "dtype", arr_or_dtype))
+    return any(jnp.dtype(VALUES_DTYPES[n]) == dt for n in QUANTIZED_DTYPES
+               if n in VALUES_DTYPES)
+
+
+def _finalize_quantized_restore(fmt, *, axis: int = -1):
+    """Reconcile a restored format's values/scales with its declared
+    ``values_dtype`` (see ``SparseFormat.restore_finalize``). ``axis`` is
+    the per-neuron reduction axis of the class's scale convention."""
+    vals = fmt.values
+    if vals is None or isinstance(vals, jax.ShapeDtypeStruct):
+        return fmt
+    declared = fmt.values_dtype
+    if declared in QUANTIZED_DTYPES:
+        if jnp.issubdtype(vals.dtype, jnp.floating) \
+                and not is_quantized_storage(vals):
+            q, s = quantize_values(vals, declared, axis=axis)
+            return dataclasses.replace(fmt, values=q, scales=s)
+        return fmt
+    if is_quantized_storage(vals) and fmt.scales is not None:
+        # quantized archive into a float template: dequantize and drop scales
+        deq = dequantize_values(vals, fmt.scales, axis=axis)
+        return dataclasses.replace(fmt, values=deq, scales=None)
+    return fmt
+
+
 # ---------------------------------------------------------------------------
 # the four formats
 # ---------------------------------------------------------------------------
@@ -486,27 +694,51 @@ class StructuredFanIn(SparseFormat):
     active_index: jax.Array | None = None  # (lead..., a_pad) int32, pad=d_out
     d_in: int = 0                        # dense weight fan-in (for pricing)
     weight_itemsize: int = 4
+    values: jax.Array | None = None      # (lead..., d_in, a_pad) quantized panel
+    scales: jax.Array | None = None      # (lead..., a_pad) f32 per column
+    values_dtype: str | None = None      # canonical name when quantized
 
     format_name: typing.ClassVar[str] = "structured"
     _array_fields: typing.ClassVar[tuple[str, ...]] = ("neuron_active",
-                                                       "active_index")
-    _static_fields: typing.ClassVar[tuple[str, ...]] = ("d_in", "weight_itemsize")
+                                                       "active_index",
+                                                       "values", "scales")
+    _static_fields: typing.ClassVar[tuple[str, ...]] = ("d_in",
+                                                        "weight_itemsize",
+                                                        "values_dtype")
 
     def apply(self, x, w=None):
+        if self.values is not None and self.active_index is not None:
+            # quantized export: the gathered active-column panel is stored
+            # in the format itself; dequantize the 1-byte stream and feed
+            # the pre-gathered kernel path (no live-weight read, no
+            # column-gather pass)
+            panel = dequantize_values(self.values, self.scales, axis=-2,
+                                      dtype=x.dtype)
+            return ops.structured_gathered_linear_nd(
+                x, panel, self.active_index, self.neuron_active.shape[-1],
+                values_dtype=self.values_dtype)
         if self.active_index is None:
             return ops.structured_dense(x, w.astype(x.dtype),
                                         self.neuron_active)
         return ops.structured_linear_nd(x, w, self.active_index)
 
     @classmethod
-    def export_from_dense(cls, w, mask, stats=None):
+    def export_from_dense(cls, w, mask, stats=None, *, quantize_spec=None):
         stats = stats if stats is not None else _realized_stats(mask)
         d_out = int(mask.shape[-1])
         a_pad = padded_active_count(max(stats.max_active, 1), d_out)
-        return cls(neuron_active=jnp.any(mask, axis=-2),
-                   active_index=active_index_from_mask(mask, a_pad),
+        ai = active_index_from_mask(mask, a_pad)
+        qdt = resolve_quantize_spec(quantize_spec)
+        vals = scales = None
+        if qdt in QUANTIZED_DTYPES:
+            vals, scales = quantize_values(_gather_active_panel(w, mask, ai),
+                                           qdt, axis=-2)
+        else:
+            qdt = None  # a bare storage cast has nothing to store here
+        return cls(neuron_active=jnp.any(mask, axis=-2), active_index=ai,
                    d_in=int(mask.shape[-2]),
-                   weight_itemsize=jnp.dtype(w.dtype).itemsize)
+                   weight_itemsize=jnp.dtype(w.dtype).itemsize,
+                   values=vals, scales=scales, values_dtype=qdt)
 
     def _a_pad(self) -> int:
         d_out = self.neuron_active.shape[-1]
@@ -522,7 +754,8 @@ class StructuredFanIn(SparseFormat):
         return FormatSpec(d_in=self.d_in, d_out=d_out, n_replicas=n,
                           itemsize=self.weight_itemsize, k=self.d_in,
                           max_active=a_pad,
-                          active_fraction=min(a_pad / max(d_out, 1), 1.0))
+                          active_fraction=min(a_pad / max(d_out, 1), 1.0),
+                          values_dtype=self.values_dtype)
 
     @classmethod
     def estimate_cost(cls, spec, batch, profile):
@@ -537,11 +770,19 @@ class StructuredFanIn(SparseFormat):
 
     @classmethod
     def estimate_weight_bytes(cls, spec):
-        # the gathered (d_in, a_pad) weight panel + the int32 active_index;
+        # the gathered (d_in, a_pad) weight panel (real stored width, + the
+        # f32 per-column scale when quantized) + the int32 active_index;
         # neuron_active is not read on the gathered hot path
         a_pad = padded_active_count(spec.max_active, spec.d_out)
-        return spec.n_replicas * (spec.d_in * a_pad * spec.itemsize
-                                  + a_pad * 4)
+        return cls.estimate_values_bytes(spec) + spec.n_replicas * a_pad * 4
+
+    @classmethod
+    def estimate_values_bytes(cls, spec):
+        a_pad = padded_active_count(spec.max_active, spec.d_out)
+        vb = spec.n_replicas * spec.d_in * a_pad * values_itemsize(spec)
+        if spec.values_dtype in QUANTIZED_DTYPES:
+            vb += spec.n_replicas * a_pad * 4
+        return vb
 
     def tuning_key(self, batch, *, backend=None):
         if self.active_index is None:
@@ -549,14 +790,16 @@ class StructuredFanIn(SparseFormat):
         return shape_tuning_key(
             self.d_in, self._a_pad(), 0, batch, backend=backend,
             itemsize=self.weight_itemsize, kind="structured",
-            scatter_width=self.neuron_active.shape[-1])
+            scatter_width=self.neuron_active.shape[-1],
+            values_dtype=self.values_dtype)
 
     @classmethod
     def spec_tuning_key(cls, spec, batch, *, backend=None):
         a_pad = padded_active_count(spec.max_active, spec.d_out)
         return shape_tuning_key(spec.d_in, a_pad, 0, batch, backend=backend,
                                 itemsize=spec.itemsize, kind="structured",
-                                scatter_width=spec.d_out)
+                                scatter_width=spec.d_out,
+                                values_dtype=spec.values_dtype)
 
     @classmethod
     def abstract(cls, lead, d_in, d_out, k, dtype):
@@ -570,7 +813,24 @@ class StructuredFanIn(SparseFormat):
                    d_in=d_in, weight_itemsize=jnp.dtype(dtype).itemsize)
 
     def donate_refresh(self, w, mask, stats=None, *, donate=True):
-        return type(self).export_from_dense(w, mask, stats)
+        return type(self).export_from_dense(w, mask, stats,
+                                            quantize_spec=self.values_dtype)
+
+    def refresh_values(self, w, mask, *, donate: bool = True):
+        """No-op for float instances (they read the live weights). Quantized
+        instances hold a stale panel: regather + requantize at the stored
+        active_index, donated into the old 1-byte buffers."""
+        if self.values is None or self.active_index is None:
+            return self
+        if donate:
+            vals, s = _revalue_structured_quantized_donated(
+                w, mask, self.active_index, self.values, self.scales,
+                qdt=self.values_dtype)
+        else:
+            vals, s = quantize_values(
+                _gather_active_panel(w, mask, self.active_index),
+                self.values_dtype, axis=-2)
+        return dataclasses.replace(self, values=vals, scales=s)
 
     def rebuild_missing(self, missing):
         # archives written before active_index existed: derive it from the
@@ -580,15 +840,27 @@ class StructuredFanIn(SparseFormat):
         # the archive's actives (a too-short vector would silently zero the
         # overflow columns). Restore runs host-side on concrete arrays, so
         # the one scalar sync is fine here.
+        out = self
         if "active_index" in missing and "neuron_active" not in missing \
                 and self.active_index is not None:
             act = self.neuron_active
             realized = int(jax.device_get(
                 jnp.max(jnp.sum(act.astype(jnp.int32), axis=-1))))
             a_pad = padded_active_count(max(realized, 1), act.shape[-1])
-            return dataclasses.replace(
-                self, active_index=active_index_from_bools(act, a_pad))
-        return self
+            out = dataclasses.replace(
+                out, active_index=active_index_from_bools(act, a_pad))
+        if "values" in missing and out.values_dtype in QUANTIZED_DTYPES:
+            # the archive predates the quantized panel and the panel cannot
+            # be rebuilt without the live dense weight: degrade to the
+            # live-weight (unquantized) execution path; the next
+            # donate_refresh re-exports the panel at the declared dtype
+            return dataclasses.replace(out, values=None, scales=None)
+        if "scales" in missing and out.values_dtype in QUANTIZED_DTYPES:
+            out = out.restore_finalize()
+        return out
+
+    def restore_finalize(self):
+        return _finalize_quantized_restore(self, axis=-2)
 
 
 @_register
@@ -599,25 +871,46 @@ class Condensed(SparseFormat):
     ``d_in`` (static) is the dense fan-in the indices address — needed for
     the autotune cache key (the kernel's VMEM footprint depends on the
     activation row length), not for ``apply``.
+
+    Quantized exports (``quantize_spec="int8"``/``"fp8"``) store ``values``
+    at 1 byte/element with a per-neuron float32 ``scales`` row-scale; the
+    dequantize (one multiply per OUTPUT, after the k-reduction) is fused
+    into the Pallas gather kernel, so the decode hot path streams the weight
+    values at the quantized width. ``values_dtype`` (static) records the
+    declared storage dtype so checkpoint restore can re-quantize a float
+    archive into this template.
     """
     values: jax.Array                    # (lead..., d_out, k)
     indices: jax.Array                   # (lead..., d_out, k) int32
     d_in: int = 0
+    scales: jax.Array | None = None      # (lead..., d_out) f32 when quantized
+    values_dtype: str | None = None      # canonical name when quantized
 
     format_name: typing.ClassVar[str] = "condensed"
-    _array_fields: typing.ClassVar[tuple[str, ...]] = ("values", "indices")
-    _static_fields: typing.ClassVar[tuple[str, ...]] = ("d_in",)
+    _array_fields: typing.ClassVar[tuple[str, ...]] = ("values", "indices",
+                                                       "scales")
+    _static_fields: typing.ClassVar[tuple[str, ...]] = ("d_in", "values_dtype")
 
     def apply(self, x, w=None):
+        if self.scales is not None:
+            return ops.condensed_linear_nd(x, self.values, self.indices,
+                                           scales=self.scales)
         return ops.condensed_linear_nd(x, self.values.astype(x.dtype),
                                        self.indices)
 
     @classmethod
-    def export_from_dense(cls, w, mask, stats=None):
+    def export_from_dense(cls, w, mask, stats=None, *, quantize_spec=None):
         stats = stats if stats is not None else _realized_stats(mask)
         k = max(stats.k, 1)
         fn = lambda w_, m_: topology.dense_to_condensed(w_ * m_, m_, k)
         vals, idx = _vmap_lead(fn, w.ndim - 2)(w, mask)
+        qdt = resolve_quantize_spec(quantize_spec)
+        if qdt in QUANTIZED_DTYPES:
+            q, s = quantize_values(vals, qdt)
+            return cls(values=q, indices=idx, d_in=int(w.shape[-2]),
+                       scales=s, values_dtype=qdt)
+        if qdt is not None:  # plain storage-dtype cast (e.g. bf16)
+            vals = vals.astype(VALUES_DTYPES[qdt])
         return cls(values=vals, indices=idx, d_in=int(w.shape[-2]))
 
     def spec(self) -> FormatSpec:
@@ -625,9 +918,14 @@ class Condensed(SparseFormat):
         n = 1
         for s in self.values.shape[:-2]:
             n *= s
+        quantized = self.values_dtype in QUANTIZED_DTYPES
+        itemsize = (jnp.dtype(self.scales.dtype).itemsize
+                    if quantized and self.scales is not None
+                    else jnp.dtype(self.values.dtype).itemsize)
         return FormatSpec(d_in=self.d_in, d_out=d_out, n_replicas=n,
-                          itemsize=jnp.dtype(self.values.dtype).itemsize,
-                          k=k, max_active=d_out, active_fraction=1.0)
+                          itemsize=itemsize, k=k, max_active=d_out,
+                          active_fraction=1.0,
+                          values_dtype=self.values_dtype)
 
     @classmethod
     def estimate_cost(cls, spec, batch, profile):
@@ -638,19 +936,30 @@ class Condensed(SparseFormat):
 
     @classmethod
     def estimate_weight_bytes(cls, spec):
-        # values + int32 indices, n_out*k entries each
-        return spec.n_replicas * spec.d_out * spec.k * (spec.itemsize + 4)
+        # values at the real stored width + int32 indices (+ the f32 scales
+        # row when quantized)
+        return (cls.estimate_values_bytes(spec)
+                + spec.n_replicas * spec.d_out * spec.k * 4)
+
+    @classmethod
+    def estimate_values_bytes(cls, spec):
+        vb = spec.n_replicas * spec.d_out * spec.k * values_itemsize(spec)
+        if spec.values_dtype in QUANTIZED_DTYPES:
+            vb += spec.n_replicas * spec.d_out * 4  # per-neuron f32 scale
+        return vb
 
     def tuning_key(self, batch, *, backend=None):
         d_out, k = self.values.shape[-2:]
         return shape_tuning_key(
             self.d_in, d_out, k, batch, backend=backend,
-            itemsize=jnp.dtype(self.values.dtype).itemsize)
+            itemsize=jnp.dtype(self.values.dtype).itemsize,
+            values_dtype=self.values_dtype)
 
     @classmethod
     def spec_tuning_key(cls, spec, batch, *, backend=None):
         return shape_tuning_key(spec.d_in, spec.d_out, spec.k, batch,
-                                backend=backend, itemsize=spec.itemsize)
+                                backend=backend, itemsize=spec.itemsize,
+                                values_dtype=spec.values_dtype)
 
     @classmethod
     def abstract(cls, lead, d_in, d_out, k, dtype):
@@ -662,12 +971,20 @@ class Condensed(SparseFormat):
         stats = stats if stats is not None else _realized_stats(mask)
         k = max(stats.k, 1)
         shape = (*w.shape[:-2], w.shape[-1], k)
-        if (donate and self.values.shape == shape
-                and self.values.dtype == w.dtype):
-            vals, idx = _recondense_donated(w, mask, self.values,
-                                            self.indices, k=k)
-            return dataclasses.replace(self, values=vals, indices=idx)
-        return type(self).export_from_dense(w, mask, stats)
+        if donate and self.values.shape == shape:
+            if (self.values_dtype in QUANTIZED_DTYPES
+                    and self.scales is not None):
+                vals, idx, s = _recondense_quantized_donated(
+                    w, mask, self.values, self.indices, self.scales,
+                    k=k, qdt=self.values_dtype)
+                return dataclasses.replace(self, values=vals, indices=idx,
+                                           scales=s)
+            if self.values.dtype == w.dtype:
+                vals, idx = _recondense_donated(w, mask, self.values,
+                                                self.indices, k=k)
+                return dataclasses.replace(self, values=vals, indices=idx)
+        return type(self).export_from_dense(w, mask, stats,
+                                            quantize_spec=self.values_dtype)
 
     def refresh_values(self, w, mask, *, donate: bool = True):
         """Regather ``w * mask`` at the stored indices (topology unchanged).
@@ -676,14 +993,36 @@ class Condensed(SparseFormat):
         (dense_to_condensed's invariant), so they re-gather exact zeros.
         ``donate=True`` writes the new values into the OLD values buffer
         (see the donated-program block comment); indices are reused
-        verbatim either way.
+        verbatim either way. Quantized instances re-quantize in the same
+        donated program (fresh scales from the regathered rows).
         """
+        if self.values_dtype in QUANTIZED_DTYPES and self.scales is not None:
+            if donate:
+                vals, s = _revalue_quantized_donated(
+                    w, mask, self.values, self.scales, self.indices,
+                    qdt=self.values_dtype)
+            else:
+                vals, s = quantize_values(_gather_at_indices(w, mask,
+                                                             self.indices),
+                                          self.values_dtype)
+            return dataclasses.replace(self, values=vals, scales=s)
         if donate:
             vals = _revalue_donated(w, mask, self.values, self.indices)
         else:
             vals = _gather_at_indices(w, mask,
                                       self.indices).astype(self.values.dtype)
         return dataclasses.replace(self, values=vals)
+
+    def rebuild_missing(self, missing):
+        # a pre-quantization archive restored into a quantized template has
+        # no scales: re-derive them (and the quantized codes) from the
+        # restored float values
+        if "scales" in missing and self.values_dtype in QUANTIZED_DTYPES:
+            return self.restore_finalize()
+        return self
+
+    def restore_finalize(self):
+        return _finalize_quantized_restore(self)
 
 
 @_register
@@ -701,22 +1040,37 @@ class CondensedOverActive(SparseFormat):
     out_index: jax.Array                 # (lead..., a) int32
     d_in: int = 0
     d_out: int = 0                       # dense output width (scatter target)
+    scales: jax.Array | None = None      # (lead..., a) f32 when quantized
+    values_dtype: str | None = None      # canonical name when quantized
 
     format_name: typing.ClassVar[str] = "condensed_over_active"
     _array_fields: typing.ClassVar[tuple[str, ...]] = ("values", "indices",
-                                                       "out_index")
-    _static_fields: typing.ClassVar[tuple[str, ...]] = ("d_in", "d_out")
+                                                       "out_index", "scales")
+    _static_fields: typing.ClassVar[tuple[str, ...]] = ("d_in", "d_out",
+                                                        "values_dtype")
 
     def apply(self, x, w=None):
+        if self.scales is not None:
+            return ops.condensed_over_active_linear_nd(
+                x, self.values, self.indices, self.out_index, self.d_out,
+                scales=self.scales)
         return ops.condensed_over_active_linear_nd(
             x, self.values.astype(x.dtype), self.indices, self.out_index,
             self.d_out)
 
     @classmethod
-    def export_from_dense(cls, w, mask, stats=None):
+    def export_from_dense(cls, w, mask, stats=None, *, quantize_spec=None):
         stats = stats if stats is not None else _realized_stats(mask)
         vals, idx, oi = _condense_active_stack(w, mask, max(stats.k, 1),
                                                max(stats.max_active, 1))
+        qdt = resolve_quantize_spec(quantize_spec)
+        if qdt in QUANTIZED_DTYPES:
+            q, s = quantize_values(vals, qdt)
+            return cls(values=q, indices=idx, out_index=oi,
+                       d_in=int(w.shape[-2]), d_out=int(w.shape[-1]),
+                       scales=s, values_dtype=qdt)
+        if qdt is not None:
+            vals = vals.astype(VALUES_DTYPES[qdt])
         return cls(values=vals, indices=idx, out_index=oi,
                    d_in=int(w.shape[-2]), d_out=int(w.shape[-1]))
 
@@ -725,9 +1079,14 @@ class CondensedOverActive(SparseFormat):
         n = 1
         for s in self.values.shape[:-2]:
             n *= s
+        quantized = self.values_dtype in QUANTIZED_DTYPES
+        itemsize = (jnp.dtype(self.scales.dtype).itemsize
+                    if quantized and self.scales is not None
+                    else jnp.dtype(self.values.dtype).itemsize)
         return FormatSpec(d_in=self.d_in, d_out=self.d_out, n_replicas=n,
-                          itemsize=jnp.dtype(self.values.dtype).itemsize,
-                          k=k, max_active=a, active_fraction=a / max(self.d_out, 1))
+                          itemsize=itemsize, k=k, max_active=a,
+                          active_fraction=a / max(self.d_out, 1),
+                          values_dtype=self.values_dtype)
 
     @classmethod
     def estimate_cost(cls, spec, batch, profile):
@@ -742,16 +1101,24 @@ class CondensedOverActive(SparseFormat):
 
     @classmethod
     def estimate_weight_bytes(cls, spec):
-        # max_active rows of k*(values+idx) plus the 4-byte out_index per row
-        return spec.n_replicas * spec.max_active * (spec.k * (spec.itemsize + 4)
-                                                    + 4)
+        # max_active rows of k values (real stored width) + k int32 indices
+        # plus the 4-byte out_index (and f32 scale when quantized) per row
+        return (cls.estimate_values_bytes(spec)
+                + spec.n_replicas * spec.max_active * (spec.k * 4 + 4))
+
+    @classmethod
+    def estimate_values_bytes(cls, spec):
+        vb = spec.n_replicas * spec.max_active * spec.k * values_itemsize(spec)
+        if spec.values_dtype in QUANTIZED_DTYPES:
+            vb += spec.n_replicas * spec.max_active * 4
+        return vb
 
     def tuning_key(self, batch, *, backend=None):
         a, k = self.values.shape[-2:]
         return shape_tuning_key(
             self.d_in, a, k, batch, backend=backend,
             itemsize=jnp.dtype(self.values.dtype).itemsize, kind="coa",
-            scatter_width=self.d_out)
+            scatter_width=self.d_out, values_dtype=self.values_dtype)
 
     @classmethod
     def spec_tuning_key(cls, spec, batch, *, backend=None):
@@ -760,7 +1127,8 @@ class CondensedOverActive(SparseFormat):
         # both are part of its key (kind="coa")
         return shape_tuning_key(spec.d_in, spec.max_active, spec.k, batch,
                                 backend=backend, itemsize=spec.itemsize,
-                                kind="coa", scatter_width=spec.d_out)
+                                kind="coa", scatter_width=spec.d_out,
+                                values_dtype=spec.values_dtype)
 
     @classmethod
     def abstract(cls, lead, d_in, d_out, k, dtype):
@@ -776,18 +1144,38 @@ class CondensedOverActive(SparseFormat):
         stats = stats if stats is not None else _realized_stats(mask)
         k, a = max(stats.k, 1), max(stats.max_active, 1)
         shape = (*w.shape[:-2], a, k)
-        if (donate and self.values.shape == shape
-                and self.values.dtype == w.dtype):
-            vals, idx, oi = _recondense_active_donated(
-                w, mask, self.values, self.indices, self.out_index, k=k, a=a)
-            return dataclasses.replace(self, values=vals, indices=idx,
-                                       out_index=oi)
-        return type(self).export_from_dense(w, mask, stats)
+        if donate and self.values.shape == shape:
+            if (self.values_dtype in QUANTIZED_DTYPES
+                    and self.scales is not None):
+                vals, idx, oi, s = _recondense_active_quantized_donated(
+                    w, mask, self.values, self.indices, self.out_index,
+                    self.scales, k=k, a=a, qdt=self.values_dtype)
+                return dataclasses.replace(self, values=vals, indices=idx,
+                                           out_index=oi, scales=s)
+            if self.values.dtype == w.dtype:
+                vals, idx, oi = _recondense_active_donated(
+                    w, mask, self.values, self.indices, self.out_index,
+                    k=k, a=a)
+                return dataclasses.replace(self, values=vals, indices=idx,
+                                           out_index=oi)
+        return type(self).export_from_dense(w, mask, stats,
+                                            quantize_spec=self.values_dtype)
 
     def refresh_values(self, w, mask, *, donate: bool = True):
         """Values-only regather. Padding ROWS may re-gather garbage from a
         clipped column but are dropped by the out-of-range out_index at
-        scatter time, so the representation stays exact."""
+        scatter time, so the representation stays exact. Quantized instances
+        re-quantize (fresh scales) in the same donated program."""
+        if self.values_dtype in QUANTIZED_DTYPES and self.scales is not None:
+            if donate:
+                vals, s = _revalue_active_quantized_donated(
+                    w, mask, self.values, self.scales, self.indices,
+                    self.out_index, qdt=self.values_dtype)
+            else:
+                vals, s = quantize_values(
+                    _gather_at_indices(w, mask, self.indices, self.out_index),
+                    self.values_dtype)
+            return dataclasses.replace(self, values=vals, scales=s)
         if donate:
             vals = _revalue_active_donated(w, mask, self.values, self.indices,
                                            self.out_index)
@@ -795,6 +1183,14 @@ class CondensedOverActive(SparseFormat):
             vals = _gather_at_indices(w, mask, self.indices,
                                       self.out_index).astype(self.values.dtype)
         return dataclasses.replace(self, values=vals)
+
+    def rebuild_missing(self, missing):
+        if "scales" in missing and self.values_dtype in QUANTIZED_DTYPES:
+            return self.restore_finalize()
+        return self
+
+    def restore_finalize(self):
+        return _finalize_quantized_restore(self)
 
 
 FORMATS: dict[str, type[SparseFormat]] = {

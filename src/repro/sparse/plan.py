@@ -232,7 +232,8 @@ class StackDecision:
 def stack_costs(stack, *, batch_size: int, itemsize: int, k: int,
                 active_fraction: float,
                 profile: HardwareProfile = DEFAULT_PROFILE,
-                max_active_fraction: float | None = None) -> dict[str, float]:
+                max_active_fraction: float | None = None,
+                values_dtype: str | None = None) -> dict[str, float]:
     """Estimated seconds per serving step for each representation.
 
     Pricing lives with the formats themselves now: each representation's
@@ -243,6 +244,10 @@ def stack_costs(stack, *, batch_size: int, itemsize: int, k: int,
     condensed_over_active (the leaf carries max_active rows per replica,
     padding included; the mean ``active_fraction`` is the documented
     fallback and would under-price the path under uneven ablation).
+    ``values_dtype`` (a canonical name from ``formats.VALUES_DTYPES``) lets
+    each format price its REAL stored byte width — a quantized export
+    shrinks the HBM roofline term, which can move the masked/condensed
+    crossover batch.
     """
     b = max(int(batch_size), 1)
     act = min(max(active_fraction, 0.0), 1.0)
@@ -251,14 +256,16 @@ def stack_costs(stack, *, batch_size: int, itemsize: int, k: int,
     spec = F.FormatSpec(d_in=stack.d_in, d_out=stack.d_out,
                         n_replicas=stack.n_replicas, itemsize=itemsize,
                         k=max(k, 1), max_active=row_frac * stack.d_out,
-                        active_fraction=act)
+                        active_fraction=act,
+                        values_dtype=F.resolve_quantize_spec(values_dtype))
     return {name: cls.estimate_cost(spec, b, profile)
             for name, cls in F.FORMATS.items()}
 
 
 def select_representation(stack, *, batch_size: int, itemsize: int,
                           stats: COND.ExportStats,
-                          profile: HardwareProfile = DEFAULT_PROFILE) -> StackDecision:
+                          profile: HardwareProfile = DEFAULT_PROFILE,
+                          values_dtype: str | None = None) -> StackDecision:
     """Cost-model choice among EXACT representations for one stack.
 
     The always-exact candidates are masked, plain condensed, and — once
@@ -280,7 +287,8 @@ def select_representation(stack, *, batch_size: int, itemsize: int,
     costs = stack_costs(stack, batch_size=batch_size, itemsize=itemsize,
                         k=max(stats.k, 1),
                         active_fraction=stats.active_fraction, profile=profile,
-                        max_active_fraction=_max_active_fraction(stack, stats))
+                        max_active_fraction=_max_active_fraction(stack, stats),
+                        values_dtype=values_dtype)
     has_ablation = stats.active_fraction < 1.0 - _ABLATION_EPS
     cands = ("masked", "condensed")
     if has_ablation:
@@ -298,27 +306,40 @@ def _max_active_fraction(stack, stats: COND.ExportStats) -> float:
     return max(stats.max_active, 1) / max(stack.d_out, 1)
 
 
-def _build_leaf(rep: str, weight, mask, stats: COND.ExportStats) -> F.SparseFormat:
-    """Construct the format object for one stack (export_from_dense)."""
+def _build_leaf(rep: str, weight, mask, stats: COND.ExportStats,
+                values_dtype: str | None = None) -> F.SparseFormat:
+    """Construct the format object for one stack (export_from_dense).
+
+    ``values_dtype`` becomes the export's ``quantize_spec`` for the formats
+    that store values; masked-dense reads the live dense weights at
+    execution time and has nothing to quantize, so it ignores the request
+    (documented engine behavior: a quantized plan serves masked stacks at
+    the param dtype).
+    """
     try:
         cls = F.FORMATS[rep]
     except KeyError:
         raise ValueError(f"unknown representation {rep!r}") from None
+    if values_dtype is not None and rep != "masked":
+        return cls.export_from_dense(weight, mask, stats,
+                                     quantize_spec=values_dtype)
     return cls.export_from_dense(weight, mask, stats)
 
 
 def _decide(stack, path: str, *, batch_size: int, itemsize: int,
-            stats: COND.ExportStats, profile: HardwareProfile) -> StackDecision:
+            stats: COND.ExportStats, profile: HardwareProfile,
+            values_dtype: str | None = None) -> StackDecision:
     """One stack's decision: cost-model choice for "auto", forced otherwise.
     Shared by build_plan and Plan.refresh so the two can never diverge."""
     if path == "auto":
         return select_representation(stack, batch_size=batch_size,
                                      itemsize=itemsize, stats=stats,
-                                     profile=profile)
+                                     profile=profile, values_dtype=values_dtype)
     costs = stack_costs(stack, batch_size=batch_size, itemsize=itemsize,
                         k=max(stats.k, 1),
                         active_fraction=stats.active_fraction, profile=profile,
-                        max_active_fraction=_max_active_fraction(stack, stats))
+                        max_active_fraction=_max_active_fraction(stack, stats),
+                        values_dtype=values_dtype)
     return StackDecision(name=stack.name, representation=path, est_s=costs,
                          stats=stats)
 
@@ -348,6 +369,7 @@ class Plan:
     decisions: dict[str, StackDecision]
     serving_tree: dict
     mask_versions: dict[str, int]  # stack name -> version at last export
+    values_dtype: str | None = None  # canonical quantize spec (None = param dtype)
     export_calls: int = 0
     value_refreshes: int = 0       # cheap values-only regathers (no re-sort)
 
@@ -401,7 +423,8 @@ class Plan:
             for s in changed:
                 dec = _decide(s, self.path, batch_size=self.batch_size,
                               itemsize=itemsize, stats=stats[s.name],
-                              profile=self.profile)
+                              profile=self.profile,
+                              values_dtype=self.values_dtype)
                 old_rep = self.decisions[s.name].representation
                 old_leaf = REG.get_path(self.serving_tree, s.path)
                 weight = REG.get_path(params, s.path)
@@ -412,9 +435,10 @@ class Plan:
                     leaf = COND.recondense_stack_leaf(
                         weight, mask, stats[s.name], old_leaf,
                         over_active=(rep == "condensed_over_active"),
-                        donate=donate)
+                        donate=donate, quantize_spec=self.values_dtype)
                 else:
-                    leaf = _build_leaf(rep, weight, mask, stats[s.name])
+                    leaf = _build_leaf(rep, weight, mask, stats[s.name],
+                                       self.values_dtype)
                 self.decisions[s.name] = dec
                 REG.set_path(self.serving_tree, s.path, leaf)
                 self.mask_versions[s.name] = versions[s.name]
@@ -448,14 +472,15 @@ class Plan:
         masked_ref = serving = 0
         for s in self.registry:
             dec = self.decisions[s.name]
-            spec = F.spec_for_stack(s, dec.stats, itemsize)
+            spec = F.spec_for_stack(s, dec.stats, itemsize, self.values_dtype)
             serving += F.FORMATS[dec.representation].estimate_weight_bytes(spec)
             masked_ref += F.MaskedDense.estimate_weight_bytes(spec)
         return serving, masked_ref
 
     def describe(self) -> str:
+        vd = f" values_dtype={self.values_dtype}" if self.values_dtype else ""
         lines = [f"[plan] path={self.path} batch={self.batch_size} "
-                 f"profile={self.profile.name}"]
+                 f"profile={self.profile.name}{vd}"]
         for name, dec in self.decisions.items():
             est = dec.est_s[dec.representation]
             lines.append(
@@ -468,16 +493,25 @@ class Plan:
 def build_plan(cfg, registry, params: dict, masks: dict, *,
                batch_size: int = 1, path: str = "auto",
                mask_versions: dict | None = None,
-               profile: HardwareProfile = DEFAULT_PROFILE) -> Plan:
+               profile: HardwareProfile = DEFAULT_PROFILE,
+               values_dtype: str | None = None) -> Plan:
     """Build the per-stack execution plan for a request batch shape.
 
     ``path="auto"`` selects per stack by the cost model; a fixed path name
     forces that representation everywhere (the pre-plan ``--path`` behavior).
     ``mask_versions`` snapshots the trainer's counters so a later ``refresh``
     only re-exports stacks whose counter moved.
+
+    ``values_dtype`` (``"bf16"``/``"int8"``/``"fp8"``; None keeps the param
+    dtype) quantizes every value-storing leaf at export time and feeds the
+    real byte width into both the cost model and ``weight_bytes`` pricing.
+    The choice is part of the PLAN, not the per-request key: ``refresh``
+    re-exports under the same spec, so a live job never silently changes
+    serving precision.
     """
     if path not in PATHS:
         raise ValueError(f"unknown serving path {path!r}; expected one of {PATHS}")
+    vd = F.resolve_quantize_spec(values_dtype)
     registry = list(registry or [])
     versions = (_host_versions(mask_versions) if mask_versions is not None
                 else {s.name: 0 for s in registry})
@@ -489,17 +523,18 @@ def build_plan(cfg, registry, params: dict, masks: dict, *,
     calls = 0
     for s in registry:
         dec = _decide(s, path, batch_size=batch_size, itemsize=itemsize,
-                      stats=stats[s.name], profile=profile)
+                      stats=stats[s.name], profile=profile, values_dtype=vd)
         decisions[s.name] = dec
         REG.set_path(tree, s.path,
                      _build_leaf(dec.representation,
                                  REG.get_path(params, s.path),
-                                 REG.get_path(masks, s.path), stats[s.name]))
+                                 REG.get_path(masks, s.path), stats[s.name],
+                                 vd))
         calls += 1
     return Plan(cfg=cfg, registry=registry, path=path, batch_size=batch_size,
                 profile=profile, decisions=decisions, serving_tree=tree,
                 mask_versions={s.name: versions.get(s.name, 0) for s in registry},
-                export_calls=calls)
+                values_dtype=vd, export_calls=calls)
 
 
 # ---------------------------------------------------------------------------

@@ -12,6 +12,7 @@ here is the degenerate case; see DESIGN.md §4.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import shutil
@@ -125,13 +126,34 @@ def restore(ckpt_dir: str, step: int, template):
                     return build(leaf, prefix)
                 if key not in data:
                     missing.add(name)
+                    return build(leaf, prefix + (name,))
+                # quantized<->float template/archive mismatches must keep
+                # the ARCHIVE's dtype: a blind astype would truncate f32
+                # codes into int8 garbage (or reinterpret int8 codes as
+                # floats). restore_finalize re-/de-quantizes exactly below.
+                if _formats().is_quantized_storage(data[key].dtype) \
+                        != _formats().is_quantized_storage(leaf.dtype):
+                    return jax.numpy.asarray(data[key])
                 return build(leaf, prefix + (name,))
             rebuilt = tree.map_arrays_with_names(_build_field)
+            # optional fields the TEMPLATE does not carry (e.g. a float
+            # template restoring a quantized archive's scales) are adopted
+            # from the archive so restore_finalize can dequantize
+            extra = {name: jax.numpy.asarray(data["/".join(prefix + (name,))])
+                     for name in tree._array_fields
+                     if getattr(tree, name) is None
+                     and "/".join(prefix + (name,)) in data}
+            if extra:
+                rebuilt = dataclasses.replace(rebuilt, **extra)
             # fields the archive predates (e.g. StructuredFanIn.active_index)
             # are re-derived from the restored arrays instead of keeping the
-            # template's values, so the format stays internally consistent
-            return (rebuilt.rebuild_missing(frozenset(missing)) if missing
-                    else rebuilt)
+            # template's values, so the format stays internally consistent;
+            # restore_finalize then reconciles values/scales storage dtypes
+            # against the template's declared values_dtype (quantize a float
+            # archive into a quantized template, dequantize the reverse)
+            if missing:
+                rebuilt = rebuilt.rebuild_missing(frozenset(missing))
+            return rebuilt.restore_finalize()
         if isinstance(tree, (list, tuple)):
             return type(tree)(build(v, prefix + (f"#{i}",)) for i, v in enumerate(tree))
         key = "/".join(prefix)
