@@ -74,7 +74,12 @@ from repro.sparse import registry as REG
 # engine plus the values-stream byte ratio both PRICED
 # (formats.Condensed.estimate_values_bytes) and MEASURED (device array
 # nbytes of the exported values+scales).
-SCHEMA_VERSION = 5
+# v6: kind="tp_crossover" rows — the collective-priced cost model's
+# PREDICTED batch where a tensor-parallel sharded condensed stack stops
+# beating the replicated path (plan.tp_crossover_batch, at the arch's FULL
+# production dims so the prediction is about real stacks, not the smoke
+# model). Pure cost-model arithmetic: measured timings stay single-device.
+SCHEMA_VERSION = 6
 
 BATCHES = (1, 32, 256)
 ABLATIONS = (0.0, 0.5)
@@ -290,6 +295,50 @@ def _quantized_rows(cfg, reg, params, masks, batches, *, profile, warmup,
     return rows
 
 
+def run_tp_crossover(arch: str = "qwen3-1.7b", *, tp: int = 4,
+                     profile: PLAN.HardwareProfile = PLAN.DEFAULT_PROFILE,
+                     results: list | None = None):
+    """Predicted TP-vs-replicated crossover batch per sparse stack (v6).
+
+    Pure cost-model rows: for each sparse stack at the arch's FULL production
+    dims, ``plan.tp_crossover_batch`` doubles the batch until the collective-
+    priced sharded estimate (shard-local gather + per-layer all-gather over
+    the interconnect) loses to the best replicated path. ``crossover=1``
+    means the collective outweighs the sharding win even at decode batch 1
+    (the stack should stay replicated on a TP mesh); ``crossover=None``
+    means sharding wins through the whole swept range. No mesh, no timing —
+    this is the decision surface ``--path auto`` serves under TP, recorded
+    so pricing drift across PRs is visible in the trajectory artifact.
+    """
+    from repro.core import distributions as D
+    cfg = configs.get_config(arch)           # full dims, not the smoke model
+    reg = REG.build_registry(cfg)
+    itemsize = jnp.dtype(cfg.param_dtype).itemsize
+    rows = []
+    for s in reg:
+        if s.d_out % tp:
+            continue
+        k = D.fan_in_from_density(s.d_in, s.density)
+        stats = F.ExportStats(k=k, max_active=s.d_out, active_fraction=1.0,
+                              min_fan_in=k)
+        cross = PLAN.tp_crossover_batch(s, itemsize=itemsize, stats=stats,
+                                        tp=tp, profile=profile)
+        rows.append((f"serve_paths/tp_crossover/{s.name}/tp{tp}", 0.0,
+                     f"crossover_batch={cross};k={k};d_out={s.d_out}"))
+        if results is not None:
+            results.append({
+                "arch": arch, "path": "auto", "kind": "tp_crossover",
+                "stack": s.name, "tp": tp,
+                "d_in": s.d_in, "d_out": s.d_out, "k": k,
+                # first batch where the replicated path wins; None = sharded
+                # condensed wins through the whole swept range
+                "crossover_batch": cross,
+                "profile": profile.name,
+                "ici_bytes_per_s": profile.ici_bytes_per_s,
+            })
+    return rows
+
+
 def run_scheduler(arch: str = "qwen3-1.7b", *, n_requests: int = 24,
                   rate: float = 4.0, req_batch: int = 2, gen_len: int = 16,
                   gen_chunk: int = 8, reps: int = REPS, seed: int = 0,
@@ -433,6 +482,9 @@ def main(argv=None):
                     help="Poisson-trace length for the scheduler SLA rows")
     ap.add_argument("--trace-rate", type=float, default=4.0,
                     help="Poisson arrival rate (requests/s)")
+    ap.add_argument("--tp", type=int, default=4,
+                    help="shard count for the predicted TP-vs-replicated "
+                         "crossover rows (cost-model only, no mesh needed)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: small grid, one rep, short trace "
                          "(same artifact contract as the full run)")
@@ -457,6 +509,8 @@ def main(argv=None):
     rows += run_scheduler(arch=args.arch, n_requests=trace_n,
                           rate=args.trace_rate, gen_len=gen_len,
                           reps=args.reps, results=results)
+    rows += run_tp_crossover(arch=args.arch, tp=args.tp, profile=profile,
+                             results=results)
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     if args.out:

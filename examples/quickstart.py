@@ -270,6 +270,51 @@ def main():
           f"greedy token agreement vs f32: {agree:.2%}")
     print(f"quantized decode: int8 stream: {toks['int8'][0].tolist()}")
 
+    # 11. tensor-parallel serving: constant fan-in means the condensed
+    #     neuron axis partitions EXACTLY over a 'model' mesh axis — each
+    #     shard holds n/tp neuron rows with locally rebased indices, the
+    #     gather is shard-local (x stays replicated), and GSPMD inserts
+    #     exactly ONE all-gather per sparse layer to rebuild the output.
+    #     Whether that collective is worth paying is a COST-MODEL decision,
+    #     not a flag: stack_costs(tp=...) adds collective-priced
+    #     "<rep>@tpN" candidates (profile.ici_bytes_per_s prices the
+    #     all-gather) and --path auto picks per stack. Below: the priced
+    #     decision surface in-process, then the serve_tp DRYRUN as a
+    #     subprocess (it forces 512 simulated host devices via XLA_FLAGS
+    #     before importing jax, which this process — already running jax on
+    #     the real device set — must not do): it lowers sharded prefill +
+    #     paged decode on a simulated 4-way model mesh and ASSERTS the SPMD
+    #     invariants from the lowered HLO (per-stack isolated apply: 1
+    #     all-gather, 0 stray collectives, shard-local (n/tp, k) gathers),
+    #     printing per-shard condensed bytes and full-program collective
+    #     counts. (CLI, real multi-device host: repro.launch.serve --tp N.)
+    stack11 = types.SimpleNamespace(name="mlp@tp", d_in=2048, d_out=2048,
+                                    n_replicas=1)
+    stats11 = F.ExportStats(k=205, max_active=2048, active_fraction=1.0,
+                            min_fan_in=205)
+    for bb in (1, 512):
+        dec = PLAN.select_representation(stack11, batch_size=bb, itemsize=4,
+                                         stats=stats11, tp=4)
+        print(f"tp auto @ b={bb}: -> {dec.cost_key} "
+              f"(sharded gather vs per-layer all-gather, priced at "
+              f"{PLAN.DEFAULT_PROFILE.ici_bytes_per_s / 1e9:.0f} GB/s ICI)")
+    cross = PLAN.tp_crossover_batch(stack11, itemsize=4, stats=stats11, tp=4)
+    print(f"tp auto: predicted shard->replicate crossover batch: {cross} "
+          f"(benchmarks/serve_paths.py records this per arch, schema v6)")
+    import subprocess
+    import sys
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen3-1.7b",
+         "--shapes", "decode_32k", "--program", "serve_tp", "--tp", "4",
+         "--smoke"],
+        capture_output=True, text=True)
+    for line in proc.stdout.splitlines():
+        if "[serve_tp]" in line or "cells compiled" in line:
+            print(f"dryrun| {line}")
+    if proc.returncode:
+        print(proc.stdout[-2000:], proc.stderr[-2000:])
+        raise SystemExit("serve_tp dryrun failed")
+
 
 if __name__ == "__main__":
     main()

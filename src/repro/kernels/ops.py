@@ -302,6 +302,146 @@ def structured_linear_nd(x: jax.Array, w: jax.Array,
     return y.reshape(*lead, w.shape[-1])
 
 
+# ---------------------------------------------------------------------------
+# tensor-parallel (shard-blocked) execution paths
+#
+# The TP exports in repro.sparse.formats reorganize each format's arrays into
+# ``tp`` contiguous blocks along the neuron axis (global shapes unchanged;
+# out_index / active_index locally rebased per block). These wrappers execute
+# that layout as a ``jax.vmap`` over the block axis in plain jnp: under GSPMD
+# with the block axis sharded over the 'model' mesh axis, every gather /
+# matmul / scatter below is shard-local (the activation ``x`` stays
+# replicated, so the stored indices are valid on every shard), and the single
+# cross-device exchange is the all-gather XLA inserts when the (tp, B, wloc)
+# partial outputs are reassembled into the replicated (B, d_out) activation.
+# On one device the vmap formulation is just a reshape — bit-identical math —
+# which is what makes the sharded stack testable on a simulated mesh.
+#
+# Pure jnp rather than Pallas: pallas_call is opaque to GSPMD propagation, so
+# a sharded Pallas dispatch would need shard_map plumbing through every apply
+# call site; the jnp formulation partitions for free and the per-shard shapes
+# stay available to the autotune cache keys (formats.tuning_key shrinks by
+# 1/tp) for a later shard_map'd kernel. Inference-only: no custom VJPs.
+# ---------------------------------------------------------------------------
+
+
+def condensed_linear_tp_nd(x: jax.Array, values: jax.Array,
+                           indices: jax.Array, tp: int, *,
+                           scales: jax.Array | None = None) -> jax.Array:
+    """Condensed gather over ``tp`` contiguous neuron blocks.
+
+    values/indices: (n, k) with ``n = tp * (n // tp)`` rows grouped by block
+    (the plain condensed layout already is — contiguous rows partition).
+    ``scales``: optional (n,) per-neuron dequant scales (quantized storage).
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    n, k = values.shape
+    npt = n // tp
+    v = values.reshape(tp, npt, k)
+    i = indices.reshape(tp, npt, k)
+
+    def shard(v_s, i_s):
+        g = jnp.take(x2, i_s, axis=1)                    # (B, npt, k) local
+        return jnp.sum(g * v_s[None].astype(x2.dtype), axis=-1)
+
+    y = jax.vmap(shard)(v, i)                            # (tp, B, npt)
+    if scales is not None:
+        y = y * scales.reshape(tp, 1, npt).astype(y.dtype)
+    return jnp.moveaxis(y, 0, 1).reshape(x2.shape[0], n).reshape(*lead, n)
+
+
+def condensed_over_active_linear_tp_nd(
+        x: jax.Array, values: jax.Array, indices: jax.Array,
+        out_index: jax.Array, d_out: int, tp: int, *,
+        scales: jax.Array | None = None) -> jax.Array:
+    """Condensed-over-active gather + LOCAL scatter over ``tp`` blocks.
+
+    values/indices: (tp * a_tp, k) surviving-row arrays grouped by block;
+    ``out_index``: (tp * a_tp,) int32 LOCALLY REBASED scatter positions in
+    ``[0, d_out // tp)`` with the per-shard sentinel ``d_out // tp`` marking
+    padding rows (dropped by the local scatter).
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    a, k = values.shape
+    a_tp = a // tp
+    wloc = d_out // tp
+    v = values.reshape(tp, a_tp, k)
+    i = indices.reshape(tp, a_tp, k)
+    oi = out_index.reshape(tp, a_tp)
+    s = scales.reshape(tp, a_tp) if scales is not None else None
+
+    def shard(v_s, i_s, oi_s, s_s):
+        g = jnp.take(x2, i_s, axis=1)                    # (B, a_tp, k) local
+        y_act = jnp.sum(g * v_s[None].astype(x2.dtype), axis=-1)
+        if s_s is not None:
+            y_act = y_act * s_s[None].astype(y_act.dtype)
+        y_s = jnp.zeros((x2.shape[0], wloc), y_act.dtype)
+        return y_s.at[:, oi_s].add(y_act, mode="drop")   # local positions
+
+    if s is None:
+        y = jax.vmap(lambda v_s, i_s, oi_s: shard(v_s, i_s, oi_s, None))(
+            v, i, oi)
+    else:
+        y = jax.vmap(shard)(v, i, oi, s)
+    return (jnp.moveaxis(y, 0, 1).reshape(x2.shape[0], d_out)
+            .reshape(*lead, d_out))
+
+
+def structured_linear_tp_nd(x: jax.Array, w: jax.Array,
+                            active_index: jax.Array, tp: int) -> jax.Array:
+    """Column-gathered structured matmul over ``tp`` output blocks.
+
+    ``w``: the live dense (d_in, d_out) weight (its out dim shards over
+    'model' under the standard column-parallel rules, so the block reshape
+    keeps the gather shard-local); ``active_index``: (tp * a_tp,) int32
+    LOCALLY REBASED surviving-column ids, sentinel ``d_out // tp``.
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    d_in, d_out = w.shape
+    wloc = d_out // tp
+    a_tp = active_index.shape[0] // tp
+    wb = jnp.moveaxis(w.reshape(d_in, tp, wloc), 1, 0)   # (tp, d_in, wloc)
+    ai = active_index.reshape(tp, a_tp)
+
+    def shard(w_s, ai_s):
+        cols = jnp.take(w_s, jnp.minimum(ai_s, wloc - 1), axis=1)
+        cols = jnp.where((ai_s < wloc)[None, :], cols, 0).astype(x2.dtype)
+        y_act = x2 @ cols                                # (B, a_tp)
+        y_s = jnp.zeros((x2.shape[0], wloc), y_act.dtype)
+        return y_s.at[:, ai_s].add(y_act, mode="drop")
+
+    y = jax.vmap(shard)(wb, ai)                          # (tp, B, wloc)
+    return (jnp.moveaxis(y, 0, 1).reshape(x2.shape[0], d_out)
+            .reshape(*lead, d_out))
+
+
+def structured_gathered_linear_tp_nd(x: jax.Array, panel: jax.Array,
+                                     active_index: jax.Array, d_out: int,
+                                     tp: int) -> jax.Array:
+    """Pre-gathered structured matmul over ``tp`` blocks (quantized
+    StructuredFanIn storage: the (d_in, tp * a_tp) panel's columns are
+    grouped by block; ``active_index`` locally rebased as above)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    d_in = panel.shape[0]
+    wloc = d_out // tp
+    a_tp = active_index.shape[0] // tp
+    pb = jnp.moveaxis(panel.reshape(d_in, tp, a_tp), 1, 0)  # (tp, d_in, a_tp)
+    ai = active_index.reshape(tp, a_tp)
+
+    def shard(p_s, ai_s):
+        y_act = x2 @ p_s.astype(x2.dtype)                # (B, a_tp)
+        y_s = jnp.zeros((x2.shape[0], wloc), y_act.dtype)
+        return y_s.at[:, ai_s].add(y_act, mode="drop")
+
+    y = jax.vmap(shard)(pb, ai)                          # (tp, B, wloc)
+    return (jnp.moveaxis(y, 0, 1).reshape(x2.shape[0], d_out)
+            .reshape(*lead, d_out))
+
+
 def structured_gathered_linear_nd(x: jax.Array, panel: jax.Array,
                                   active_index: jax.Array, d_out: int, *,
                                   values_dtype: str | None = None,

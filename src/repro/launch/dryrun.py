@@ -269,8 +269,206 @@ def lower_serve(cfg, shape, mesh):
         return jitted.lower(params_sds, masks_sds, batch_sds, cache_sds)
 
 
+def tp_mesh(tp: int = 4):
+    """Simulated (data=1, model=tp) mesh over the forced host devices — the
+    smallest mesh that exercises the tensor-parallel serving path."""
+    return compat.make_mesh((1, int(tp)), ("data", "model"))
+
+
+def _gather_ok(shapes, nloc: int, k: int, d_out: int) -> bool:
+    """True iff some gather is shard-local ``(..., nloc, k)`` and none is the
+    replicated global ``(..., d_out, k)`` sparse gather."""
+    local = any(g[-2:] == (nloc, k) for g in shapes if len(g) >= 2)
+    global_ = any(g[-2:] == (d_out, k) for g in shapes if len(g) >= 2)
+    return local and (nloc == d_out or not global_)
+
+
+def run_tp_cell(arch: str, shape_name: str, tp: int = 4, quiet: bool = False,
+                cfg=None, smoke: bool = False) -> dict:
+    """Tensor-parallel serving cell: lower the sharded PREFILL and the paged
+    DECODE abstractly on a simulated (data=1, model=tp) mesh, and assert the
+    SPMD invariants from the partitioned HLO:
+
+      1. per sparse stack (isolated apply program, condensed leaves in their
+         tp-block layout): EXACTLY ONE all-gather — the output-partial
+         collective the cost model prices — and no other collective;
+      2. every condensed gather in that program is shard-local: trailing
+         dims ``(d_out/tp, k)``, never the replicated ``(d_out, k)``;
+      3. the full prefill + paged-decode programs compile with the sharded
+         serving tree, their gathers are shard-local for every divisible
+         stack, and no global-shape sparse gather survives partitioning.
+
+    These are BLOCKING checks (AssertionError fails the cell); the recorded
+    timings/byte counts are trend data only. ``smoke`` swaps in the arch's
+    smoke config and a small decode shape so CI can run the cell in seconds.
+    """
+    import dataclasses as DC
+
+    from repro.compat import NamedSharding
+    from repro.compat import PartitionSpec as P
+    from repro.core import distributions as D
+    from repro.models import paged as PG
+    from repro.sparse import formats as F
+    from repro.sparse import plan as PLAN
+
+    cfg = cfg or (configs.get_smoke_config(arch) if smoke
+                  else configs.get_config(arch))
+    shape = configs.SHAPES[shape_name]
+    if smoke:
+        shape = DC.replace(shape, seq_len=min(shape.seq_len, 256),
+                           global_batch=min(shape.global_batch, 8))
+    if shape.kind != "decode":
+        raise ValueError(f"serve_tp runs decode shapes; got {shape_name!r} "
+                         f"({shape.kind})")
+    mesh = tp_mesh(tp)
+    rules = ShardingRules(cfg, mesh)
+    registry = REG.build_registry(cfg)
+    if not registry:
+        raise ValueError(f"{cfg.name}: no sparse stacks to shard")
+    dt = jnp.dtype(cfg.param_dtype)
+    bsz = shape.global_batch
+
+    # -- invariant 1+2: isolated per-stack apply programs -------------------
+    per_stack = {}
+    tp_stacks = [s for s in registry if s.d_out % tp == 0]
+    for s in tp_stacks:
+        k = D.fan_in_from_density(s.d_in, s.density)
+        leaf = F.Condensed.abstract((), s.d_in, s.d_out, k, dt, tp=tp)
+        tree: dict = {}
+        REG.set_path(tree, s.path, leaf)
+        x_sds = jax.ShapeDtypeStruct((bsz, s.d_in), dt)
+
+        def apply_fn(tree, x, _path=s.path):
+            return REG.get_path(tree, _path).apply(x)
+
+        jitted = jax.jit(apply_fn,
+                         in_shardings=(rules.masks(tree),
+                                       NamedSharding(mesh, P())),
+                         out_shardings=NamedSharding(mesh, P()))
+        with compat.use_mesh(mesh):
+            hlo = jitted.lower(tree, x_sds).compile().as_text()
+        pc = HLO.analyze(hlo)
+        others = {c: n for c, n in pc.count_by_type.items()
+                  if n and c != "all-gather"}
+        gshapes = HLO.instruction_shapes(hlo, "gather")
+        nloc = s.d_out // tp
+        assert pc.count_by_type["all-gather"] == 1, (
+            f"{s.name}: expected exactly ONE all-gather for the sharded "
+            f"apply, got {pc.count_by_type}")
+        assert not others, f"{s.name}: unexpected collectives {others}"
+        assert _gather_ok(gshapes, nloc, k, s.d_out), (
+            f"{s.name}: gathers {gshapes} are not shard-local "
+            f"(want trailing ({nloc}, {k}), forbid ({s.d_out}, {k}))")
+        per_stack[s.name] = {
+            "all_gather": 1, "gathers": [list(g) for g in gshapes],
+            "nloc": nloc, "k": k,
+            "allgather_bytes": pc.bytes_by_type["all-gather"]}
+    skipped = [s.name for s in registry if s.d_out % tp != 0]
+
+    # -- invariant 3: full sharded prefill + paged decode -------------------
+    reps = {s.name: "condensed" for s in registry}
+    k_fan = REG.k_fan_map(cfg, registry)
+    params_sds = _abstract(lambda key: M.init_params(cfg, key, k_fan),
+                           jax.random.PRNGKey(0))
+    cond_sds = PLAN.abstract_serving_tree(cfg, registry, reps, tp=tp)
+    p_sh = rules.params(params_sds)
+    m_sh = rules.masks(cond_sds)
+
+    def check_full(name, hlo):
+        gshapes = HLO.instruction_shapes(hlo, "gather")
+        for s in tp_stacks:
+            k = D.fan_in_from_density(s.d_in, s.density)
+            assert _gather_ok(gshapes, s.d_out // tp, k, s.d_out), (
+                f"{name}/{s.name}: sparse gathers not shard-local in the "
+                f"full program: {sorted(set(gshapes))}")
+        return HLO.analyze(hlo)
+
+    timings = {}
+    # prefill at the full prompt length
+    pre_shape = DC.replace(shape, kind="prefill")
+    pre_batch_sds = make_batch_spec(cfg, pre_shape)
+    cache_sds = _abstract(lambda: M.init_cache(cfg, bsz, shape.seq_len))
+    c_sh = rules.cache(cache_sds, global_batch=bsz)
+    b_sh = rules.batch(pre_batch_sds, shape=pre_shape)
+    t0 = time.time()
+    jitted = jax.jit(lambda p, c, b, kv: M.prefill_step(cfg, p, c, b, kv),
+                     in_shardings=(p_sh, m_sh, b_sh, c_sh),
+                     out_shardings=(None, c_sh), donate_argnums=(3,))
+    with compat.use_mesh(mesh):
+        pre_hlo = jitted.lower(params_sds, cond_sds, pre_batch_sds,
+                               cache_sds).compile().as_text()
+    timings["prefill_s"] = round(time.time() - t0, 1)
+    pre_pc = check_full("prefill", pre_hlo)
+
+    # paged decode step (the continuous-batching program)
+    if M.supports_paged(cfg):
+        bs_blk = 16
+        nb = PG.pages_for(shape.seq_len + bs_blk, bs_blk)
+        pool_sds = _abstract(lambda: M.init_paged_pool(cfg, bsz * nb, bs_blk))
+        table_sds = jax.ShapeDtypeStruct((bsz, nb), jnp.int32)
+        len_sds = jax.ShapeDtypeStruct((bsz,), jnp.int32)
+        dec_batch_sds = make_batch_spec(cfg, shape)
+        pc_sh = rules.cache(pool_sds, global_batch=bsz)
+        db_sh = rules.batch(dec_batch_sds, shape=shape)
+        bax = rules.batch_axes(bsz)
+        t_sh = NamedSharding(mesh, P(bax or None, None))
+        l_sh = NamedSharding(mesh, P(bax or None))
+        t0 = time.time()
+        jitted = jax.jit(
+            lambda p, c, b, pool, tb, ln: M.paged_decode_step(
+                cfg, p, c, b, pool, tb, ln),
+            in_shardings=(p_sh, m_sh, db_sh, pc_sh, t_sh, l_sh),
+            out_shardings=(None, pc_sh), donate_argnums=(3,))
+        with compat.use_mesh(mesh):
+            dec_hlo = jitted.lower(params_sds, cond_sds, dec_batch_sds,
+                                   pool_sds, table_sds,
+                                   len_sds).compile().as_text()
+        timings["decode_s"] = round(time.time() - t0, 1)
+        dec_pc = check_full("paged_decode", dec_hlo)
+    else:
+        dec_pc = None
+
+    # per-shard serving bytes: each device streams 1/tp of the values+indices
+    itemsize = dt.itemsize
+    shard_bytes = sum(
+        F.Condensed.estimate_weight_bytes(F.SparseFormat.shard_spec(
+            F.FormatSpec(d_in=s.d_in, d_out=s.d_out, n_replicas=s.n_replicas,
+                         itemsize=itemsize,
+                         k=D.fan_in_from_density(s.d_in, s.density),
+                         max_active=s.d_out, active_fraction=1.0), tp))
+        for s in tp_stacks)
+
+    result = {
+        "arch": arch, "shape": shape_name, "program": "serve_tp", "tp": tp,
+        "mesh": f"1x{tp}", "smoke": smoke,
+        "per_stack": per_stack, "skipped_stacks": skipped,
+        "per_shard_values_bytes": shard_bytes,
+        "prefill_collectives": pre_pc.count_by_type,
+        "decode_collectives": dec_pc.count_by_type if dec_pc else None,
+        **timings,
+    }
+    if not quiet:
+        print(f"--- {arch} x {shape_name} x serve_tp (model={tp}) ---")
+        for name, row in per_stack.items():
+            print(f"[serve_tp] {name:24s} all-gather x1, gathers "
+                  f"{row['gathers']} (nloc={row['nloc']}, k={row['k']})")
+        if skipped:
+            print(f"[serve_tp] replicated (d_out % {tp} != 0): {skipped}")
+        print(f"[serve_tp] per-shard condensed bytes: {shard_bytes} "
+              f"({shard_bytes / 2**10:.1f} KiB/device)")
+        print("[serve_tp] prefill collectives:",
+              {c: n for c, n in pre_pc.count_by_type.items() if n})
+        if dec_pc:
+            print("[serve_tp] paged-decode collectives:",
+                  {c: n for c, n in dec_pc.count_by_type.items() if n})
+        print(f"[serve_tp] SPMD invariants OK for {len(per_stack)} stacks")
+    return result
+
+
 def run_cell(arch: str, shape_name: str, multi_pod: bool, quiet: bool = False,
              program: str = "auto", cfg=None) -> dict:
+    if program == "serve_tp":
+        return run_tp_cell(arch, shape_name, quiet=quiet, cfg=cfg)
     cfg = cfg or configs.get_config(arch)
     shape = configs.SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -339,6 +537,15 @@ def main(argv=None):
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--out", default="")
     ap.add_argument("--dst", action="store_true", help="also compile the topology-update program for train cells")
+    ap.add_argument("--program", default="auto",
+                    help="program to lower (auto/train/serve/serve_cond/"
+                         "serve_struct/serve_plan/serve_engine/serve_paged/"
+                         "serve_tp)")
+    ap.add_argument("--tp", type=int, default=4,
+                    help="model-axis size for --program serve_tp")
+    ap.add_argument("--smoke", action="store_true",
+                    help="serve_tp only: smoke config + tiny decode shape "
+                         "(CI-sized; invariants still blocking)")
     args = ap.parse_args(argv)
 
     archs = list(configs.ALL_ARCHS) if args.arch == "all" else [args.arch]
@@ -348,13 +555,21 @@ def main(argv=None):
         cells = configs.shapes_for(arch, cfg.family, cfg.causal)
         if args.shapes:
             cells = [s for s in cells if s.name in args.shapes.split(",")]
+        if args.program == "serve_tp":
+            cells = [s for s in cells if s.kind == "decode"]
         for shape in cells:
             meshes = [False, True] if args.both_meshes else [args.multi_pod]
-            programs = ["auto"] + (["dst"] if shape.kind == "train" and args.dst else [])
+            programs = ([args.program] if args.program != "auto" else
+                        ["auto"] + (["dst"] if shape.kind == "train"
+                                    and args.dst else []))
             for mp in meshes:
                 for prog in programs:
                     try:
-                        r = run_cell(arch, shape.name, mp, program=prog)
+                        if prog == "serve_tp":
+                            r = run_tp_cell(arch, shape.name, tp=args.tp,
+                                            smoke=args.smoke)
+                        else:
+                            r = run_cell(arch, shape.name, mp, program=prog)
                         results.append(r)
                     except Exception as e:  # noqa: BLE001 — report, continue sweep
                         traceback.print_exc()

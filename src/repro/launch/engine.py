@@ -223,14 +223,19 @@ class PlanKey:
     tuned Pallas blocks come from the same calibration point).
     ``formats`` — the per-stack format signature the cost model picks at
     that bucket (registry order); a fixed ``path`` forces it uniform.
+    ``tp`` — the mesh's model-axis size the group's plan shards over (1 on
+    a single device / data-only mesh); part of the key because a sharded
+    and a replicated plan of the same bucket compile different programs.
     """
     batch_bucket: int
     formats: tuple[tuple[str, str], ...]
+    tp: int = 1
 
     def describe(self) -> str:
         reps = {r for _, r in self.formats}
         rep = reps.pop() if len(reps) == 1 else "mixed"
-        return f"b<={self.batch_bucket}/{rep}"
+        tp_s = f"/tp{self.tp}" if self.tp > 1 else ""
+        return f"b<={self.batch_bucket}/{rep}{tp_s}"
 
 
 @dataclasses.dataclass
@@ -550,7 +555,8 @@ class ServingEngine:
                  block_size: int = 16,
                  gen_chunk: int = 16,
                  warm: bool = True,
-                 values_dtype: str | None = None):
+                 values_dtype: str | None = None,
+                 mesh=None):
         if path not in PLAN.PATHS:
             raise ValueError(
                 f"unknown serving path {path!r}; expected one of {PLAN.PATHS}")
@@ -576,6 +582,13 @@ class ServingEngine:
         self.gen_chunk = int(gen_chunk)
         self.warm = bool(warm)
         self.values_dtype = F.resolve_quantize_spec(values_dtype)
+        # tensor parallelism: a mesh with a model axis shards every plan's
+        # condensed-family leaves over it (per-stack, collective-priced —
+        # see plan.build_plan); no mesh or a size-1 model axis is the
+        # single-device engine unchanged
+        self.mesh = mesh
+        self.tp = (int(mesh.shape["model"])
+                   if mesh is not None and "model" in mesh.axis_names else 1)
         self._mask_versions = mask_versions
         self._itemsize = jnp.dtype(cfg.param_dtype).itemsize
         self._stats: dict | None = None     # realized stats, computed once
@@ -599,15 +612,15 @@ class ServingEngine:
         bucket = AT.batch_bucket(max(int(batch_size), 1))
         if self.path != "auto":
             sig = tuple((s.name, self.path) for s in self.registry)
-            return PlanKey(batch_bucket=bucket, formats=sig)
+            return PlanKey(batch_bucket=bucket, formats=sig, tp=self.tp)
         stats = self.stats()
         sig = tuple(
             (s.name, PLAN.select_representation(
                 s, batch_size=bucket, itemsize=self._itemsize,
                 stats=stats[s.name], profile=self.profile,
-                values_dtype=self.values_dtype).representation)
+                values_dtype=self.values_dtype, tp=self.tp).representation)
             for s in self.registry)
-        return PlanKey(batch_bucket=bucket, formats=sig)
+        return PlanKey(batch_bucket=bucket, formats=sig, tp=self.tp)
 
     def plan_for(self, key: PlanKey) -> PLAN.Plan:
         """The (lazily built, cached) execution plan serving ``key``."""
@@ -617,7 +630,7 @@ class ServingEngine:
                 self.cfg, self.registry, self.params, self.masks,
                 batch_size=key.batch_bucket, path=self.path,
                 mask_versions=self._mask_versions, profile=self.profile,
-                values_dtype=self.values_dtype)
+                values_dtype=self.values_dtype, tp=key.tp)
             self._plans[key] = plan
         return plan
 
@@ -842,7 +855,7 @@ class ServingEngine:
         dtype = jnp.dtype(self.cfg.dtype if dtype is None else dtype)
         return AT.tune_registry(self.registry, self.stats(),
                                 batch=batch_size, dtype=dtype, reps=reps,
-                                values_dtype=self.values_dtype)
+                                values_dtype=self.values_dtype, tp=self.tp)
 
 
 # ---------------------------------------------------------------------------
@@ -853,18 +866,21 @@ class ServingEngine:
 def abstract_plan_key(cfg, registry, batch_size: int, *,
                       path: str = "auto",
                       profile: PLAN.HardwareProfile = PLAN.DEFAULT_PROFILE,
-                      ) -> tuple[PlanKey, dict[str, str]]:
+                      tp: int = 1) -> tuple[PlanKey, dict[str, str]]:
     """The plan key a request of ``batch_size`` would group under, computed
     from STATIC info only (target densities, no realized masks) — the
     grouping half of the engine, usable without allocating a model. Returns
     (key, per-stack representation dict) for ``plan.abstract_serving_tree``.
+    ``tp`` prices the choice on a model mesh (collective included).
     """
     bucket = AT.batch_bucket(max(int(batch_size), 1))
+    tp = max(int(tp), 1)
     if path != "auto":
         reps = {s.name: path for s in registry}
     else:
         reps = PLAN.plan_for_shape(cfg, registry, batch_size=bucket,
-                                   profile=profile)
+                                   profile=profile, tp=tp)
     key = PlanKey(batch_bucket=bucket,
-                  formats=tuple((s.name, reps[s.name]) for s in registry))
+                  formats=tuple((s.name, reps[s.name]) for s in registry),
+                  tp=tp)
     return key, reps

@@ -294,6 +294,26 @@ def analyze(hlo_text: str, bf16_equiv: bool = False) -> ProgramCost:
     return cost_of(entry, True)
 
 
+def instruction_shapes(hlo_text: str, op: str = "gather") -> list[tuple[int, ...]]:
+    """Result shapes (dim tuples) of every ``op`` instruction in the module,
+    fusion bodies included. The tensor-parallel dry-run reads SPMD
+    invariants straight off the partitioned per-device HLO with this: a
+    shard-local condensed gather shows up as a ``gather`` whose trailing
+    dims are ``(n/tp, k)``, and a replicated one as ``(n, k)`` — the shapes
+    are the proof of where the partitioner actually split the work.
+    ``op`` matches the base opcode (async ``-start`` variants included)."""
+    comps = parse_hlo(hlo_text)
+    out: list[tuple[int, ...]] = []
+    for c in comps.values():
+        for i in c.instructions:
+            if i.op != op and i.op != op + "-start":
+                continue
+            m = _SHAPE_RE.search(i.type_str)
+            if m:
+                out.append(tuple(int(d) for d in m.group(2).split(",") if d))
+    return out
+
+
 # backwards-compatible wrapper used by dryrun.py
 @dataclasses.dataclass
 class CollectiveStats:

@@ -124,6 +124,13 @@ def main(argv=None):
                          "on this machine (two gather batch points; cached "
                          "per backend in the autotune cache file) instead "
                          "of the built-in v5e-like constants")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel shard count: builds a (1, tp) "
+                         "data x model mesh and serves sparse stacks with "
+                         "shard-local condensed gathers (one all-gather per "
+                         "sparse layer). Requires tp visible devices; the "
+                         "--path auto cost model prices the collective and "
+                         "may still keep individual stacks replicated")
     ap.add_argument("--no-paged", action="store_true",
                     help="force the legacy exact-shape slab path instead of "
                          "the paged continuous-batching scheduler")
@@ -159,10 +166,21 @@ def main(argv=None):
         print("[serve] note: --path masked serves the live dense params; "
               f"--values-dtype {args.values_dtype} only affects exported "
               "value-storing formats (condensed/structured paths or auto)")
+    mesh = None
+    if args.tp > 1:
+        if jax.device_count() < args.tp:
+            raise SystemExit(
+                f"--tp {args.tp} needs {args.tp} devices, found "
+                f"{jax.device_count()} (simulated meshes live in "
+                "repro.launch.dryrun --program serve_tp)")
+        from repro import compat
+        mesh = compat.make_mesh((1, args.tp), ("data", "model"))
+        print(f"[serve] mesh data=1 model={args.tp}: sparse stacks shard "
+              "the neuron axis where the cost model prices it a win")
     engine = ServingEngine(cfg, params, masks, reg, path=args.path,
                            profile=profile,
                            paged=False if args.no_paged else None,
-                           values_dtype=args.values_dtype)
+                           values_dtype=args.values_dtype, mesh=mesh)
 
     if args.autotune and args.path == "masked":
         print("[serve] --autotune skipped: --path masked never dispatches "
@@ -179,7 +197,11 @@ def main(argv=None):
                                  cfg.vocab_size)
     rid = engine.submit(prompts, args.gen)
     if args.path == "auto" and reg:
-        print(engine.plan_for(engine.plan_key(args.batch)).describe())
+        # describe() shows BOTH the requested batch and the planned bucket —
+        # the plan is keyed on the bucket (shared with autotune cache keys),
+        # so --batch 2 legitimately plans at bucket 8; say so explicitly.
+        print(engine.plan_for(engine.plan_key(args.batch))
+              .describe(requested_batch=args.batch))
     if args.values_dtype != "f32" and reg and args.path != "masked":
         plan = engine.plan_for(engine.plan_key(args.batch))
         serving, masked_ref = plan.weight_bytes()

@@ -38,22 +38,28 @@ def _div(n: int, size: int) -> bool:
     return size > 0 and n % size == 0
 
 
-def _map_with_path(fn, tree, path=()):
+def _map_with_path(fn, tree, path=(), fmt=None):
+    """Walk a pytree calling ``fn(path, leaf, fmt)`` per leaf. ``fmt`` is the
+    enclosing serving-format instance when the leaf is one of its array
+    fields (None elsewhere) — the TP rules need the format's static shard
+    count, which the bare path/leaf pair cannot carry."""
     if isinstance(tree, dict):
-        return {k: _map_with_path(fn, v, path + (k,)) for k, v in tree.items()}
+        return {k: _map_with_path(fn, v, path + (k,), fmt)
+                for k, v in tree.items()}
     if isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
-        return type(tree)(_map_with_path(fn, v, path + (f"#{i}",))
+        return type(tree)(_map_with_path(fn, v, path + (f"#{i}",), fmt)
                           for i, v in enumerate(tree))
     if hasattr(tree, "_fields"):
-        return type(tree)(**{k: _map_with_path(fn, getattr(tree, k), path + (k,))
+        return type(tree)(**{k: _map_with_path(fn, getattr(tree, k),
+                                               path + (k,), fmt)
                              for k in tree._fields})
     if isinstance(tree, _formats().SparseFormat):
         # serving-format pytree node: map each array field under its field
         # name (the same path layout the legacy dict leaves had, so the
         # values/indices rules below keep applying); static fields ride along
         return tree.map_arrays_with_names(
-            lambda name, leaf: _map_with_path(fn, leaf, path + (name,)))
-    return fn(path, tree)
+            lambda name, leaf: _map_with_path(fn, leaf, path + (name,), tree))
+    return fn(path, tree, fmt)
 
 
 def _formats():
@@ -86,11 +92,39 @@ class ShardingRules:
         self.dmodel_tp = _div(cfg.d_model, self.tp)
 
     # -- parameter specs ----------------------------------------------------
-    def param_spec(self, path: tuple, leaf) -> P:
+    def param_spec(self, path: tuple, leaf, fmt=None) -> P:
         cfg = self.cfg
         name = path[-1]
         ndim = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
         is_expert = cfg.n_experts > 0 and name in ("w_gate", "w_up", "w_down")
+
+        fmt_tp = getattr(fmt, "tp", 1) if fmt is not None else 1
+        if fmt_tp > 1:
+            # shard-blocked TP export: every per-neuron array is organized
+            # in fmt.tp contiguous blocks along its neuron/active-row axis
+            # with LOCALLY rebased out_index/active_index, so the block axis
+            # shards over 'model' — each device holds exactly its block and
+            # the format's vmap-over-blocks apply is shard-local end to end
+            if self.tp > 1 and fmt_tp != self.tp:
+                raise ValueError(
+                    f"format at {'/'.join(map(str, path[:-1]))} was exported "
+                    f"for tp={fmt_tp} shards but the mesh's model axis has "
+                    f"{self.tp} devices — re-export with tp_shards={self.tp}")
+            tp_ax = "model" if fmt_tp == self.tp else None
+            if name == "values" and isinstance(fmt,
+                                               _formats().StructuredFanIn):
+                # quantized structured panel (lead..., d_in, tp * a_pad):
+                # the COLUMN axis carries the blocks
+                return P(*([None] * (ndim - 2) + [None, tp_ax]))
+            if name in ("values", "indices"):
+                # condensed family (lead..., n, k): neuron rows over model
+                return P(*([None] * (ndim - 2) + [tp_ax, None]))
+            if name in ("scales", "out_index", "active_index",
+                        "neuron_active"):
+                # per-neuron vectors: blocked along the last axis (the index
+                # vectors are LOCAL under TP, so sharding them is valid —
+                # unlike the replicated global-layout vectors below)
+                return P(*([None] * (ndim - 1) + [tp_ax]))
 
         if name == "embed":
             # (V, d) [audio: (K, V, d); vit: (1, d)] — d over model; pure-DP
@@ -159,18 +193,21 @@ class ShardingRules:
         return P(*([None] * ndim))
 
     def params(self, params_tree):
-        return _map_with_path(lambda p, l: NamedSharding(self.mesh, self.param_spec(p, l)),
-                              params_tree)
+        return _map_with_path(
+            lambda p, l, f: NamedSharding(self.mesh, self.param_spec(p, l, f)),
+            params_tree)
 
     # -- sparsity state -------------------------------------------------------
     def masks(self, masks_tree):
-        """Masks shard exactly like their weights."""
-        return _map_with_path(lambda p, l: NamedSharding(self.mesh, self.param_spec(p, l)),
-                              masks_tree)
+        """Masks shard exactly like their weights; serving-format leaves
+        shard per format (TP exports put their block axis over 'model')."""
+        return _map_with_path(
+            lambda p, l, f: NamedSharding(self.mesh, self.param_spec(p, l, f)),
+            masks_tree)
 
     def neuron_active(self, active_tree, masks_tree=None):
         """neuron_active (lead..., d_out) inherits the weight's output-dim axis."""
-        def spec(path, leaf):
+        def spec(path, leaf, fmt=None):
             ndim = len(leaf.shape)
             # view with the weight's (d_in, d_out) rank so param_spec applies
             wspec = self.param_spec(path, _ShapeView(leaf.shape[:-1] + (1,) + leaf.shape[-1:]))
@@ -181,7 +218,8 @@ class ShardingRules:
     # -- optimizer state ------------------------------------------------------
     def opt_state(self, opt_tree, params_tree):
         """Moments follow their weight; adafactor factored stats drop an axis."""
-        param_specs = _map_with_path(lambda p, l: self.param_spec(p, l), params_tree)
+        param_specs = _map_with_path(lambda p, l, f: self.param_spec(p, l, f),
+                                     params_tree)
 
         def _drop_axis(spec, ax):
             if not isinstance(spec, P):
@@ -265,7 +303,7 @@ class ShardingRules:
         bsz = shape.global_batch if shape is not None else None
         bax = self.batch_axes(bsz)
 
-        def spec(path, leaf):
+        def spec(path, leaf, fmt=None):
             nd = len(leaf.shape)
             name = path[-1]
             if name == "mrope_positions":  # (3, B, T)
@@ -324,7 +362,7 @@ class ShardingRules:
 
     def cache(self, cache_tree, *, global_batch: int):
         return _map_with_path(
-            lambda path, leaf: NamedSharding(
+            lambda path, leaf, fmt: NamedSharding(
                 self.mesh, self.cache_spec(path, leaf, global_batch=global_batch)),
             cache_tree)
 

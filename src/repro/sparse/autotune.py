@@ -396,7 +396,8 @@ def autotune_coa_blocks(batch: int, d_in: int, a: int, k: int, d_out: int, *,
 
 def tune_registry(registry, stats: dict, *, batch: int, dtype=jnp.float32,
                   reps: int = 3, backend: str | None = None,
-                  values_dtype: str | None = None) -> dict[str, TuneResult]:
+                  values_dtype: str | None = None,
+                  tp: int = 1) -> dict[str, TuneResult]:
     """Tune every DISTINCT kernel-dispatch shape among ``registry``'s stacks
     at their realized fan-in (``stats`` from condensed.export_stats).
 
@@ -412,34 +413,45 @@ def tune_registry(registry, stats: dict, *, batch: int, dtype=jnp.float32,
     plan can now pick for them. Already-cached shapes are skipped. Used by
     ``serve --autotune``. ``values_dtype`` ("int8"/"fp8") tunes the
     dequant-fused kernels on quantized operands under the quantized keys —
-    the registry a quantized-serving engine consumes."""
+    the registry a quantized-serving engine consumes.
+
+    ``tp > 1`` tunes at the PER-SHARD shapes a tensor-parallel engine
+    dispatches (output width and active-row bound shrink by ``1/tp``; the
+    keys come out of the same ``spec_tuning_key`` derivation the formats
+    use, which folds ``tp`` in). Stacks whose ``d_out`` the shard count
+    does not divide stay at their replicated shapes, matching the plan's
+    per-stack fallback."""
     from repro.sparse import formats as F  # lazy: formats imports this module
     out: dict[str, TuneResult] = {}
     seen: set[str] = set()
     itemsize = jnp.dtype(dtype).itemsize
     vd = F.resolve_quantize_spec(values_dtype)
+    tp = max(int(tp), 1)
     for s in registry:
         st = stats[s.name]
-        spec = F.spec_for_stack(s, st, itemsize, vd)
+        tp_s = tp if s.d_out % tp == 0 else 1
+        spec = F.spec_for_stack(s, st, itemsize, vd, tp=tp_s)
         a = spec.max_active
+        n_loc = s.d_out // tp_s           # shard-local output width
+        a_loc = -(-a // tp_s)             # shard-local active-row bound
 
         def tuners():
             yield (s.name, F.Condensed,
-                   lambda: autotune_blocks(batch, s.d_in, s.d_out, spec.k,
+                   lambda: autotune_blocks(batch, s.d_in, n_loc, spec.k,
                                            dtype=dtype, reps=reps,
                                            backend=backend, values_dtype=vd))
             if a < s.d_out:
                 yield (f"{s.name}@a{a}", F.CondensedOverActive,
-                       lambda: autotune_coa_blocks(batch, s.d_in, a, spec.k,
-                                                   s.d_out, dtype=dtype,
+                       lambda: autotune_coa_blocks(batch, s.d_in, a_loc,
+                                                   spec.k, n_loc, dtype=dtype,
                                                    reps=reps, backend=backend,
                                                    values_dtype=vd))
                 if st.min_fan_in >= s.d_in:
-                    a_pad = sm.padded_active_count(a, s.d_out)
+                    a_pad = sm.padded_active_count(a_loc, n_loc)
                     yield (f"{s.name}@structured",
                            F.StructuredFanIn,
                            lambda: autotune_structured_blocks(
-                               batch, s.d_in, a_pad, s.d_out, dtype=dtype,
+                               batch, s.d_in, a_pad, n_loc, dtype=dtype,
                                reps=reps, backend=backend, values_dtype=vd))
 
         for label, cls, tune in tuners():

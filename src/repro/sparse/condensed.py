@@ -103,7 +103,7 @@ def structured_stack_leaf(mask, *, d_in: int | None = None,
 def recondense_stack_leaf(weight, mask, stats: ExportStats, old_leaf, *,
                           over_active: bool = False,
                           donate: bool = True,
-                          quantize_spec=None) -> F.SparseFormat:
+                          quantize_spec=None, tp: int = 1) -> F.SparseFormat:
     """Re-condense one stack for Plan.refresh, reusing ``old_leaf``'s device
     buffers when the new arrays' avals match (see the donated-program notes
     in repro.sparse.formats).
@@ -117,14 +117,22 @@ def recondense_stack_leaf(weight, mask, stats: ExportStats, old_leaf, *,
     values dtype for a leaf whose representation just changed); the donated
     path re-exports under the OLD leaf's own ``values_dtype``, which for a
     plan-managed leaf is the same thing.
+
+    ``tp`` is the plan's per-stack shard count: an old leaf exported at a
+    DIFFERENT shard layout cannot be donated into (its block structure
+    changed even when shapes match), so the refresh falls back to a fresh
+    export at ``tp_shards=tp``.
     """
     if isinstance(old_leaf, dict):
         old_leaf = F.from_legacy_leaf(old_leaf, d_in=weight.shape[-2],
                                       d_out=weight.shape[-1])
     cls = F.CondensedOverActive if over_active else F.Condensed
-    if not isinstance(old_leaf, cls):  # representation changed: fresh export
+    tp = max(int(tp), 1)
+    if not isinstance(old_leaf, cls) or getattr(old_leaf, "tp", 1) != tp:
+        # representation or shard layout changed: fresh export
         return cls.export_from_dense(weight, mask, stats,
-                                     quantize_spec=quantize_spec)
+                                     quantize_spec=quantize_spec,
+                                     tp_shards=tp)
     return old_leaf.donate_refresh(weight, mask, stats, donate=donate)
 
 

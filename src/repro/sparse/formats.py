@@ -113,6 +113,7 @@ class FormatSpec:
     max_active: int         # exported row count for condensed-over-active
     active_fraction: float  # mean active-neuron fraction
     values_dtype: str | None = None  # canonical name; None = itemsize's dtype
+    tp: int = 1             # neuron-axis tensor-parallel shard count
 
 
 # ---------------------------------------------------------------------------
@@ -195,7 +196,7 @@ def dequantize_values(q, scales, *, axis: int = -1, dtype=jnp.float32):
 
 
 def spec_for_stack(stack, stats: ExportStats, itemsize: int,
-                   values_dtype: str | None = None) -> FormatSpec:
+                   values_dtype: str | None = None, tp: int = 1) -> FormatSpec:
     """``stack`` is duck-typed (registry.SparseStack or any object with
     d_in/d_out; n_replicas defaults to 1 — benchmarks price bare shapes)."""
     return FormatSpec(d_in=stack.d_in, d_out=stack.d_out,
@@ -203,7 +204,8 @@ def spec_for_stack(stack, stats: ExportStats, itemsize: int,
                       itemsize=itemsize,
                       k=max(stats.k, 1), max_active=max(stats.max_active, 1),
                       active_fraction=min(max(stats.active_fraction, 0.0), 1.0),
-                      values_dtype=resolve_quantize_spec(values_dtype))
+                      values_dtype=resolve_quantize_spec(values_dtype),
+                      tp=max(int(tp), 1))
 
 
 def shape_tuning_key(d_in: int, n_out: int, k: int, batch: int, *,
@@ -308,6 +310,52 @@ def active_index_from_mask(mask: jax.Array, a_pad: int) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# tensor-parallel (shard-blocked) layout helpers
+#
+# A TP export keeps every array at its GLOBAL shape but reorganizes the
+# neuron/active-row axis into ``tp`` contiguous blocks, one per model-axis
+# shard: values/indices rows are grouped by block and out_index/active_index
+# entries are rebased to the block-LOCAL output range [0, d_out // tp) with
+# the local sentinel ``d_out // tp`` marking padding. Sharding that axis over
+# 'model' then gives each device exactly its own block, every gather stays
+# shard-local against the replicated activation, and the constant fan-in
+# guarantees the shards' work is exactly balanced (the property CSR lacks).
+# ---------------------------------------------------------------------------
+
+
+def _check_tp_shards(d_out: int, tp: int) -> int:
+    tp = max(int(tp), 1)
+    if tp > 1 and d_out % tp != 0:
+        raise ValueError(f"tp_shards={tp} must divide the output width "
+                         f"d_out={d_out} (neuron-axis blocks must be equal)")
+    return tp
+
+
+def _rebased_global_index(local_idx: jax.Array, tp: int,
+                          d_out: int) -> jax.Array:
+    """Map a block-LOCAL index vector (sentinel ``d_out // tp``) back to
+    GLOBAL output positions (sentinel ``d_out``) — used wherever a TP
+    instance must address the dense weight (refresh regathers) or reuse a
+    global-layout program."""
+    a_tp = local_idx.shape[-1] // tp
+    wloc = d_out // tp
+    off = (jnp.arange(local_idx.shape[-1], dtype=local_idx.dtype)
+           // a_tp) * wloc
+    return jnp.where(local_idx < wloc, local_idx + off,
+                     d_out).astype(local_idx.dtype)
+
+
+def _per_shard_active_bound(mask, tp: int) -> int:
+    """Max active-neuron count over any tp-block of the output axis (ONE
+    host sync — exports are host-driven, same as ``_realized_stats``)."""
+    act = jnp.any(mask, axis=-2)
+    wloc = act.shape[-1] // tp
+    blocks = act.reshape(*act.shape[:-1], tp, wloc)
+    n = jnp.max(jnp.sum(blocks.astype(jnp.int32), axis=-1))
+    return max(int(jax.device_get(n)), 1)
+
+
+# ---------------------------------------------------------------------------
 # base class
 # ---------------------------------------------------------------------------
 
@@ -393,6 +441,52 @@ class SparseFormat:
         same mask share) — the bytes quantization actually shrinks."""
         return cls.estimate_weight_bytes(spec)
 
+    # -- tensor-parallel pricing (collective-aware cost model) --------------
+    @classmethod
+    def shard_spec(cls, spec: FormatSpec, tp: int) -> FormatSpec:
+        """The per-shard geometry a ``tp``-way neuron partition executes:
+        the output width and surviving-row bound shrink by ``1/tp``
+        (max_active via ceil — the even-spread approximation the export
+        realizes exactly for plain condensed and approximately for the
+        ablation formats), fan-in and replica count stay global (every
+        shard reads the full replicated activation)."""
+        tp = max(int(tp), 1)
+        if tp == 1:
+            return spec
+        return dataclasses.replace(
+            spec, d_out=max(spec.d_out // tp, 1),
+            max_active=max(-(-spec.max_active // tp), 1), tp=1)
+
+    @classmethod
+    def estimate_collective(cls, spec: FormatSpec, batch: int, profile,
+                            tp: int) -> float:
+        """Seconds for the per-layer output all-gather a ``tp``-way neuron
+        partition pays: each device ring-exchanges the other shards' (B,
+        d_out/tp) output blocks — ``(tp-1)/tp`` of the replicated activation
+        — at the profile's measured interconnect rate."""
+        tp = max(int(tp), 1)
+        if tp <= 1:
+            return 0.0
+        b = max(int(batch), 1)
+        bytes_ = (b * spec.n_replicas * spec.d_out * spec.itemsize
+                  * (tp - 1) / tp)
+        return bytes_ / profile.ici_bytes_per_s
+
+    @classmethod
+    def estimate_cost_sharded(cls, spec: FormatSpec, batch: int, profile,
+                              tp: int) -> float:
+        """Estimated seconds per serving step under a ``tp``-way neuron
+        partition: the per-shard execution (1/tp of the weight stream and
+        gather work — the constant fan-in keeps shards exactly balanced)
+        PLUS the output all-gather. ``--path auto`` compares this against
+        ``estimate_cost`` (replicate, pay full HBM) so the shard-vs-
+        replicate crossover comes out of the cost model, not a flag."""
+        tp = max(int(tp), 1)
+        if tp <= 1:
+            return cls.estimate_cost(spec, batch, profile)
+        return (cls.estimate_cost(cls.shard_spec(spec, tp), batch, profile)
+                + cls.estimate_collective(spec, batch, profile, tp))
+
     def tuning_key(self, batch: int, *, backend: str | None = None) -> str | None:
         """Autotune-cache key for this instance's kernel dispatch (None when
         the format has no tunable kernel)."""
@@ -458,7 +552,7 @@ def _register(cls):
 # ---------------------------------------------------------------------------
 
 
-def _condense_active_stack(weight, mask, k: int, a: int):
+def _condense_active_stack(weight, mask, k: int, a: int, tp: int = 1):
     """Condensed-over-active arrays for one stack (vmapped over lead dims).
 
     Drops ablated output neurons FIRST (Fig. 4's "structured" move), then
@@ -471,6 +565,13 @@ def _condense_active_stack(weight, mask, k: int, a: int):
     derived from the mask itself (not the trainer's neuron_active
     bookkeeping) so the representation is exact vs masked-dense by
     construction.
+
+    ``tp > 1`` builds the shard-blocked TP layout instead: the output axis
+    splits into ``tp`` contiguous blocks, each condensed independently to
+    ``a`` surviving rows (``a`` is then the PER-SHARD bound), with
+    ``out_index`` rebased block-locally (sentinel ``d_out // tp``). The
+    returned arrays are the tp=1 shapes with ``tp * a`` total rows, grouped
+    by block.
     """
     d_out = weight.shape[-1]
 
@@ -484,7 +585,32 @@ def _condense_active_stack(weight, mask, k: int, a: int):
         vals, idx = topology.dense_to_condensed(w_sel * m_sel, m_sel, k)
         return vals, idx, jnp.where(sel, out_index, d_out).astype(jnp.int32)
 
-    return _vmap_lead(fn, weight.ndim - 2)(weight, mask)
+    if tp <= 1:
+        return _vmap_lead(fn, weight.ndim - 2)(weight, mask)
+
+    wloc = d_out // tp
+
+    def blk(w_s, m_s):
+        col_active = jnp.any(m_s, axis=0)                    # (wloc,)
+        order = jnp.argsort(~col_active, stable=True).astype(jnp.int32)
+        out_index = order[:a]
+        sel = col_active[out_index]
+        w_sel = jnp.take(w_s, out_index, axis=1)
+        m_sel = jnp.take(m_s, out_index, axis=1) & sel[None, :]
+        vals, idx = topology.dense_to_condensed(w_sel * m_sel, m_sel, k)
+        # indices address the FULL d_in rows (x stays replicated under TP);
+        # out_index is block-LOCAL with the per-shard sentinel wloc
+        return vals, idx, jnp.where(sel, out_index, wloc).astype(jnp.int32)
+
+    def fn_tp(w, m):
+        d_in = w.shape[0]
+        wb = jnp.moveaxis(w.reshape(d_in, tp, wloc), 1, 0)   # (tp, d_in, wloc)
+        mb = jnp.moveaxis(m.reshape(d_in, tp, wloc), 1, 0)
+        vals, idx, oi = jax.vmap(blk)(wb, mb)                # (tp, a, ...)
+        return (vals.reshape(tp * a, k), idx.reshape(tp * a, k),
+                oi.reshape(tp * a))
+
+    return _vmap_lead(fn_tp, weight.ndim - 2)(weight, mask)
 
 
 @functools.partial(jax.jit, static_argnames=("k",), donate_argnums=(2, 3),
@@ -495,11 +621,11 @@ def _recondense_donated(weight, mask, old_values, old_indices, *, k: int):
     return vals.astype(old_values.dtype), idx
 
 
-@functools.partial(jax.jit, static_argnames=("k", "a"),
+@functools.partial(jax.jit, static_argnames=("k", "a", "tp"),
                    donate_argnums=(2, 3, 4), keep_unused=True)
 def _recondense_active_donated(weight, mask, old_values, old_indices,
-                               old_out_index, *, k: int, a: int):
-    vals, idx, oi = _condense_active_stack(weight, mask, k, a)
+                               old_out_index, *, k: int, a: int, tp: int = 1):
+    vals, idx, oi = _condense_active_stack(weight, mask, k, a, tp)
     return vals.astype(old_values.dtype), idx, oi
 
 
@@ -542,12 +668,13 @@ def _recondense_quantized_donated(weight, mask, old_values, old_indices,
     return q, idx, s
 
 
-@functools.partial(jax.jit, static_argnames=("k", "a", "qdt"),
+@functools.partial(jax.jit, static_argnames=("k", "a", "qdt", "tp"),
                    donate_argnums=(2, 3, 4, 5), keep_unused=True)
 def _recondense_active_quantized_donated(weight, mask, old_values, old_indices,
                                          old_out_index, old_scales, *,
-                                         k: int, a: int, qdt: str):
-    vals, idx, oi = _condense_active_stack(weight, mask, k, a)
+                                         k: int, a: int, qdt: str,
+                                         tp: int = 1):
+    vals, idx, oi = _condense_active_stack(weight, mask, k, a, tp)
     q, s = quantize_values(vals, qdt)
     return q, idx, oi, s
 
@@ -666,6 +793,14 @@ class MaskedDense(SparseFormat):
         return spec.n_replicas * spec.d_in * spec.d_out * (spec.itemsize + 1)
 
     @classmethod
+    def estimate_cost_sharded(cls, spec, batch, profile, tp):
+        # masked-dense is the REPLICATED path under TP: each device serves a
+        # data-parallel replica of the dense weight (full HBM stream, zero
+        # collectives) — the alternative the collective-priced sharded
+        # formats are compared against
+        return cls.estimate_cost(spec, batch, profile)
+
+    @classmethod
     def abstract(cls, lead, d_in, d_out, k, dtype):
         return cls(mask=jax.ShapeDtypeStruct((*lead, d_in, d_out), jnp.bool_),
                    weight_itemsize=jnp.dtype(dtype).itemsize)
@@ -697,6 +832,7 @@ class StructuredFanIn(SparseFormat):
     values: jax.Array | None = None      # (lead..., d_in, a_pad) quantized panel
     scales: jax.Array | None = None      # (lead..., a_pad) f32 per column
     values_dtype: str | None = None      # canonical name when quantized
+    tp: int = 1                          # shard-blocked TP layout when > 1
 
     format_name: typing.ClassVar[str] = "structured"
     _array_fields: typing.ClassVar[tuple[str, ...]] = ("neuron_active",
@@ -704,9 +840,21 @@ class StructuredFanIn(SparseFormat):
                                                        "values", "scales")
     _static_fields: typing.ClassVar[tuple[str, ...]] = ("d_in",
                                                         "weight_itemsize",
-                                                        "values_dtype")
+                                                        "values_dtype", "tp")
 
     def apply(self, x, w=None):
+        if self.tp > 1:
+            # shard-blocked layout: active_index is grouped in tp blocks and
+            # LOCALLY rebased (sentinel d_out // tp) — the vmap-over-blocks
+            # ops partition shard-locally under a 'model'-sharded block axis
+            if self.values is not None and self.active_index is not None:
+                panel = dequantize_values(self.values, self.scales, axis=-2,
+                                          dtype=x.dtype)
+                return ops.structured_gathered_linear_tp_nd(
+                    x, panel, self.active_index,
+                    self.neuron_active.shape[-1], self.tp)
+            return ops.structured_linear_tp_nd(x, w, self.active_index,
+                                               self.tp)
         if self.values is not None and self.active_index is not None:
             # quantized export: the gathered active-column panel is stored
             # in the format itself; dequantize the 1-byte stream and feed
@@ -723,22 +871,36 @@ class StructuredFanIn(SparseFormat):
         return ops.structured_linear_nd(x, w, self.active_index)
 
     @classmethod
-    def export_from_dense(cls, w, mask, stats=None, *, quantize_spec=None):
+    def export_from_dense(cls, w, mask, stats=None, *, quantize_spec=None,
+                          tp_shards: int = 1):
         stats = stats if stats is not None else _realized_stats(mask)
         d_out = int(mask.shape[-1])
-        a_pad = padded_active_count(max(stats.max_active, 1), d_out)
-        ai = active_index_from_mask(mask, a_pad)
+        tp = _check_tp_shards(d_out, tp_shards)
+        if tp > 1:
+            # per-block surviving-column ids, LOCALLY rebased (sentinel
+            # d_out // tp), grouped into one (lead..., tp * a_pad) vector
+            wloc = d_out // tp
+            act = jnp.any(mask, axis=-2)
+            a_pad = padded_active_count(_per_shard_active_bound(mask, tp),
+                                        wloc)
+            blocks = act.reshape(*act.shape[:-1], tp, wloc)
+            ai = active_index_from_bools(blocks, a_pad)
+            ai = ai.reshape(*act.shape[:-1], tp * a_pad)
+        else:
+            a_pad = padded_active_count(max(stats.max_active, 1), d_out)
+            ai = active_index_from_mask(mask, a_pad)
         qdt = resolve_quantize_spec(quantize_spec)
         vals = scales = None
         if qdt in QUANTIZED_DTYPES:
-            vals, scales = quantize_values(_gather_active_panel(w, mask, ai),
+            gi = _rebased_global_index(ai, tp, d_out) if tp > 1 else ai
+            vals, scales = quantize_values(_gather_active_panel(w, mask, gi),
                                            qdt, axis=-2)
         else:
             qdt = None  # a bare storage cast has nothing to store here
         return cls(neuron_active=jnp.any(mask, axis=-2), active_index=ai,
                    d_in=int(mask.shape[-2]),
                    weight_itemsize=jnp.dtype(w.dtype).itemsize,
-                   values=vals, scales=scales, values_dtype=qdt)
+                   values=vals, scales=scales, values_dtype=qdt, tp=tp)
 
     def _a_pad(self) -> int:
         d_out = self.neuron_active.shape[-1]
@@ -755,7 +917,7 @@ class StructuredFanIn(SparseFormat):
                           itemsize=self.weight_itemsize, k=self.d_in,
                           max_active=a_pad,
                           active_fraction=min(a_pad / max(d_out, 1), 1.0),
-                          values_dtype=self.values_dtype)
+                          values_dtype=self.values_dtype, tp=self.tp)
 
     @classmethod
     def estimate_cost(cls, spec, batch, profile):
@@ -787,34 +949,42 @@ class StructuredFanIn(SparseFormat):
     def tuning_key(self, batch, *, backend=None):
         if self.active_index is None:
             return None  # legacy instance: reference path, nothing to tune
+        # per-SHARD shapes under TP: a tuned entry describes the block one
+        # device executes (the backend-keyed cache machinery is unchanged)
         return shape_tuning_key(
-            self.d_in, self._a_pad(), 0, batch, backend=backend,
+            self.d_in, self._a_pad() // self.tp, 0, batch, backend=backend,
             itemsize=self.weight_itemsize, kind="structured",
-            scatter_width=self.neuron_active.shape[-1],
+            scatter_width=self.neuron_active.shape[-1] // self.tp,
             values_dtype=self.values_dtype)
 
     @classmethod
     def spec_tuning_key(cls, spec, batch, *, backend=None):
-        a_pad = padded_active_count(spec.max_active, spec.d_out)
-        return shape_tuning_key(spec.d_in, a_pad, 0, batch, backend=backend,
-                                itemsize=spec.itemsize, kind="structured",
-                                scatter_width=spec.d_out,
-                                values_dtype=spec.values_dtype)
+        s = cls.shard_spec(spec, spec.tp)
+        a_pad = padded_active_count(s.max_active, s.d_out)
+        return shape_tuning_key(s.d_in, a_pad, 0, batch, backend=backend,
+                                itemsize=s.itemsize, kind="structured",
+                                scatter_width=s.d_out,
+                                values_dtype=s.values_dtype)
 
     @classmethod
-    def abstract(cls, lead, d_in, d_out, k, dtype):
+    def abstract(cls, lead, d_in, d_out, k, dtype, tp: int = 1):
         # a_pad = padded d_out static bound (no realized ablation counts at
-        # lowering time); the concrete export shrinks it to the real count
-        a_pad = padded_active_count(d_out, d_out)
+        # lowering time); the concrete export shrinks it to the real count.
+        # Under TP each of the tp blocks pads independently.
+        tp = _check_tp_shards(d_out, tp)
+        wloc = d_out // tp
+        a_pad = padded_active_count(wloc, wloc) * tp
         return cls(neuron_active=jax.ShapeDtypeStruct((*lead, d_out),
                                                       jnp.bool_),
                    active_index=jax.ShapeDtypeStruct((*lead, a_pad),
                                                      jnp.int32),
-                   d_in=d_in, weight_itemsize=jnp.dtype(dtype).itemsize)
+                   d_in=d_in, weight_itemsize=jnp.dtype(dtype).itemsize,
+                   tp=tp)
 
     def donate_refresh(self, w, mask, stats=None, *, donate=True):
         return type(self).export_from_dense(w, mask, stats,
-                                            quantize_spec=self.values_dtype)
+                                            quantize_spec=self.values_dtype,
+                                            tp_shards=self.tp)
 
     def refresh_values(self, w, mask, *, donate: bool = True):
         """No-op for float instances (they read the live weights). Quantized
@@ -822,13 +992,18 @@ class StructuredFanIn(SparseFormat):
         active_index, donated into the old 1-byte buffers."""
         if self.values is None or self.active_index is None:
             return self
+        # TP instances store LOCAL column ids — rebase to the global output
+        # axis for the dense-weight regather (layout reproduced exactly)
+        ai = (_rebased_global_index(self.active_index, self.tp,
+                                    self.neuron_active.shape[-1])
+              if self.tp > 1 else self.active_index)
         if donate:
             vals, s = _revalue_structured_quantized_donated(
-                w, mask, self.active_index, self.values, self.scales,
+                w, mask, ai, self.values, self.scales,
                 qdt=self.values_dtype)
         else:
             vals, s = quantize_values(
-                _gather_active_panel(w, mask, self.active_index),
+                _gather_active_panel(w, mask, ai),
                 self.values_dtype, axis=-2)
         return dataclasses.replace(self, values=vals, scales=s)
 
@@ -844,11 +1019,21 @@ class StructuredFanIn(SparseFormat):
         if "active_index" in missing and "neuron_active" not in missing \
                 and self.active_index is not None:
             act = self.neuron_active
-            realized = int(jax.device_get(
-                jnp.max(jnp.sum(act.astype(jnp.int32), axis=-1))))
-            a_pad = padded_active_count(max(realized, 1), act.shape[-1])
-            out = dataclasses.replace(
-                out, active_index=active_index_from_bools(act, a_pad))
+            if self.tp > 1:
+                # TP templates rebuild the shard-blocked LOCAL layout
+                wloc = act.shape[-1] // self.tp
+                blocks = act.reshape(*act.shape[:-1], self.tp, wloc)
+                realized = int(jax.device_get(jnp.max(
+                    jnp.sum(blocks.astype(jnp.int32), axis=-1))))
+                a_pad = padded_active_count(max(realized, 1), wloc)
+                ai = active_index_from_bools(blocks, a_pad)
+                ai = ai.reshape(*act.shape[:-1], self.tp * a_pad)
+            else:
+                realized = int(jax.device_get(
+                    jnp.max(jnp.sum(act.astype(jnp.int32), axis=-1))))
+                a_pad = padded_active_count(max(realized, 1), act.shape[-1])
+                ai = active_index_from_bools(act, a_pad)
+            out = dataclasses.replace(out, active_index=ai)
         if "values" in missing and out.values_dtype in QUANTIZED_DTYPES:
             # the archive predates the quantized panel and the panel cannot
             # be rebuilt without the live dense weight: degrade to the
@@ -885,13 +1070,23 @@ class Condensed(SparseFormat):
     d_in: int = 0
     scales: jax.Array | None = None      # (lead..., d_out) f32 when quantized
     values_dtype: str | None = None      # canonical name when quantized
+    tp: int = 1                          # shard-blocked TP execution when > 1
 
     format_name: typing.ClassVar[str] = "condensed"
     _array_fields: typing.ClassVar[tuple[str, ...]] = ("values", "indices",
                                                        "scales")
-    _static_fields: typing.ClassVar[tuple[str, ...]] = ("d_in", "values_dtype")
+    _static_fields: typing.ClassVar[tuple[str, ...]] = ("d_in", "values_dtype",
+                                                        "tp")
 
     def apply(self, x, w=None):
+        if self.tp > 1:
+            # the plain condensed layout's contiguous neuron rows ARE the
+            # shard blocks (constant fan-in: exactly balanced) — no array
+            # reorganization, only the vmap-over-blocks execution
+            return ops.condensed_linear_tp_nd(
+                x, (self.values if self.scales is not None
+                    else self.values.astype(x.dtype)),
+                self.indices, self.tp, scales=self.scales)
         if self.scales is not None:
             return ops.condensed_linear_nd(x, self.values, self.indices,
                                            scales=self.scales)
@@ -899,19 +1094,23 @@ class Condensed(SparseFormat):
                                        self.indices)
 
     @classmethod
-    def export_from_dense(cls, w, mask, stats=None, *, quantize_spec=None):
+    def export_from_dense(cls, w, mask, stats=None, *, quantize_spec=None,
+                          tp_shards: int = 1):
         stats = stats if stats is not None else _realized_stats(mask)
         k = max(stats.k, 1)
+        # the exported arrays are IDENTICAL for every tp: contiguous neuron
+        # rows already partition into equal blocks (validated divisible)
+        tp = _check_tp_shards(int(w.shape[-1]), tp_shards)
         fn = lambda w_, m_: topology.dense_to_condensed(w_ * m_, m_, k)
         vals, idx = _vmap_lead(fn, w.ndim - 2)(w, mask)
         qdt = resolve_quantize_spec(quantize_spec)
         if qdt in QUANTIZED_DTYPES:
             q, s = quantize_values(vals, qdt)
             return cls(values=q, indices=idx, d_in=int(w.shape[-2]),
-                       scales=s, values_dtype=qdt)
+                       scales=s, values_dtype=qdt, tp=tp)
         if qdt is not None:  # plain storage-dtype cast (e.g. bf16)
             vals = vals.astype(VALUES_DTYPES[qdt])
-        return cls(values=vals, indices=idx, d_in=int(w.shape[-2]))
+        return cls(values=vals, indices=idx, d_in=int(w.shape[-2]), tp=tp)
 
     def spec(self) -> FormatSpec:
         d_out, k = self.values.shape[-2:]
@@ -925,7 +1124,7 @@ class Condensed(SparseFormat):
         return FormatSpec(d_in=self.d_in, d_out=d_out, n_replicas=n,
                           itemsize=itemsize, k=k, max_active=d_out,
                           active_fraction=1.0,
-                          values_dtype=self.values_dtype)
+                          values_dtype=self.values_dtype, tp=self.tp)
 
     @classmethod
     def estimate_cost(cls, spec, batch, profile):
@@ -950,28 +1149,34 @@ class Condensed(SparseFormat):
 
     def tuning_key(self, batch, *, backend=None):
         d_out, k = self.values.shape[-2:]
+        # per-SHARD shapes under TP (d_out shrinks by 1/tp; same cache)
         return shape_tuning_key(
-            self.d_in, d_out, k, batch, backend=backend,
+            self.d_in, d_out // self.tp, k, batch, backend=backend,
             itemsize=jnp.dtype(self.values.dtype).itemsize,
             values_dtype=self.values_dtype)
 
     @classmethod
     def spec_tuning_key(cls, spec, batch, *, backend=None):
-        return shape_tuning_key(spec.d_in, spec.d_out, spec.k, batch,
-                                backend=backend, itemsize=spec.itemsize,
-                                values_dtype=spec.values_dtype)
+        s = cls.shard_spec(spec, spec.tp)
+        return shape_tuning_key(s.d_in, s.d_out, s.k, batch,
+                                backend=backend, itemsize=s.itemsize,
+                                values_dtype=s.values_dtype)
 
     @classmethod
-    def abstract(cls, lead, d_in, d_out, k, dtype):
+    def abstract(cls, lead, d_in, d_out, k, dtype, tp: int = 1):
         shape = (*lead, d_out, k)
         return cls(values=jax.ShapeDtypeStruct(shape, jnp.dtype(dtype)),
-                   indices=jax.ShapeDtypeStruct(shape, jnp.int32), d_in=d_in)
+                   indices=jax.ShapeDtypeStruct(shape, jnp.int32), d_in=d_in,
+                   tp=_check_tp_shards(d_out, tp))
 
     def donate_refresh(self, w, mask, stats=None, *, donate=True):
         stats = stats if stats is not None else _realized_stats(mask)
         k = max(stats.k, 1)
         shape = (*w.shape[:-2], w.shape[-1], k)
         if donate and self.values.shape == shape:
+            # the donated re-condense is tp-agnostic: the arrays' layout is
+            # identical for every tp (contiguous row blocks), so the static
+            # tp rides through dataclasses.replace unchanged
             if (self.values_dtype in QUANTIZED_DTYPES
                     and self.scales is not None):
                 vals, idx, s = _recondense_quantized_donated(
@@ -984,7 +1189,8 @@ class Condensed(SparseFormat):
                                                 self.indices, k=k)
                 return dataclasses.replace(self, values=vals, indices=idx)
         return type(self).export_from_dense(w, mask, stats,
-                                            quantize_spec=self.values_dtype)
+                                            quantize_spec=self.values_dtype,
+                                            tp_shards=self.tp)
 
     def refresh_values(self, w, mask, *, donate: bool = True):
         """Regather ``w * mask`` at the stored indices (topology unchanged).
@@ -1042,14 +1248,24 @@ class CondensedOverActive(SparseFormat):
     d_out: int = 0                       # dense output width (scatter target)
     scales: jax.Array | None = None      # (lead..., a) f32 when quantized
     values_dtype: str | None = None      # canonical name when quantized
+    tp: int = 1                          # shard-blocked TP layout when > 1
 
     format_name: typing.ClassVar[str] = "condensed_over_active"
     _array_fields: typing.ClassVar[tuple[str, ...]] = ("values", "indices",
                                                        "out_index", "scales")
     _static_fields: typing.ClassVar[tuple[str, ...]] = ("d_in", "d_out",
-                                                        "values_dtype")
+                                                        "values_dtype", "tp")
 
     def apply(self, x, w=None):
+        if self.tp > 1:
+            # shard-blocked layout: rows grouped in tp blocks of a_tp, with
+            # out_index LOCALLY rebased (sentinel d_out // tp) — the local
+            # scatter never crosses shards
+            return ops.condensed_over_active_linear_tp_nd(
+                x, (self.values if self.scales is not None
+                    else self.values.astype(x.dtype)),
+                self.indices, self.out_index, self.d_out, self.tp,
+                scales=self.scales)
         if self.scales is not None:
             return ops.condensed_over_active_linear_nd(
                 x, self.values, self.indices, self.out_index, self.d_out,
@@ -1059,20 +1275,26 @@ class CondensedOverActive(SparseFormat):
             self.d_out)
 
     @classmethod
-    def export_from_dense(cls, w, mask, stats=None, *, quantize_spec=None):
+    def export_from_dense(cls, w, mask, stats=None, *, quantize_spec=None,
+                          tp_shards: int = 1):
         stats = stats if stats is not None else _realized_stats(mask)
+        tp = _check_tp_shards(int(w.shape[-1]), tp_shards)
+        # per-shard surviving-row bound: the max over BLOCKS, not replicas
+        # (one host sync; export is host-driven like _realized_stats)
+        a = (_per_shard_active_bound(mask, tp) if tp > 1
+             else max(stats.max_active, 1))
         vals, idx, oi = _condense_active_stack(w, mask, max(stats.k, 1),
-                                               max(stats.max_active, 1))
+                                               a, tp)
         qdt = resolve_quantize_spec(quantize_spec)
         if qdt in QUANTIZED_DTYPES:
             q, s = quantize_values(vals, qdt)
             return cls(values=q, indices=idx, out_index=oi,
                        d_in=int(w.shape[-2]), d_out=int(w.shape[-1]),
-                       scales=s, values_dtype=qdt)
+                       scales=s, values_dtype=qdt, tp=tp)
         if qdt is not None:
             vals = vals.astype(VALUES_DTYPES[qdt])
         return cls(values=vals, indices=idx, out_index=oi,
-                   d_in=int(w.shape[-2]), d_out=int(w.shape[-1]))
+                   d_in=int(w.shape[-2]), d_out=int(w.shape[-1]), tp=tp)
 
     def spec(self) -> FormatSpec:
         a, k = self.values.shape[-2:]
@@ -1086,7 +1308,7 @@ class CondensedOverActive(SparseFormat):
         return FormatSpec(d_in=self.d_in, d_out=self.d_out, n_replicas=n,
                           itemsize=itemsize, k=k, max_active=a,
                           active_fraction=a / max(self.d_out, 1),
-                          values_dtype=self.values_dtype)
+                          values_dtype=self.values_dtype, tp=self.tp)
 
     @classmethod
     def estimate_cost(cls, spec, batch, profile):
@@ -1115,73 +1337,85 @@ class CondensedOverActive(SparseFormat):
 
     def tuning_key(self, batch, *, backend=None):
         a, k = self.values.shape[-2:]
+        # per-SHARD shapes under TP: a_tp rows scattered into d_out/tp
         return shape_tuning_key(
-            self.d_in, a, k, batch, backend=backend,
+            self.d_in, a // self.tp, k, batch, backend=backend,
             itemsize=jnp.dtype(self.values.dtype).itemsize, kind="coa",
-            scatter_width=self.d_out, values_dtype=self.values_dtype)
+            scatter_width=self.d_out // self.tp,
+            values_dtype=self.values_dtype)
 
     @classmethod
     def spec_tuning_key(cls, spec, batch, *, backend=None):
         # the FUSED kernel runs over the (max_active, k) arrays the export
         # built and scatters into the d_out-wide output block in-kernel —
         # both are part of its key (kind="coa")
-        return shape_tuning_key(spec.d_in, spec.max_active, spec.k, batch,
-                                backend=backend, itemsize=spec.itemsize,
-                                kind="coa", scatter_width=spec.d_out,
-                                values_dtype=spec.values_dtype)
+        s = cls.shard_spec(spec, spec.tp)
+        return shape_tuning_key(s.d_in, s.max_active, s.k, batch,
+                                backend=backend, itemsize=s.itemsize,
+                                kind="coa", scatter_width=s.d_out,
+                                values_dtype=s.values_dtype)
 
     @classmethod
-    def abstract(cls, lead, d_in, d_out, k, dtype):
+    def abstract(cls, lead, d_in, d_out, k, dtype, tp: int = 1):
         # a = d_out static bound (no realized ablation counts at lowering
-        # time); the concrete export shrinks a to the real max active count
+        # time); the concrete export shrinks a to the real max active count.
+        # Under TP the bound is d_out/tp per block — tp blocks of it give
+        # the SAME global shapes, only the static tp differs.
         shape = (*lead, d_out, k)
         return cls(values=jax.ShapeDtypeStruct(shape, jnp.dtype(dtype)),
                    indices=jax.ShapeDtypeStruct(shape, jnp.int32),
                    out_index=jax.ShapeDtypeStruct((*lead, d_out), jnp.int32),
-                   d_in=d_in, d_out=d_out)
+                   d_in=d_in, d_out=d_out, tp=_check_tp_shards(d_out, tp))
 
     def donate_refresh(self, w, mask, stats=None, *, donate=True):
         stats = stats if stats is not None else _realized_stats(mask)
-        k, a = max(stats.k, 1), max(stats.max_active, 1)
-        shape = (*w.shape[:-2], a, k)
+        k = max(stats.k, 1)
+        a = (_per_shard_active_bound(mask, self.tp) if self.tp > 1
+             else max(stats.max_active, 1))
+        shape = (*w.shape[:-2], self.tp * a, k)
         if donate and self.values.shape == shape:
             if (self.values_dtype in QUANTIZED_DTYPES
                     and self.scales is not None):
                 vals, idx, oi, s = _recondense_active_quantized_donated(
                     w, mask, self.values, self.indices, self.out_index,
-                    self.scales, k=k, a=a, qdt=self.values_dtype)
+                    self.scales, k=k, a=a, qdt=self.values_dtype, tp=self.tp)
                 return dataclasses.replace(self, values=vals, indices=idx,
                                            out_index=oi, scales=s)
             if self.values.dtype == w.dtype:
                 vals, idx, oi = _recondense_active_donated(
                     w, mask, self.values, self.indices, self.out_index,
-                    k=k, a=a)
+                    k=k, a=a, tp=self.tp)
                 return dataclasses.replace(self, values=vals, indices=idx,
                                            out_index=oi)
         return type(self).export_from_dense(w, mask, stats,
-                                            quantize_spec=self.values_dtype)
+                                            quantize_spec=self.values_dtype,
+                                            tp_shards=self.tp)
 
     def refresh_values(self, w, mask, *, donate: bool = True):
         """Values-only regather. Padding ROWS may re-gather garbage from a
         clipped column but are dropped by the out-of-range out_index at
         scatter time, so the representation stays exact. Quantized instances
-        re-quantize (fresh scales) in the same donated program."""
+        re-quantize (fresh scales) in the same donated program. TP instances
+        rebase their local out_index to the global output axis for the
+        dense-weight regather (same programs, same donation contract)."""
+        oi = (_rebased_global_index(self.out_index, self.tp, self.d_out)
+              if self.tp > 1 else self.out_index)
         if self.values_dtype in QUANTIZED_DTYPES and self.scales is not None:
             if donate:
                 vals, s = _revalue_active_quantized_donated(
                     w, mask, self.values, self.scales, self.indices,
-                    self.out_index, qdt=self.values_dtype)
+                    oi, qdt=self.values_dtype)
             else:
                 vals, s = quantize_values(
-                    _gather_at_indices(w, mask, self.indices, self.out_index),
+                    _gather_at_indices(w, mask, self.indices, oi),
                     self.values_dtype)
             return dataclasses.replace(self, values=vals, scales=s)
         if donate:
             vals = _revalue_active_donated(w, mask, self.values, self.indices,
-                                           self.out_index)
+                                           oi)
         else:
             vals = _gather_at_indices(w, mask, self.indices,
-                                      self.out_index).astype(self.values.dtype)
+                                      oi).astype(self.values.dtype)
         return dataclasses.replace(self, values=vals)
 
     def rebuild_missing(self, missing):

@@ -75,6 +75,13 @@ class HardwareProfile:
     gather_flops_per_s_large: float | None = None  # large-batch point (cliff)
     gather_small_batch: int = 8
     gather_large_batch: int = 512
+    # per-device interconnect bandwidth (one ICI link direction) pricing the
+    # tensor-parallel output all-gather: each device sends its (tp-1)/tp
+    # share of the layer output over this rate. ~45 GB/s is the v5e 1D-ring
+    # per-link figure; ``measure()`` replaces it with a timed all-gather when
+    # the backend actually has multiple devices (kept at the default on a
+    # 1-device host — simulated-mesh timings would price host memcpys).
+    ici_bytes_per_s: float = 4.5e10
 
     def gather_rate(self, batch: int) -> float:
         """Gather throughput at ``batch``: log-log interpolation between the
@@ -161,7 +168,12 @@ class HardwareProfile:
                            gather_small_batch=cached.get("gather_small_batch",
                                                          gather_shape[0]),
                            gather_large_batch=cached.get(
-                               "gather_large_batch", gather_large_shape[0]))
+                               "gather_large_batch", gather_large_shape[0]),
+                           # pre-TP cache entries have no interconnect rate;
+                           # fall back to the class default rather than
+                           # invalidating them
+                           ici_bytes_per_s=cached.get("ici_bytes_per_s",
+                                                      cls.ici_bytes_per_s))
 
         import statistics
 
@@ -194,11 +206,37 @@ class HardwareProfile:
         gather = gather_point(gather_shape, 2)
         gather_large = gather_point(gather_large_shape, 5)
 
+        # interconnect: timed all-gather of a model-axis-sharded vector.
+        # Only meaningful with REAL multiple devices — a simulated host mesh
+        # would price host memcpys as ICI, so the default survives there too
+        # (simulated devices all report the host platform but share one
+        # process; len(jax.devices()) > 1 on hardware backends only when the
+        # links exist).
+        ici = cls.ici_bytes_per_s
+        ndev = jax.device_count()
+        if ndev > 1 and backend != "cpu":
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as PS
+
+            from repro import compat
+            m = compat.make_mesh((ndev,), ("model",))
+            per = max(int(stream_mb * 2**20 / 4) // ndev, 1024)
+            xs_sh = jax.device_put(jnp.zeros((ndev * per,), jnp.float32),
+                                   NamedSharding(m, PS("model")))
+            fn = jax.jit(lambda x: jax.lax.with_sharding_constraint(
+                x + 1.0, NamedSharding(m, PS())))
+            t_ici = AT._time_us(fn, xs_sh, reps=reps,
+                                agg=statistics.median)
+            # per-device send volume of the all-gather: (ndev-1)/ndev of the
+            # replicated payload
+            ici = 4.0 * per * (ndev - 1) / (t_ici * 1e-6)
+
         prof = cls(name=f"measured-{backend}", hbm_bytes_per_s=hbm,
                    mxu_flops_per_s=mxu, gather_flops_per_s=gather,
                    gather_flops_per_s_large=gather_large,
                    gather_small_batch=gather_shape[0],
-                   gather_large_batch=gather_large_shape[0])
+                   gather_large_batch=gather_large_shape[0],
+                   ici_bytes_per_s=ici)
         if save:
             AT.store_profile({"name": prof.name,
                               "hbm_bytes_per_s": prof.hbm_bytes_per_s,
@@ -208,6 +246,7 @@ class HardwareProfile:
                                   prof.gather_flops_per_s_large,
                               "gather_small_batch": prof.gather_small_batch,
                               "gather_large_batch": prof.gather_large_batch,
+                              "ici_bytes_per_s": prof.ici_bytes_per_s,
                               "params": params},
                              backend=backend)
         return prof
@@ -218,22 +257,37 @@ DEFAULT_PROFILE = HardwareProfile()
 
 @dataclasses.dataclass(frozen=True)
 class StackDecision:
-    """One stack's chosen representation + the cost table that chose it."""
+    """One stack's chosen representation + the cost table that chose it.
+
+    ``tp`` is the chosen SHARD count for this stack's leaf: under a
+    tensor-parallel plan the cost model decides PER STACK whether to shard
+    the neuron axis (pay the output all-gather) or replicate (pay full HBM)
+    — ``tp == 1`` means the replicated execution won even though the mesh
+    has a model axis.
+    """
     name: str
     representation: str
     est_s: dict[str, float]       # representation -> est. seconds per step
     stats: COND.ExportStats       # realized fan-in / ablation at export time
+    tp: int = 1                   # chosen neuron-axis shard count (1 = replicated)
 
     @property
     def active_fraction(self) -> float:
         return self.stats.active_fraction
+
+    @property
+    def cost_key(self) -> str:
+        """The ``est_s`` key the decision was priced at."""
+        return (f"{self.representation}@tp{self.tp}" if self.tp > 1
+                else self.representation)
 
 
 def stack_costs(stack, *, batch_size: int, itemsize: int, k: int,
                 active_fraction: float,
                 profile: HardwareProfile = DEFAULT_PROFILE,
                 max_active_fraction: float | None = None,
-                values_dtype: str | None = None) -> dict[str, float]:
+                values_dtype: str | None = None,
+                tp: int = 1) -> dict[str, float]:
     """Estimated seconds per serving step for each representation.
 
     Pricing lives with the formats themselves now: each representation's
@@ -248,6 +302,13 @@ def stack_costs(stack, *, batch_size: int, itemsize: int, k: int,
     each format price its REAL stored byte width — a quantized export
     shrinks the HBM roofline term, which can move the masked/condensed
     crossover batch.
+
+    With ``tp > 1`` (and ``d_out`` divisible by it) the table ALSO carries
+    ``"<rep>@tp<tp>"`` entries priced by each format's
+    ``estimate_cost_sharded`` — shard-local roofline at ``1/tp`` shapes plus
+    the output all-gather over ``profile.ici_bytes_per_s``. The plain keys
+    stay the replicated prices, so the TP-vs-replicated crossover is read
+    straight out of one table.
     """
     b = max(int(batch_size), 1)
     act = min(max(active_fraction, 0.0), 1.0)
@@ -258,14 +319,20 @@ def stack_costs(stack, *, batch_size: int, itemsize: int, k: int,
                         k=max(k, 1), max_active=row_frac * stack.d_out,
                         active_fraction=act,
                         values_dtype=F.resolve_quantize_spec(values_dtype))
-    return {name: cls.estimate_cost(spec, b, profile)
-            for name, cls in F.FORMATS.items()}
+    costs = {name: cls.estimate_cost(spec, b, profile)
+             for name, cls in F.FORMATS.items()}
+    if tp > 1 and stack.d_out % tp == 0:
+        for name, cls in F.FORMATS.items():
+            costs[f"{name}@tp{tp}"] = cls.estimate_cost_sharded(spec, b,
+                                                                profile, tp)
+    return costs
 
 
 def select_representation(stack, *, batch_size: int, itemsize: int,
                           stats: COND.ExportStats,
                           profile: HardwareProfile = DEFAULT_PROFILE,
-                          values_dtype: str | None = None) -> StackDecision:
+                          values_dtype: str | None = None,
+                          tp: int = 1) -> StackDecision:
     """Cost-model choice among EXACT representations for one stack.
 
     The always-exact candidates are masked, plain condensed, and — once
@@ -283,21 +350,33 @@ def select_representation(stack, *, batch_size: int, itemsize: int,
     bandwidth-bound shapes of ablation-only stacks outright and cedes to
     masked at large batch where its fused scatter epilogue's extra MXU term
     outweighs the column saving.
+
+    With ``tp > 1`` every non-masked candidate enters TWICE — replicated
+    (plain HBM price) and neuron-axis sharded (``1/tp`` shapes plus the
+    output all-gather) — and the winner fixes both ``representation`` and
+    ``StackDecision.tp``. Masked-dense stays the data-parallel replica path
+    (its sharded price is defined as its replicated price), so "replicate
+    and ride the MXU" remains the honest large-batch answer under TP.
     """
+    tp = tp if tp > 1 and stack.d_out % tp == 0 else 1
     costs = stack_costs(stack, batch_size=batch_size, itemsize=itemsize,
                         k=max(stats.k, 1),
                         active_fraction=stats.active_fraction, profile=profile,
                         max_active_fraction=_max_active_fraction(stack, stats),
-                        values_dtype=values_dtype)
+                        values_dtype=values_dtype, tp=tp)
     has_ablation = stats.active_fraction < 1.0 - _ABLATION_EPS
     cands = ("masked", "condensed")
     if has_ablation:
         cands += ("condensed_over_active",)
         if stats.min_fan_in >= stack.d_in:
             cands += ("structured",)
-    rep = min(cands, key=lambda r: costs[r])
+    options = [(costs[r], r, 1) for r in cands]
+    if tp > 1:
+        options += [(costs[f"{r}@tp{tp}"], r, tp) for r in cands
+                    if r != "masked"]
+    _, rep, dec_tp = min(options, key=lambda o: o[0])
     return StackDecision(name=stack.name, representation=rep, est_s=costs,
-                         stats=stats)
+                         stats=stats, tp=dec_tp)
 
 
 def _max_active_fraction(stack, stats: COND.ExportStats) -> float:
@@ -307,7 +386,7 @@ def _max_active_fraction(stack, stats: COND.ExportStats) -> float:
 
 
 def _build_leaf(rep: str, weight, mask, stats: COND.ExportStats,
-                values_dtype: str | None = None) -> F.SparseFormat:
+                values_dtype: str | None = None, tp: int = 1) -> F.SparseFormat:
     """Construct the format object for one stack (export_from_dense).
 
     ``values_dtype`` becomes the export's ``quantize_spec`` for the formats
@@ -315,33 +394,47 @@ def _build_leaf(rep: str, weight, mask, stats: COND.ExportStats,
     execution time and has nothing to quantize, so it ignores the request
     (documented engine behavior: a quantized plan serves masked stacks at
     the param dtype).
+
+    ``tp > 1`` exports the leaf in its neuron-axis block layout
+    (``tp_shards``); masked-dense has no sharded layout (it serves as
+    data-parallel replicas) and ignores it.
     """
     try:
         cls = F.FORMATS[rep]
     except KeyError:
         raise ValueError(f"unknown representation {rep!r}") from None
-    if values_dtype is not None and rep != "masked":
-        return cls.export_from_dense(weight, mask, stats,
-                                     quantize_spec=values_dtype)
-    return cls.export_from_dense(weight, mask, stats)
+    if rep == "masked":
+        return cls.export_from_dense(weight, mask, stats)
+    kwargs = {"tp_shards": tp} if tp > 1 else {}
+    if values_dtype is not None:
+        kwargs["quantize_spec"] = values_dtype
+    return cls.export_from_dense(weight, mask, stats, **kwargs)
 
 
 def _decide(stack, path: str, *, batch_size: int, itemsize: int,
             stats: COND.ExportStats, profile: HardwareProfile,
-            values_dtype: str | None = None) -> StackDecision:
+            values_dtype: str | None = None, tp: int = 1) -> StackDecision:
     """One stack's decision: cost-model choice for "auto", forced otherwise.
-    Shared by build_plan and Plan.refresh so the two can never diverge."""
+    Shared by build_plan and Plan.refresh so the two can never diverge.
+
+    Under a forced path with ``tp > 1`` the representation is pinned but the
+    leaf still shards (that is what serving the path on a model mesh means);
+    masked-dense and non-divisible stacks stay replicated.
+    """
     if path == "auto":
         return select_representation(stack, batch_size=batch_size,
                                      itemsize=itemsize, stats=stats,
-                                     profile=profile, values_dtype=values_dtype)
+                                     profile=profile, values_dtype=values_dtype,
+                                     tp=tp)
+    tp = tp if tp > 1 and stack.d_out % tp == 0 else 1
     costs = stack_costs(stack, batch_size=batch_size, itemsize=itemsize,
                         k=max(stats.k, 1),
                         active_fraction=stats.active_fraction, profile=profile,
                         max_active_fraction=_max_active_fraction(stack, stats),
-                        values_dtype=values_dtype)
+                        values_dtype=values_dtype, tp=tp)
+    dec_tp = tp if path != "masked" else 1
     return StackDecision(name=stack.name, representation=path, est_s=costs,
-                         stats=stats)
+                         stats=stats, tp=dec_tp)
 
 
 def _host_versions(mask_versions: dict) -> dict[str, int]:
@@ -370,6 +463,7 @@ class Plan:
     serving_tree: dict
     mask_versions: dict[str, int]  # stack name -> version at last export
     values_dtype: str | None = None  # canonical quantize spec (None = param dtype)
+    tp: int = 1                    # model-axis size the plan was built for
     export_calls: int = 0
     value_refreshes: int = 0       # cheap values-only regathers (no re-sort)
 
@@ -424,7 +518,7 @@ class Plan:
                 dec = _decide(s, self.path, batch_size=self.batch_size,
                               itemsize=itemsize, stats=stats[s.name],
                               profile=self.profile,
-                              values_dtype=self.values_dtype)
+                              values_dtype=self.values_dtype, tp=self.tp)
                 old_rep = self.decisions[s.name].representation
                 old_leaf = REG.get_path(self.serving_tree, s.path)
                 weight = REG.get_path(params, s.path)
@@ -435,10 +529,11 @@ class Plan:
                     leaf = COND.recondense_stack_leaf(
                         weight, mask, stats[s.name], old_leaf,
                         over_active=(rep == "condensed_over_active"),
-                        donate=donate, quantize_spec=self.values_dtype)
+                        donate=donate, quantize_spec=self.values_dtype,
+                        tp=dec.tp)
                 else:
                     leaf = _build_leaf(rep, weight, mask, stats[s.name],
-                                       self.values_dtype)
+                                       self.values_dtype, tp=dec.tp)
                 self.decisions[s.name] = dec
                 REG.set_path(self.serving_tree, s.path, leaf)
                 self.mask_versions[s.name] = versions[s.name]
@@ -477,14 +572,27 @@ class Plan:
             masked_ref += F.MaskedDense.estimate_weight_bytes(spec)
         return serving, masked_ref
 
-    def describe(self) -> str:
+    def describe(self, requested_batch: int | None = None) -> str:
+        """Human-readable plan table.
+
+        ``requested_batch`` is the caller's ACTUAL batch; when it differs
+        from the bucket the plan was priced/compiled at, both are printed —
+        "batch=2 (bucket 8)" — so a bucketed engine never silently reports
+        a batch the user did not ask for.
+        """
         vd = f" values_dtype={self.values_dtype}" if self.values_dtype else ""
-        lines = [f"[plan] path={self.path} batch={self.batch_size} "
-                 f"profile={self.profile.name}{vd}"]
+        tp_s = f" tp={self.tp}" if self.tp > 1 else ""
+        batch_s = f"batch={self.batch_size}"
+        if requested_batch is not None and int(requested_batch) != self.batch_size:
+            batch_s = f"batch={int(requested_batch)} (bucket {self.batch_size})"
+        lines = [f"[plan] path={self.path} {batch_s} "
+                 f"profile={self.profile.name}{tp_s}{vd}"]
         for name, dec in self.decisions.items():
-            est = dec.est_s[dec.representation]
+            est = dec.est_s.get(dec.cost_key, dec.est_s[dec.representation])
+            rep_s = (f"{dec.representation}@tp{dec.tp}" if dec.tp > 1
+                     else dec.representation)
             lines.append(
-                f"[plan]   {name:24s} -> {dec.representation:22s} "
+                f"[plan]   {name:24s} -> {rep_s:22s} "
                 f"(est {est * 1e6:8.3f} us/step, k={dec.stats.k}, "
                 f"active={dec.active_fraction:.2f})")
         return "\n".join(lines)
@@ -494,7 +602,7 @@ def build_plan(cfg, registry, params: dict, masks: dict, *,
                batch_size: int = 1, path: str = "auto",
                mask_versions: dict | None = None,
                profile: HardwareProfile = DEFAULT_PROFILE,
-               values_dtype: str | None = None) -> Plan:
+               values_dtype: str | None = None, tp: int = 1) -> Plan:
     """Build the per-stack execution plan for a request batch shape.
 
     ``path="auto"`` selects per stack by the cost model; a fixed path name
@@ -508,10 +616,17 @@ def build_plan(cfg, registry, params: dict, masks: dict, *,
     The choice is part of the PLAN, not the per-request key: ``refresh``
     re-exports under the same spec, so a live job never silently changes
     serving precision.
+
+    ``tp`` is the mesh's model-axis size: each stack's decision then also
+    carries a per-stack shard count (``StackDecision.tp`` — the collective-
+    priced cost model can keep individual stacks replicated), and sharded
+    leaves are exported in their block layout so ``ShardingRules`` can
+    partition them over the model axis.
     """
     if path not in PATHS:
         raise ValueError(f"unknown serving path {path!r}; expected one of {PATHS}")
     vd = F.resolve_quantize_spec(values_dtype)
+    tp = max(int(tp), 1)
     registry = list(registry or [])
     versions = (_host_versions(mask_versions) if mask_versions is not None
                 else {s.name: 0 for s in registry})
@@ -523,18 +638,19 @@ def build_plan(cfg, registry, params: dict, masks: dict, *,
     calls = 0
     for s in registry:
         dec = _decide(s, path, batch_size=batch_size, itemsize=itemsize,
-                      stats=stats[s.name], profile=profile, values_dtype=vd)
+                      stats=stats[s.name], profile=profile, values_dtype=vd,
+                      tp=tp)
         decisions[s.name] = dec
         REG.set_path(tree, s.path,
                      _build_leaf(dec.representation,
                                  REG.get_path(params, s.path),
                                  REG.get_path(masks, s.path), stats[s.name],
-                                 vd))
+                                 vd, tp=dec.tp))
         calls += 1
     return Plan(cfg=cfg, registry=registry, path=path, batch_size=batch_size,
                 profile=profile, decisions=decisions, serving_tree=tree,
                 mask_versions={s.name: versions.get(s.name, 0) for s in registry},
-                values_dtype=vd, export_calls=calls)
+                values_dtype=vd, tp=tp, export_calls=calls)
 
 
 # ---------------------------------------------------------------------------
@@ -542,23 +658,51 @@ def build_plan(cfg, registry, params: dict, masks: dict, *,
 # ---------------------------------------------------------------------------
 
 def plan_for_shape(cfg, registry, *, batch_size: int,
-                   profile: HardwareProfile = DEFAULT_PROFILE) -> dict[str, str]:
+                   profile: HardwareProfile = DEFAULT_PROFILE,
+                   tp: int = 1) -> dict[str, str]:
     """Representation choice per stack from STATIC info only (target ERK
     densities, no realized masks — so no ablation is assumed). Used by the
-    dry-run to pick what to lower for a given serving shape."""
+    dry-run to pick what to lower for a given serving shape. ``tp`` prices
+    the choice on a model mesh (collective included)."""
     itemsize = jnp.dtype(cfg.param_dtype).itemsize
     out = {}
     for s in registry:
         stats = COND.ExportStats(k=D.fan_in_from_density(s.d_in, s.density),
                                  max_active=s.d_out, active_fraction=1.0)
         dec = select_representation(s, batch_size=batch_size, itemsize=itemsize,
-                                    stats=stats, profile=profile)
+                                    stats=stats, profile=profile, tp=tp)
         out[s.name] = dec.representation
     return out
 
 
+def tp_crossover_batch(stack, *, itemsize: int, stats: COND.ExportStats,
+                       tp: int, profile: HardwareProfile = DEFAULT_PROFILE,
+                       values_dtype: str | None = None,
+                       max_batch: int = 4096) -> int | None:
+    """Smallest power-of-two batch at which the collective-priced cost model
+    stops sharding this stack — i.e. the auto decision's ``tp`` falls back
+    to 1 (replicate, ride HBM/MXU) instead of paying the all-gather.
+
+    At decode shapes sharding wins (1/tp of the weight stream against a
+    tiny collective); the collective term grows linearly in batch while the
+    replicated MXU path amortizes, so past the crossover replication wins.
+    Returns None when sharding still wins at ``max_batch`` (collective
+    cheaper than the per-shard saving throughout). This is the per-arch
+    prediction benchmarks/serve_paths.py records (schema v6).
+    """
+    b = 1
+    while b <= max_batch:
+        dec = select_representation(stack, batch_size=b, itemsize=itemsize,
+                                    stats=stats, profile=profile,
+                                    values_dtype=values_dtype, tp=tp)
+        if dec.tp == 1:
+            return b
+        b *= 2
+    return None
+
+
 def abstract_serving_tree(cfg, registry, reps: dict[str, str],
-                          param_dtype=None) -> dict:
+                          param_dtype=None, tp: int = 1) -> dict:
     """ShapeDtypeStruct serving pytree for ``reps`` (no allocation).
 
     Leaves are format objects with ShapeDtypeStruct fields (each format's
@@ -566,8 +710,13 @@ def abstract_serving_tree(cfg, registry, reps: dict[str, str],
     active uses a = d_out as the static bound (the dry-run has no realized
     ablation counts); the concrete export shrinks a to the real max
     active-neuron count.
+
+    ``tp > 1`` builds every non-masked leaf in its block layout (stacks
+    whose ``d_out`` the shard count does not divide stay replicated, as in
+    ``build_plan``).
     """
     dt = jnp.dtype(param_dtype or cfg.param_dtype)
+    tp = max(int(tp), 1)
     out: dict = {}
     for s in registry:
         rep = reps[s.name]
@@ -576,5 +725,10 @@ def abstract_serving_tree(cfg, registry, reps: dict[str, str],
         except KeyError:
             raise ValueError(f"unknown representation {rep!r}") from None
         k = D.fan_in_from_density(s.d_in, s.density)
-        REG.set_path(out, s.path, cls.abstract(s.lead, s.d_in, s.d_out, k, dt))
+        tp_s = tp if (rep != "masked" and s.d_out % tp == 0) else 1
+        if tp_s > 1:
+            leaf = cls.abstract(s.lead, s.d_in, s.d_out, k, dt, tp=tp_s)
+        else:
+            leaf = cls.abstract(s.lead, s.d_in, s.d_out, k, dt)
+        REG.set_path(out, s.path, leaf)
     return out

@@ -114,7 +114,8 @@ def test_serve_main_cli_auto_plans_and_matches_masked(capsys):
     np.testing.assert_array_equal(np.array(out_masked), np.array(out_auto))
     logs = capsys.readouterr().out
     # the engine plans at the request's BATCH BUCKET (shared with the
-    # autotune cache keys), so --batch 2 is planned at bucket 8
-    assert "[plan] path=auto batch=8" in logs
+    # autotune cache keys), so --batch 2 is planned at bucket 8 — and the
+    # printout must say BOTH, not silently swap the requested batch
+    assert "[plan] path=auto batch=2 (bucket 8)" in logs
     assert "-> condensed" in logs  # B=2 is decode-like: gather wins
     assert "[serve:auto]" in logs

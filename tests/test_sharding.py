@@ -45,8 +45,8 @@ def test_param_specs_divisible(name):
     state_sds = jax.eval_shape(lambda k: init_train_state(cfg, k), jax.random.PRNGKey(0))
 
     def check(tree):
-        def f(path, leaf):
-            spec = rules.param_spec(path, leaf)
+        def f(path, leaf, fmt=None):
+            spec = rules.param_spec(path, leaf, fmt)
             _check_divisible(path, leaf, spec, mesh.shape)
         _map_with_path(f, tree)
 
@@ -67,7 +67,7 @@ def test_cache_specs_divisible(name):
         cache_sds = jax.eval_shape(
             lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
 
-        def f(path, leaf):
+        def f(path, leaf, fmt=None):
             spec = rules.cache_spec(path, leaf, global_batch=shape.global_batch)
             _check_divisible(path, leaf, spec, mesh.shape)
 
@@ -90,7 +90,7 @@ def test_paged_pool_specs_page_sharded_and_divisible(name):
         pool_sds = jax.eval_shape(
             lambda: M.init_paged_pool(cfg, shape.global_batch * nb, 16))
 
-        def f(path, leaf):
+        def f(path, leaf, fmt=None):
             spec = rules.cache_spec(path, leaf,
                                     global_batch=shape.global_batch)
             _check_divisible(path, leaf, spec, mesh.shape)
@@ -156,6 +156,68 @@ def test_single_device_mesh_runs_sharded_step():
         float(jax.tree.leaves(state.params)[0].sum()), rel=1e-6)
 
 
+def test_opt_state_factored_drop_of_a_sharded_axis():
+    """Adafactor vr/vc drop one weight axis — when the DROPPED axis is the
+    sharded one, the resulting spec must lose that mesh axis entirely (not
+    shift it onto a surviving dim), and when the dropped axis is unsharded
+    the surviving sharding must stay put."""
+    from repro.launch.mesh import make_host_mesh
+    cfg = configs.get_config("qwen3-1.7b")
+    mesh = make_host_mesh()  # real mesh: opt_state builds NamedShardings
+    rules = ShardingRules(cfg, mesh)
+    cp = (cfg.n_layers, cfg.d_model, cfg.d_ff)   # w_gate: P(None, None, 'model')
+    rp = (cfg.n_layers, cfg.d_ff, cfg.d_model)   # w_down: P(None, 'model', None)
+    params = {"blocks": {"w_gate": _Leaf(cp), "w_down": _Leaf(rp)}}
+    assert rules.param_spec(("blocks", "w_gate"), _Leaf(cp)) == P(None, None, "model")
+    assert rules.param_spec(("blocks", "w_down"), _Leaf(rp)) == P(None, "model", None)
+    opt = {"count": _Leaf(()),
+           "v": {"blocks": {
+               "w_gate": {"vr": _Leaf(cp[:-1]), "vc": _Leaf(cp[:-2] + cp[-1:])},
+               "w_down": {"vr": _Leaf(rp[:-1]), "vc": _Leaf(rp[:-2] + rp[-1:])},
+           }}}
+    out = rules.opt_state(opt, params)
+    g, d = out["v"]["blocks"]["w_gate"], out["v"]["blocks"]["w_down"]
+    # col-parallel: vr drops the SHARDED last axis -> 'model' gone;
+    #               vc drops the unsharded -2 axis -> 'model' survives at -1
+    assert g["vr"].spec == P(None, None)
+    assert g["vc"].spec == P(None, "model")
+    # row-parallel: vr drops the unsharded last axis -> 'model' survives;
+    #               vc drops the SHARDED -2 axis -> 'model' gone
+    assert d["vr"].spec == P(None, "model")
+    assert d["vc"].spec == P(None, None)
+    # rank always matches the factored stat's rank (spec never longer)
+    for leafs, specs in ((opt["v"]["blocks"], out["v"]["blocks"]),):
+        for w in specs:
+            for stat in specs[w]:
+                assert len(specs[w][stat].spec) == leafs[w][stat].ndim
+
+
+def test_paged_pool_page_axis_fallback_when_indivisible():
+    """pk/pv shard the PAGE axis over the batch axes only when the page
+    count divides them — an odd page count must fall back to an unsharded
+    page axis (not raise, not emit an indivisible spec)."""
+    cfg = configs.get_config("qwen3-1.7b")
+    mesh = FakeMesh({"data": 16, "model": 16})
+    rules = ShardingRules(cfg, mesh)
+    hkv, hd = cfg.n_kv_heads_padded, cfg.head_dim
+    lead = (cfg.n_layers,)
+    # 32 pages divide the 16-way batch axis: page axis sharded
+    spec = rules.cache_spec(("cache", "pk"), _Leaf(lead + (32, 16, hkv, hd)),
+                            global_batch=16)
+    assert spec[-4] is not None
+    _check_divisible(("pk",), _Leaf(lead + (32, 16, hkv, hd)), spec, mesh.shape)
+    # 17 pages do NOT divide: clean fallback to an unsharded page axis,
+    # every other axis unchanged
+    spec = rules.cache_spec(("cache", "pk"), _Leaf(lead + (17, 16, hkv, hd)),
+                            global_batch=16)
+    assert spec == P(*([None] * len(lead) + [None, None, None, None]))
+    # batch itself unsharded (global_batch=1): page axis must not pick up
+    # the batch axes either, whatever the page count
+    spec = rules.cache_spec(("cache", "pv"), _Leaf(lead + (32, 16, hkv, hd)),
+                            global_batch=1)
+    assert spec[-4] is None
+
+
 def test_masked_dense_format_leaf_shards_like_its_weight():
     """A MaskedDense serving leaf has the weight's (lead, d_in, d_out) shape
     and must inherit the weight's TP sharding — the legacy bare-bool masked
@@ -173,5 +235,5 @@ def test_masked_dense_format_leaf_shards_like_its_weight():
 
     # and through the tree mapper: a serving tree with a MaskedDense node
     tree = {"blocks": {"wo": F.MaskedDense(mask=_Leaf(shape))}}
-    specs = _map_with_path(lambda p, l: rules.param_spec(p, l), tree)
+    specs = _map_with_path(lambda p, l, f: rules.param_spec(p, l, f), tree)
     assert specs["blocks"]["wo"].mask == weight_spec
