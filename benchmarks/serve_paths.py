@@ -79,7 +79,13 @@ from repro.sparse import registry as REG
 # beating the replicated path (plan.tp_crossover_batch, at the arch's FULL
 # production dims so the prediction is about real stacks, not the smoke
 # model). Pure cost-model arithmetic: measured timings stay single-device.
-SCHEMA_VERSION = 6
+# v7: kind="sync" row — the live train->serve stream's price: full-snapshot
+# vs values-only vs topology delta bytes over the file channel
+# (delta_vs_snapshot is the wire-traffic ratio continuous sync saves), and
+# the p50/p99 per-decode-chunk latency of a subscribed engine with a
+# topology delta landing MID-STREAM vs an undisturbed baseline (the cost of
+# draining + donated adoption at a chunk boundary).
+SCHEMA_VERSION = 7
 
 BATCHES = (1, 32, 256)
 ABLATIONS = (0.0, 0.5)
@@ -462,6 +468,118 @@ def run_scheduler(arch: str = "qwen3-1.7b", *, n_requests: int = 24,
     return rows
 
 
+def run_sync(arch: str = "qwen3-1.7b", *, req_batch: int = 2,
+             gen_len: int = 32, gen_chunk: int = 4, seed: int = 0,
+             results: list | None = None):
+    """The live train->serve sync stream's price (repro.sync, schema v7).
+
+    Publishes a snapshot + one values-only + one topology delta over the
+    FILE channel and records their wire sizes, then measures per-chunk
+    decode latency on a subscribed engine twice: an undisturbed baseline
+    run, and a run where a topology delta lands mid-stream (published after
+    the second chunk, drained + donation-adopted at the next boundary). The
+    p99 delta between the two runs is the mid-stream update's cost.
+    """
+    import tempfile
+
+    from repro.sync import DirChannel, Publisher, Subscriber, \
+        engine_from_snapshot
+
+    cfg = configs.get_smoke_config(arch)
+    key = jax.random.PRNGKey(seed)
+    reg = REG.build_registry(cfg)
+    params = M.init_params(cfg, key, REG.k_fan_map(cfg, reg))
+    masks = REG.init_sparsity_state(cfg, key, reg)["masks"]
+    versions = {s.name: 0 for s in reg}
+    rng = np.random.default_rng(seed)
+    rows = []
+
+    def evolve(params, masks, versions, *, rewire):
+        params = jax.tree.map(
+            lambda x: x * 1.001 if jnp.issubdtype(x.dtype, jnp.floating)
+            else x, params)
+        if rewire:
+            s = reg[0]
+            masks = jax.tree.map(lambda x: x, masks)
+            REG.set_path(masks, s.path,
+                         jnp.roll(REG.get_path(masks, s.path), 1, axis=-2))
+            versions = dict(versions)
+            versions[s.name] += 1
+        return params, masks, versions
+
+    with tempfile.TemporaryDirectory(prefix="repro-sync-bench-") as tmp:
+        pub = Publisher(cfg, reg, DirChannel(tmp), path="condensed",
+                        batch_size=req_batch, arch=arch)
+        snap = pub.publish(params=params, masks=masks,
+                           mask_versions=versions)
+        params, masks, versions = evolve(params, masks, versions,
+                                         rewire=False)
+        vals = pub.publish(params=params, masks=masks,
+                           mask_versions=versions)
+        params, masks, versions = evolve(params, masks, versions,
+                                         rewire=True)
+        topo = pub.publish(params=params, masks=masks,
+                           mask_versions=versions)
+
+        sub = Subscriber(DirChannel(tmp).subscribe("bench"), name="bench")
+        sub.wait_for_bootstrap(timeout=10.0)
+        engine = engine_from_snapshot(cfg, sub, registry=reg,
+                                      gen_chunk=gen_chunk)
+        prompts = rng.integers(0, cfg.vocab_size,
+                               (req_batch, PROMPT_LEN)).astype(np.int32)
+
+        def chunk_latencies(publish_mid: bool):
+            nonlocal params, masks, versions
+            rid = engine.submit(prompts, gen_len)
+            lats, chunks = [], 0
+            while True:
+                # after the first step (prefill + chunk 1): even the smoke
+                # grid's short generations get a genuine mid-stream update
+                if publish_mid and chunks == 1:
+                    params, masks, versions = evolve(
+                        params, masks, versions, rewire=True)
+                    pub.publish(params=params, masks=masks,
+                                mask_versions=versions)
+                t0 = time.perf_counter()
+                engine.step(max_chunks=1)
+                lats.append(time.perf_counter() - t0)
+                chunks += 1
+                if engine.retire(rid):
+                    break
+            return lats[1:]          # drop the prefill+first-chunk step
+
+        chunk_latencies(False)       # warm every program signature
+        base = chunk_latencies(False)
+        mid = chunk_latencies(True)
+
+    b50, b99 = (float(x) for x in np.percentile(base, [50, 99]))
+    m50, m99 = (float(x) for x in np.percentile(mid, [50, 99]))
+    ratio = topo["bytes"] / max(snap["bytes"], 1)
+    rows.append(("serve_paths/sync/delta_vs_snapshot", ratio * 100,
+                 f"snapshot_B={snap['bytes']};values_delta_B={vals['bytes']};"
+                 f"topology_delta_B={topo['bytes']};"
+                 f"midstream_p99_ms={m99 * 1e3:.1f};"
+                 f"baseline_p99_ms={b99 * 1e3:.1f}"))
+    if results is not None:
+        results.append({
+            "arch": arch, "path": "condensed", "kind": "sync",
+            "req_batch": req_batch, "gen_len": gen_len,
+            "gen_chunk": gen_chunk,
+            "snapshot_bytes": snap["bytes"],
+            "values_delta_bytes": vals["bytes"],
+            "topology_delta_bytes": topo["bytes"],
+            "delta_vs_snapshot": round(ratio, 4),
+            "values_delta_vs_snapshot": round(
+                vals["bytes"] / max(snap["bytes"], 1), 4),
+            "chunk_p50_ms_baseline": round(b50 * 1e3, 3),
+            "chunk_p99_ms_baseline": round(b99 * 1e3, 3),
+            "chunk_p50_ms_midstream_update": round(m50 * 1e3, 3),
+            "chunk_p99_ms_midstream_update": round(m99 * 1e3, 3),
+            "final_generation": pub.generation,
+        })
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -511,6 +629,7 @@ def main(argv=None):
                           reps=args.reps, results=results)
     rows += run_tp_crossover(arch=args.arch, tp=args.tp, profile=profile,
                              results=results)
+    rows += run_sync(arch=args.arch, gen_len=gen_len, results=results)
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     if args.out:

@@ -315,6 +315,55 @@ def main():
         print(proc.stdout[-2000:], proc.stderr[-2000:])
         raise SystemExit("serve_tp dryrun failed")
 
+    # 12. live train->serve sync (repro.sync): the model keeps TRAINING
+    #     while replicas SERVE it. The trainer publishes versioned records
+    #     to a sync directory — generation 1 is a full Snapshot (bootstrap),
+    #     then one Delta per publish: stacks whose mask_versions moved ship
+    #     their condensed indices+values (a "topology" record — the
+    #     condensed format IS the wire format), unchanged stacks ship
+    #     values-only, and the dense non-stack params ride along. Subscriber
+    #     replicas tail the directory and apply each generation
+    #     all-or-nothing at paged-chunk boundaries through the DONATED
+    #     adoption path (no weight-memory doubling, no decode recompiles);
+    #     stale/duplicate records drop, a gap triggers a full-snapshot
+    #     resync via the request-file back-channel. Below: publish in THIS
+    #     process while `serve.py --sync-dir` subscribes as a second
+    #     process — the production topology, two processes sharing only a
+    #     directory.
+    import tempfile
+    from repro.sync import DirChannel, Publisher
+    sync_dir = tempfile.mkdtemp(prefix="repro-sync-")
+    pub = Publisher(cfg, registry, DirChannel(sync_dir), path="condensed",
+                    batch_size=2, arch="qwen3-1.7b")
+    info = pub.publish(state)
+    print(f"sync: gen {info['generation']} {info['kind']} "
+          f"{info['bytes']} B -> {sync_dir}")
+    # a few more training steps: values-only deltas between DST updates,
+    # a topology delta when the schedule rewires
+    for i in range(60, 75):
+        batch = jax.tree.map(jnp.asarray, data.batch(i))
+        state, metrics = step(state, batch)
+        if bool(sched.is_update_step(i + 1)):
+            state = dst(state, batch)
+        info = pub.publish(state)
+        if info["topology"] or i % 5 == 0:
+            print(f"sync: gen {info['generation']:2d} "
+                  f"{'topology ' + str(info['topology']) if info['topology'] else 'values-only'}"
+                  f" ({info['bytes']} B: topo {info['topology_bytes']} + "
+                  f"values {info['values_bytes']} + dense "
+                  f"{info['dense_bytes']})")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen3-1.7b",
+         "--smoke", "--path", "condensed", "--batch", "2", "--prompt-len",
+         "8", "--gen", "8", "--sync-dir", sync_dir],
+        capture_output=True, text=True)
+    for line in proc.stdout.splitlines():
+        if "[serve" in line:
+            print(f"subscriber| {line}")
+    if proc.returncode:
+        print(proc.stdout[-2000:], proc.stderr[-2000:])
+        raise SystemExit("serve --sync-dir failed")
+
 
 if __name__ == "__main__":
     main()

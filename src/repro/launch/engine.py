@@ -597,6 +597,12 @@ class ServingEngine:
         self._pending: list[Request] = []
         self._done: dict[int, Result] = {}
         self._next_id = 0
+        # live train->serve sync (repro.sync): a subscriber drained at
+        # paged-chunk boundaries, applying published deltas through the
+        # donated adoption path
+        self._subscriber = None
+        self._sync_generation: int | None = None
+        self._sync_donate = True
 
     # -- stats / keys -------------------------------------------------------
 
@@ -631,6 +637,12 @@ class ServingEngine:
                 batch_size=key.batch_bucket, path=self.path,
                 mask_versions=self._mask_versions, profile=self.profile,
                 values_dtype=self.values_dtype, tp=key.tp)
+            if (self._subscriber is not None
+                    and self._subscriber.generation is not None):
+                # the local (params, masks) may lag the stream (sync only
+                # rewrites stack leaves in EXISTING plans) — bring the
+                # fresh plan straight to the subscribed generation
+                self._apply_sync_to_plan(plan, self._subscriber, force=True)
             self._plans[key] = plan
         return plan
 
@@ -697,6 +709,7 @@ class ServingEngine:
         fuse into exact-shape slabs, split at the bucket boundary so no
         dispatch exceeds ``key.batch_bucket``.
         """
+        self._drain_sync()          # an idle engine still tracks the stream
         if not self.paged:
             return self._step_legacy(quiet)
 
@@ -717,6 +730,11 @@ class ServingEngine:
             admitted_ids: list[int] = []
             n_prefills = total_b = chunks = 0
             while True:
+                # chunk boundary: published deltas land HERE, between
+                # decode dispatches, never mid-scan — each chunk runs
+                # against exactly one committed generation
+                if chunks:
+                    self._drain_sync()
                 # requests leave the pending queue only once their prefill
                 # has actually executed: an exception mid-step (plan build,
                 # compile, OOM) must not silently drop queued work
@@ -755,6 +773,7 @@ class ServingEngine:
         plan (and its tuned kernels) is calibrated at ``key.batch_bucket``,
         so a fused slab must never exceed it.
         """
+        self._drain_sync()
         groups: dict[PlanKey, list[Request]] = {}
         for req in self._pending:
             groups.setdefault(self.plan_key(req.prompts.shape[0]),
@@ -833,14 +852,176 @@ class ServingEngine:
         (incremental: only stacks whose version counter moved re-condense;
         the rest get values-only regathers — see ``Plan.refresh``). The
         engine's own (params, masks) references move to the new trees and
-        the realized-stats cache is invalidated."""
+        the realized-stats cache is invalidated.
+
+        The version counters are fetched ONCE (host-side cache: a later
+        no-op refresh with the returned host ints does zero device syncs)
+        and one shared ``export_cache`` dedupes the donated re-export
+        across plan keys — a stack referenced by N cached plans condenses
+        once per generation, every plan adopting the same leaf object."""
         self.params = params
         self.masks = masks or {}
         self._stats = None
-        self._mask_versions = mask_versions
-        return {key: plan.refresh(params, self.masks, mask_versions,
-                                  donate=donate)
+        versions = PLAN._host_versions(mask_versions)
+        self._mask_versions = versions
+        cache: dict = {}
+        return {key: plan.refresh(params, self.masks, versions,
+                                  donate=donate, export_cache=cache)
                 for key, plan in self._plans.items()}
+
+    # -- streamed sync (repro.sync subscriber) ------------------------------
+
+    def attach_subscriber(self, subscriber, *, donate: bool = True) -> None:
+        """Attach a ``repro.sync.Subscriber``: pending deltas drain at
+        paged-chunk boundaries (and at the top of every ``step``) and apply
+        through the donated adoption path — published leaves overwrite the
+        replica's existing buffers in place, zero weight-memory doubling.
+
+        Only condensed-family fixed paths can subscribe: ``masked`` /
+        ``structured`` / ``auto`` plans read the LIVE ``self.params`` at
+        execution time, which a remote byte stream cannot keep current.
+        ``donate=False`` is for engines sharing buffers with another live
+        object (e.g. an in-process trainer)."""
+        if self.path not in ("condensed", "condensed_over_active"):
+            raise ValueError(
+                f"attach_subscriber requires a condensed-family path; "
+                f"path={self.path!r} reads live weights at execution time")
+        if subscriber.generation is not None:
+            self._check_sync_meta(subscriber.meta)
+            # the engine is (assumed) built from the subscriber's current
+            # state — clear the bootstrap's pending-change tracking so the
+            # first drain only applies generations AFTER this one
+            subscriber.consume_changes()
+        # decouple the containers so sync writes never mutate a caller's
+        # params tree in place (leaves still alias until first adoption)
+        self.params = jax.tree_util.tree_map(lambda x: x, self.params)
+        self._subscriber = subscriber
+        self._sync_donate = bool(donate)
+        self._sync_generation = subscriber.generation
+
+    def _check_sync_meta(self, meta: dict) -> None:
+        for field, mine in (("path", self.path),
+                            ("values_dtype", self.values_dtype),
+                            ("tp", self.tp)):
+            theirs = meta.get(field, mine)
+            if theirs != mine:
+                raise ValueError(
+                    f"sync stream {field}={theirs!r} does not match engine "
+                    f"{field}={mine!r}; rebuild the engine to match the "
+                    f"published layout")
+
+    def _drain_sync(self) -> bool:
+        """Poll the attached subscriber and apply any newly committed
+        generations. Called at chunk boundaries — between dispatches, never
+        mid-scan — so every in-flight decode chunk ran against ONE coherent
+        generation. Returns True if state moved."""
+        sub = self._subscriber
+        if sub is None:
+            return False
+        sub.poll()
+        if sub.generation is None or sub.generation == self._sync_generation:
+            return False
+        self._check_sync_meta(sub.meta)
+        changes = sub.consume_changes()
+        if changes["snapshot"]:
+            self.masks = sub.masks_tree()
+        self._apply_sync_params(sub, changes)
+        for plan in self._plans.values():
+            self._apply_sync_to_plan(plan, sub, changes=changes)
+        self._mask_versions = dict(sub.mask_versions)
+        self._stats = None
+        self._sync_generation = sub.generation
+        return True
+
+    def _apply_sync_params(self, sub, changes: dict) -> None:
+        """Adopt changed dense (non-stack) param leaves — embeddings and
+        norms keep training between topology updates and matter for token
+        identity."""
+        paths = (set(sub.params) if changes["snapshot"]
+                 else changes["dense"])
+        stack_names = {s.name for s in self.registry}
+        for path in paths:
+            if path in stack_names:
+                continue
+            parts = tuple(path.split("/"))
+            try:
+                old = REG.get_path(self.params, parts)
+            except (KeyError, TypeError):
+                old = None
+            REG.set_path(self.params, parts,
+                         F.adopt_array(sub.params[path], old,
+                                       donate=self._sync_donate))
+
+    def _leaf_from_wire(self, rec):
+        """Build a device-side format leaf from a topology StackDelta."""
+        cls = F.FORMATS[rec.format]
+        kw = dict(rec.static)
+        for f in cls._array_fields:
+            arr = rec.arrays.get(f)
+            kw[f] = jnp.asarray(arr) if arr is not None else None
+        return cls(**kw)
+
+    def _apply_sync_to_plan(self, plan, sub, *, changes: dict | None = None,
+                            force: bool = False) -> None:
+        """Adopt the subscriber's merged per-stack records into one plan.
+
+        Same layout (class, statics, per-field shapes) -> in-place donated
+        adoption of exactly the changed fields: the leaf keeps its avals,
+        so every jitted program serving this plan stays a cache hit (no
+        recompile of unchanged plan keys). A layout change (k or active-row
+        count moved) rebuilds the leaf — that shape legitimately compiles
+        fresh. ``force=True`` adopts every stack regardless of pending
+        change tracking (used right after a lazily built plan exported from
+        the engine's possibly stale local state)."""
+        pending = (changes or {}).get("stacks", {})
+        snapshot = bool((changes or {}).get("snapshot"))
+        by_name = {s.name: s for s in self.registry}
+        for name, rec in sub.leaves.items():
+            s = by_name.get(name)
+            if s is None:
+                continue
+            fields = pending.get(name, set())
+            if not (force or snapshot or fields):
+                continue
+            old = REG.get_path(plan.serving_tree, s.path)
+            cls = F.FORMATS[rec.format]
+            same_layout = (
+                type(old) is cls
+                and all(getattr(old, f) == rec.static.get(f)
+                        for f in cls._static_fields)
+                and all((getattr(old, f) is None) == (f not in rec.arrays)
+                        and (f not in rec.arrays
+                             or (getattr(old, f).shape == rec.arrays[f].shape
+                                 and getattr(old, f).dtype
+                                 == rec.arrays[f].dtype))
+                        for f in cls._array_fields))
+            version_moved = (rec.mask_version
+                             != plan.mask_versions.get(name))
+            if same_layout:
+                new_fields = {f: rec.arrays[f]
+                              for f in (rec.arrays if (force or snapshot
+                                                       or "__topology__"
+                                                       in fields)
+                                        else fields & set(rec.arrays))}
+                if not new_fields:
+                    continue
+                leaf = old.adopt_arrays(new_fields,
+                                        donate=self._sync_donate)
+            else:
+                leaf = self._leaf_from_wire(rec)
+            REG.set_path(plan.serving_tree, s.path, leaf)
+            topology = (not same_layout or version_moved or force
+                        or snapshot or "__topology__" in fields)
+            if topology:
+                plan.export_calls += 1
+                dec = plan.decisions[name]
+                plan.decisions[name] = dataclasses.replace(
+                    dec, representation=rec.format,
+                    stats=COND.stats_from_leaf(leaf),
+                    tp=int(rec.static.get("tp", 1)))
+            else:
+                plan.value_refreshes += 1
+            plan.mask_versions[name] = rec.mask_version
 
     # -- calibration --------------------------------------------------------
 

@@ -134,6 +134,16 @@ def main(argv=None):
     ap.add_argument("--no-paged", action="store_true",
                     help="force the legacy exact-shape slab path instead of "
                          "the paged continuous-batching scheduler")
+    ap.add_argument("--sync-dir", default=None,
+                    help="subscribe to a live trainer's sync directory "
+                         "(repro.sync DirChannel): bootstrap the engine "
+                         "from the publisher's snapshot instead of local "
+                         "init, then drain topology/values deltas at "
+                         "paged-chunk boundaries while serving. Requires a "
+                         "condensed-family --path matching the publisher")
+    ap.add_argument("--sync-wait", type=float, default=10.0,
+                    help="seconds to wait for the publisher's bootstrap "
+                         "snapshot in --sync-dir before giving up")
     ap.add_argument("--autotune", action="store_true",
                     help="run the timed kernel block-shape search for every "
                          "condensed stack shape at this batch bucket before "
@@ -177,10 +187,33 @@ def main(argv=None):
         mesh = compat.make_mesh((1, args.tp), ("data", "model"))
         print(f"[serve] mesh data=1 model={args.tp}: sparse stacks shard "
               "the neuron axis where the cost model prices it a win")
-    engine = ServingEngine(cfg, params, masks, reg, path=args.path,
-                           profile=profile,
-                           paged=False if args.no_paged else None,
-                           values_dtype=args.values_dtype, mesh=mesh)
+    subscriber = None
+    if args.sync_dir is not None:
+        from repro.sync import DirChannel, Subscriber, engine_from_snapshot
+        subscriber = Subscriber(DirChannel(args.sync_dir).subscribe("serve"),
+                                name="serve")
+        print(f"[serve] syncing from {args.sync_dir}: waiting up to "
+              f"{args.sync_wait:.0f}s for a bootstrap snapshot")
+        if not subscriber.wait_for_bootstrap(timeout=args.sync_wait):
+            raise SystemExit(f"no snapshot appeared in {args.sync_dir} "
+                             f"within {args.sync_wait:.0f}s — is the "
+                             "trainer publishing?")
+        # the published stream fixes path/values_dtype/tp; CLI flags for
+        # those describe the LOCAL engine and must agree
+        meta = subscriber.meta
+        if args.path != meta.get("path"):
+            print(f"[serve] note: stream publishes path={meta.get('path')!r}"
+                  f"; serving that (not --path {args.path})")
+        engine = engine_from_snapshot(
+            cfg, subscriber, registry=reg, profile=profile,
+            paged=False if args.no_paged else None, mesh=mesh)
+        print(f"[serve] bootstrapped at generation {subscriber.generation} "
+              f"(path={engine.path}, values_dtype={engine.values_dtype})")
+    else:
+        engine = ServingEngine(cfg, params, masks, reg, path=args.path,
+                               profile=profile,
+                               paged=False if args.no_paged else None,
+                               values_dtype=args.values_dtype, mesh=mesh)
 
     if args.autotune and args.path == "masked":
         print("[serve] --autotune skipped: --path masked never dispatches "
@@ -215,6 +248,13 @@ def main(argv=None):
           f"decode {b}x{args.gen} in {res.decode_s:.3f}s "
           f"({res.tok_s:.1f} tok/s)")
     print("[serve] first stream:", res.tokens[0, -args.gen:].tolist())
+    if subscriber is not None:
+        c = subscriber.counters
+        print(f"[serve:sync] generation {subscriber.generation} | applied "
+              f"{c['applied_deltas']} delta(s) + {c['applied_snapshots']} "
+              f"snapshot(s) | delta bytes {c['bytes_deltas']} vs snapshot "
+              f"bytes {c['bytes_snapshots']} | stale {c['stale']} dup "
+              f"{c['duplicate']} gaps {c['gaps']} resyncs {c['resyncs']}")
     return res.tokens
 
 

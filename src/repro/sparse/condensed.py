@@ -64,6 +64,23 @@ def export_stats(registry, masks: dict,
             for s, r in zip(stacks, table)}
 
 
+def stats_from_leaf(leaf, *, min_fan_in: int = 0) -> ExportStats:
+    """ExportStats derived from an exported leaf's GEOMETRY (no mask).
+
+    The sync subscriber adopts leaves that were exported remotely — the
+    replica never holds the trainer's mask, so realized stats must come
+    from the leaf's own shapes via ``leaf.spec()``. k / max_active are
+    exact (they size the arrays); ``active_fraction`` is the spec's padded
+    estimate and ``min_fan_in`` defaults to 0 ("unknown"), so a plan
+    repriced from these stats can never enable the structured-exact path
+    by accident.
+    """
+    spec = leaf.spec()
+    return ExportStats(k=int(spec.k), max_active=int(spec.max_active),
+                       active_fraction=float(spec.active_fraction),
+                       min_fan_in=int(min_fan_in))
+
+
 def _condense_stack(weight, mask, k: int):
     """Condensed arrays at forced fan-in ``k`` (exactness-test reference)."""
     from repro.core import topology

@@ -531,10 +531,55 @@ class SparseFormat:
         adopted scales (dequantize). Default: nothing to reconcile."""
         return self
 
+    def adopt_arrays(self, new: dict, *, donate: bool = True):
+        """Rebuild with the array fields named in ``new`` replaced by the
+        given (host or device) arrays, donating each matching old buffer
+        (see :func:`adopt_array`). The sync-subscriber apply path: the new
+        bytes were exported remotely, so this is replacement, not
+        re-export."""
+        unknown = set(new) - set(self._array_fields)
+        if unknown:
+            raise ValueError(f"{type(self).__name__} has no array fields "
+                             f"{sorted(unknown)}")
+        return dataclasses.replace(
+            self, **{f: adopt_array(v, getattr(self, f), donate=donate)
+                     for f, v in new.items()})
+
 
 def _register(cls):
     jax.tree_util.register_pytree_node_class(cls)
     return cls
+
+
+# ---------------------------------------------------------------------------
+# buffer adoption: write an externally-computed array over a live one
+#
+# The sync subscriber (repro.sync) hands the engine host arrays that were
+# exported on the TRAINER -- there is no (w, mask) pair to re-export from,
+# so the donated-refresh programs above don't apply. Adoption is the
+# degenerate donated program: identity over the new array with the old
+# buffer donated, so XLA writes the incoming bytes into the replica's
+# existing allocation and the old jax.Array is invalidated at dispatch --
+# zero weight-memory doubling, same guarantee as donate_refresh.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, donate_argnums=(1,), keep_unused=True)
+def _adopt_donated(new, old):
+    return new
+
+
+def adopt_array(new, old=None, *, donate: bool = True):
+    """Move ``new`` (host or device) onto device, donating ``old``'s buffer
+    when it is a live matching-aval jax.Array. Falls back to a plain
+    transfer when shapes/dtypes differ (a topology delta that changed k or
+    the active-row count) or donation is off."""
+    arr = jnp.asarray(new)
+    if (donate and old is not None and isinstance(old, jax.Array)
+            and not old.is_deleted()
+            and old.shape == arr.shape and old.dtype == arr.dtype):
+        return _adopt_donated(arr, old)
+    return arr
 
 
 # ---------------------------------------------------------------------------

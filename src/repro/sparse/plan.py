@@ -438,9 +438,16 @@ def _decide(stack, path: str, *, batch_size: int, itemsize: int,
 
 
 def _host_versions(mask_versions: dict) -> dict[str, int]:
-    """Trainer counters (host ints or device scalars) -> plain int dict,
-    fetched with one device_get."""
-    return {k: int(v) for k, v in jax.device_get(dict(mask_versions)).items()}
+    """Trainer counters (host ints or device scalars) -> plain int dict.
+
+    Already-host-int dicts (the engine/subscriber path keeps a host-side
+    version cache) short-circuit WITHOUT any device sync — a no-op refresh
+    costs zero blocking ``device_get``s. Anything else (device scalars from
+    a live TrainState) is fetched with ONE fused device_get."""
+    mv = dict(mask_versions)
+    if all(type(v) is int for v in mv.values()):
+        return mv
+    return {k: int(v) for k, v in jax.device_get(mv).items()}
 
 
 @dataclasses.dataclass
@@ -474,7 +481,8 @@ class Plan:
         return F.FORMATS[self.decisions[name].representation]
 
     def refresh(self, params: dict, masks: dict, mask_versions: dict, *,
-                refresh_values: bool = True, donate: bool = True) -> list[str]:
+                refresh_values: bool = True, donate: bool = True,
+                export_cache: dict | None = None) -> list[str]:
         """Incremental re-export: re-condense ONLY stacks whose version moved.
 
         ``mask_versions`` is the trainer's per-stack counter pytree (host ints
@@ -505,6 +513,17 @@ class Plan:
         (for changed stacks) the per-stack scalar stats. ``donate=False``
         preserves the old leaf arrays for callers that still hold
         references to them.
+
+        ``export_cache`` dedupes the donated re-export ACROSS plans: an
+        engine holding N cached plans that reference the same stack passes
+        one dict for the whole refresh sweep, the first plan to reach a
+        (stack, representation, tp, values_dtype, version) computes the
+        leaf (donating ITS old buffers), and every later plan adopts the
+        same leaf object — stacks export once per generation, not once per
+        plan key. The cache is scoped to ONE refresh sweep; plans that
+        share leaf objects this way must keep refreshing through the same
+        engine (a lone ``plan.refresh(donate=True)`` would invalidate
+        buffers its siblings still reference).
         """
         versions = _host_versions(mask_versions)
         by_name = {s.name: s for s in self.registry}
@@ -524,7 +543,14 @@ class Plan:
                 weight = REG.get_path(params, s.path)
                 mask = REG.get_path(masks, s.path)
                 rep = dec.representation
-                if (rep in ("condensed", "condensed_over_active")
+                cache_key = (s.name, rep, dec.tp, self.values_dtype,
+                             versions[s.name])
+                if export_cache is not None and cache_key in export_cache:
+                    # another plan already exported this stack at this
+                    # version/layout: adopt the shared leaf (the old leaf is
+                    # simply dropped — only the FIRST exporter donates)
+                    leaf = export_cache[cache_key]
+                elif (rep in ("condensed", "condensed_over_active")
                         and rep == old_rep):
                     leaf = COND.recondense_stack_leaf(
                         weight, mask, stats[s.name], old_leaf,
@@ -534,6 +560,8 @@ class Plan:
                 else:
                     leaf = _build_leaf(rep, weight, mask, stats[s.name],
                                        self.values_dtype, tp=dec.tp)
+                if export_cache is not None:
+                    export_cache[cache_key] = leaf
                 self.decisions[s.name] = dec
                 REG.set_path(self.serving_tree, s.path, leaf)
                 self.mask_versions[s.name] = versions[s.name]
@@ -545,10 +573,18 @@ class Plan:
                 leaf = REG.get_path(self.serving_tree, s.path)
                 if not isinstance(leaf, F.CONDENSED_FAMILY):
                     continue
-                REG.set_path(self.serving_tree, s.path,
-                             leaf.refresh_values(REG.get_path(params, s.path),
-                                                 REG.get_path(masks, s.path),
-                                                 donate=donate))
+                val_key = (s.name, type(leaf).__name__,
+                           getattr(leaf, "tp", 1), self.values_dtype,
+                           "values")
+                if export_cache is not None and val_key in export_cache:
+                    fresh = export_cache[val_key]
+                else:
+                    fresh = leaf.refresh_values(
+                        REG.get_path(params, s.path),
+                        REG.get_path(masks, s.path), donate=donate)
+                    if export_cache is not None:
+                        export_cache[val_key] = fresh
+                REG.set_path(self.serving_tree, s.path, fresh)
                 self.value_refreshes += 1
         return [s.name for s in changed]
 

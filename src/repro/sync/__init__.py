@@ -1,0 +1,39 @@
+"""Live train->serve weight sync: versioned mask-delta publisher/subscriber.
+
+The condensed constant-fan-in export IS the wire format (ROADMAP open item
+2; the Graphcore dynamic-sparsity stack ships COO triplets host-side for
+the same reason): per-stack topology deltas carry ``indices`` + ``values``
+(+ ``scales``/``out_index`` where the leaf has them), stacks whose mask did
+not move ship values-only, and a monotonically increasing per-stack
+``(mask_version, generation)`` header plus an all-or-nothing generation
+commit keeps every subscriber's stacks mutually coherent mid-stream.
+
+Layers:
+
+- :mod:`repro.sync.delta` -- checksummed binary records (``Delta`` /
+  ``Snapshot``) that round-trip every ``formats.py`` dataclass, including
+  quantized ``values_dtype`` and ``tp``-sharded layouts.
+- :mod:`repro.sync.channel` -- an in-process ``QueueChannel`` and a
+  multi-process ``DirChannel`` (atomically renamed delta files that
+  subscribers tail), both with a resync request back-channel.
+- :mod:`repro.sync.publisher` / :mod:`repro.sync.subscriber` -- the
+  trainer-side diff engine and the replica-side generation handshake
+  (stale deltas dropped, gaps -> full-snapshot resync, never a partial
+  apply).
+
+Engine integration lives in ``launch/engine.py``
+(``ServingEngine.attach_subscriber``) and ``train/trainer.py``
+(``Trainer(publisher=...)``).
+"""
+
+from repro.sync.delta import (  # noqa: F401
+    Delta,
+    DeltaCorruptError,
+    Snapshot,
+    StackDelta,
+    decode,
+    encode,
+)
+from repro.sync.channel import DirChannel, QueueChannel  # noqa: F401
+from repro.sync.publisher import Publisher  # noqa: F401
+from repro.sync.subscriber import Subscriber, engine_from_snapshot  # noqa: F401

@@ -1,0 +1,326 @@
+"""Wire format for the train->serve sync protocol.
+
+One record = one generation's worth of change, encoded as::
+
+    MAGIC(4) | header_len(u32) | payload_len(u32) | header JSON | payload | crc32(u32)
+
+The header is compact sorted-key JSON describing every array in the payload
+(name, field, dtype, shape, byte offset); the payload is the raw little-endian
+array bytes concatenated in header order; the trailing CRC32 covers header +
+payload. Decoding verifies magic, lengths, and checksum before touching any
+bytes -- a torn or corrupt file raises :class:`DeltaCorruptError` and the
+subscriber counts + drops it instead of applying garbage.
+
+Two record kinds:
+
+- ``Delta``: per-stack :class:`StackDelta` records (mode ``"topology"`` ships
+  the full condensed leaf -- indices + values + scales/out_index where
+  present -- mode ``"values"`` ships only the value-stream fields for stacks
+  whose mask did not move) plus the dense (non-stack) parameter leaves, which
+  train every step too and are required for token identity.
+- ``Snapshot``: the full flattened params + masks trees, per-stack topology
+  records, and the plan meta (path / values_dtype / tp) a subscriber needs to
+  bootstrap or resync from nothing.
+
+Everything here is host-side numpy; the publisher does ONE fused
+``jax.device_get`` before encoding and the subscriber moves arrays back to
+device only when a leaf is adopted into a live plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+import zlib
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.sparse import formats as F
+
+_MAGIC = b"RSY1"
+_LEN = struct.Struct("<II")
+_CRC = struct.Struct("<I")
+
+
+class DeltaCorruptError(ValueError):
+    """Record failed magic/length/checksum/structure validation."""
+
+
+# dtypes that may legally appear on the wire. bfloat16 / float8 are the
+# ml_dtypes-backed extension types jax registers with numpy -- ``dtype.name``
+# is canonical for them, but ``np.dtype("bfloat16")`` is not a valid lookup,
+# so rebuild goes through the jnp scalar type's dtype object.
+def _wire_dtypes() -> dict[str, np.dtype]:
+    table: dict[str, np.dtype] = {}
+    for t in (np.float32, np.float64, np.float16, np.int8, np.int16,
+              np.int32, np.int64, np.uint8, np.uint16, np.uint32,
+              np.uint64, np.bool_):
+        dt = np.dtype(t)
+        table[dt.name] = dt
+    for name in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
+        scalar = getattr(jnp, name, None)
+        if scalar is not None:
+            dt = np.dtype(scalar)
+            table[dt.name] = dt
+    return table
+
+
+_WIRE_DTYPES = _wire_dtypes()
+
+# value-stream fields per format: what a ``mode="values"`` record ships when
+# the topology (indices / out_index / neuron_active) is unchanged.
+VALUE_FIELDS: dict[str, tuple[str, ...]] = {
+    "condensed": ("values", "scales"),
+    "condensed_over_active": ("values", "scales"),
+    "structured": ("values", "scales"),
+    "masked": (),
+}
+
+
+@dataclasses.dataclass
+class StackDelta:
+    """One sparse stack's update at one generation.
+
+    ``mode="topology"`` carries the complete exported leaf (``static`` is the
+    format's ``_static_fields`` dict, ``arrays`` every non-None array field);
+    ``mode="values"`` carries only the VALUE_FIELDS subset and is merged into
+    the subscriber's stored topology record. ``mask_version`` is the
+    trainer-side per-stack counter the generation handshake validates
+    against.
+    """
+    name: str
+    mask_version: int
+    mode: str                      # "topology" | "values"
+    format: str                    # formats.FORMATS key
+    static: dict
+    arrays: dict                   # field -> np.ndarray
+
+
+@dataclasses.dataclass
+class Delta:
+    generation: int
+    stacks: list[StackDelta]
+    dense: dict                    # "/"-joined path -> np.ndarray (params)
+
+    kind = "delta"
+
+
+@dataclasses.dataclass
+class Snapshot:
+    generation: int
+    meta: dict                     # {"path", "values_dtype", "tp", ["arch"]}
+    mask_versions: dict            # stack name -> int
+    stacks: list[StackDelta]       # all mode="topology"
+    params: dict                   # "/"-joined path -> np.ndarray
+    masks: dict                    # "/"-joined path -> np.ndarray
+
+    kind = "snapshot"
+
+
+# ---------------------------------------------------------------------------
+# tree <-> flat dict helpers (stack names are "/"-joined registry paths, so
+# the same convention addresses params/masks leaves)
+# ---------------------------------------------------------------------------
+
+def flatten_tree(tree, prefix: tuple = ()) -> dict:
+    """Nested str-keyed dicts -> {"a/b/c": leaf}. Leaves = non-dict values."""
+    flat: dict = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            flat.update(flatten_tree(tree[k], prefix + (str(k),)))
+    else:
+        flat["/".join(prefix)] = tree
+    return flat
+
+
+def unflatten_tree(flat: dict) -> dict:
+    tree: dict = {}
+    for path, leaf in flat.items():
+        parts = path.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# leaf <-> record
+# ---------------------------------------------------------------------------
+
+def _np(arr) -> np.ndarray:
+    out = np.asarray(arr)
+    if out.dtype.name not in _WIRE_DTYPES:
+        raise DeltaCorruptError(f"dtype {out.dtype.name!r} not wire-safe")
+    return np.ascontiguousarray(out)
+
+
+def leaf_to_wire(name: str, mask_version: int, leaf,
+                 *, mode: str = "topology") -> StackDelta:
+    """A formats.py dataclass -> a host-side StackDelta record."""
+    fields = (leaf._array_fields if mode == "topology"
+              else VALUE_FIELDS[leaf.format_name])
+    arrays = {f: _np(getattr(leaf, f)) for f in fields
+              if getattr(leaf, f, None) is not None}
+    static = {f: getattr(leaf, f) for f in leaf._static_fields}
+    return StackDelta(name=name, mask_version=int(mask_version), mode=mode,
+                      format=leaf.format_name, static=static, arrays=arrays)
+
+
+def wire_to_leaf(rec: StackDelta, *, device: bool = True):
+    """Rebuild the formats.py dataclass from a topology record."""
+    if rec.mode != "topology":
+        raise DeltaCorruptError(
+            f"stack {rec.name!r}: cannot build a leaf from a "
+            f"mode={rec.mode!r} record")
+    cls = F.FORMATS.get(rec.format)
+    if cls is None:
+        raise DeltaCorruptError(f"unknown format {rec.format!r}")
+    kw = dict(rec.static)
+    for f in cls._array_fields:
+        arr = rec.arrays.get(f)
+        if arr is not None and device:
+            arr = jnp.asarray(arr)
+        kw[f] = arr
+    return cls(**kw)
+
+
+# ---------------------------------------------------------------------------
+# encode / decode
+# ---------------------------------------------------------------------------
+
+def _pack_arrays(groups) -> tuple[list, bytes]:
+    """groups: iterable of (section, owner, field, np.ndarray). Returns the
+    header array descriptors (in payload order) and the payload bytes."""
+    descs, chunks, offset = [], [], 0
+    for section, owner, field, arr in groups:
+        arr = _np(arr)
+        buf = arr.tobytes()
+        descs.append({"section": section, "owner": owner, "field": field,
+                      "dtype": arr.dtype.name, "shape": list(arr.shape),
+                      "offset": offset, "nbytes": len(buf)})
+        chunks.append(buf)
+        offset += len(buf)
+    return descs, b"".join(chunks)
+
+
+def _iter_record_arrays(obj):
+    for sd in obj.stacks:
+        for field in sorted(sd.arrays):
+            yield "stack", sd.name, field, sd.arrays[field]
+    if obj.kind == "delta":
+        for path in sorted(obj.dense):
+            yield "dense", path, "", obj.dense[path]
+    else:
+        for path in sorted(obj.params):
+            yield "params", path, "", obj.params[path]
+        for path in sorted(obj.masks):
+            yield "masks", path, "", obj.masks[path]
+
+
+def encode(obj) -> bytes:
+    """Delta | Snapshot -> checksummed wire bytes."""
+    descs, payload = _pack_arrays(_iter_record_arrays(obj))
+    header = {
+        "kind": obj.kind,
+        "generation": int(obj.generation),
+        "arrays": descs,
+        "stacks": [{"name": sd.name, "mask_version": int(sd.mask_version),
+                    "mode": sd.mode, "format": sd.format,
+                    "static": {k: v for k, v in sd.static.items()}}
+                   for sd in obj.stacks],
+    }
+    if obj.kind == "snapshot":
+        header["meta"] = obj.meta
+        header["mask_versions"] = {k: int(v)
+                                   for k, v in obj.mask_versions.items()}
+    hdr = json.dumps(header, sort_keys=True,
+                     separators=(",", ":")).encode("utf-8")
+    body = hdr + payload
+    return (_MAGIC + _LEN.pack(len(hdr), len(payload)) + body
+            + _CRC.pack(zlib.crc32(body)))
+
+
+def decode(blob: bytes):
+    """Wire bytes -> Delta | Snapshot. Raises DeltaCorruptError."""
+    if not isinstance(blob, (bytes, bytearray, memoryview)):
+        raise DeltaCorruptError("not a bytes object")
+    blob = bytes(blob)
+    if len(blob) < len(_MAGIC) + _LEN.size + _CRC.size:
+        raise DeltaCorruptError("record truncated")
+    if blob[:4] != _MAGIC:
+        raise DeltaCorruptError("bad magic")
+    hdr_len, pay_len = _LEN.unpack_from(blob, 4)
+    body_start = 4 + _LEN.size
+    body_end = body_start + hdr_len + pay_len
+    if body_end + _CRC.size != len(blob):
+        raise DeltaCorruptError("length mismatch")
+    body = blob[body_start:body_end]
+    (crc,) = _CRC.unpack_from(blob, body_end)
+    if zlib.crc32(body) != crc:
+        raise DeltaCorruptError("checksum mismatch")
+    try:
+        header = json.loads(body[:hdr_len].decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise DeltaCorruptError(f"bad header: {e}") from None
+    payload = body[hdr_len:]
+    try:
+        return _rebuild(header, payload)
+    except (KeyError, TypeError, ValueError) as e:
+        if isinstance(e, DeltaCorruptError):
+            raise
+        raise DeltaCorruptError(f"malformed record: {e}") from None
+
+
+def _rebuild(header: dict, payload: bytes):
+    arrays: dict[tuple, np.ndarray] = {}
+    for d in header["arrays"]:
+        dt = _WIRE_DTYPES.get(d["dtype"])
+        if dt is None:
+            raise DeltaCorruptError(f"unknown wire dtype {d['dtype']!r}")
+        start, nbytes = d["offset"], d["nbytes"]
+        buf = payload[start:start + nbytes]
+        if len(buf) != nbytes:
+            raise DeltaCorruptError("payload truncated")
+        arr = np.frombuffer(buf, dtype=dt).reshape(d["shape"])
+        arrays[(d["section"], d["owner"], d["field"])] = arr
+    stacks = []
+    for sd in header["stacks"]:
+        stack_arrays = {field: arr
+                       for (sec, owner, field), arr in arrays.items()
+                       if sec == "stack" and owner == sd["name"]}
+        stacks.append(StackDelta(
+            name=sd["name"], mask_version=int(sd["mask_version"]),
+            mode=sd["mode"], format=sd["format"],
+            static=_restore_static(sd["format"], sd["static"]),
+            arrays=stack_arrays))
+    gen = int(header["generation"])
+    if header["kind"] == "delta":
+        dense = {owner: arr for (sec, owner, _), arr in arrays.items()
+                 if sec == "dense"}
+        return Delta(generation=gen, stacks=stacks, dense=dense)
+    if header["kind"] == "snapshot":
+        params = {owner: arr for (sec, owner, _), arr in arrays.items()
+                  if sec == "params"}
+        masks = {owner: arr for (sec, owner, _), arr in arrays.items()
+                 if sec == "masks"}
+        return Snapshot(generation=gen, meta=header["meta"],
+                        mask_versions={k: int(v) for k, v in
+                                       header["mask_versions"].items()},
+                        stacks=stacks, params=params, masks=masks)
+    raise DeltaCorruptError(f"unknown record kind {header['kind']!r}")
+
+
+def _restore_static(format_name: str, static: dict) -> dict:
+    """JSON round-trips ints/strings/None fine; just validate the keys
+    against the format's declared static fields so a doctored header cannot
+    smuggle arbitrary constructor kwargs."""
+    cls = F.FORMATS.get(format_name)
+    if cls is None:
+        raise DeltaCorruptError(f"unknown format {format_name!r}")
+    extra = set(static) - set(cls._static_fields)
+    if extra:
+        raise DeltaCorruptError(
+            f"static fields {sorted(extra)} not declared by {format_name}")
+    return dict(static)

@@ -1,0 +1,180 @@
+"""Trainer-side diff engine: TrainState -> versioned Delta/Snapshot records.
+
+The publisher owns one reference :class:`~repro.sparse.plan.Plan` built at
+``batch_size`` with the serving ``path``/``values_dtype``/``tp`` the fleet
+runs. Each ``publish(state)``:
+
+1. reads the per-stack ``mask_versions`` counters (one fused host fetch),
+2. runs the existing donated ``Plan.refresh`` -- only stacks whose version
+   moved are re-condensed, the rest get a values-only refresh (the exported
+   condensed leaves ARE the wire payload; no second export path exists),
+3. ships a ``Delta``: topology records for moved stacks, values-only records
+   for the rest, plus the dense (non-stack) parameter leaves,
+4. answers any queued resync requests with a full ``Snapshot``.
+
+Only the condensed family (``condensed`` / ``condensed_over_active``) can be
+published: ``masked`` and float ``structured`` leaves read the LIVE training
+weights at execution time, so a byte stream of their exported arrays could
+never keep a remote replica current.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+
+import jax
+
+from repro.sparse import condensed as COND  # noqa: F401  (re-export surface)
+from repro.sparse import plan as PLAN
+from repro.sparse import registry as REG
+from repro.sync import delta as D
+
+log = logging.getLogger(__name__)
+
+PUBLISHABLE_PATHS = ("condensed", "condensed_over_active")
+
+
+def _record_bytes(rec: D.StackDelta) -> int:
+    return sum(a.nbytes for a in rec.arrays.values())
+
+
+@dataclasses.dataclass
+class Publisher:
+    """Publishes one stream of generations onto a channel.
+
+    ``generation`` starts at 0 (nothing published); the first ``publish``
+    emits generation 1 as a full ``Snapshot`` so subscribers can bootstrap,
+    every later ``publish`` emits a ``Delta``.
+    """
+    cfg: object
+    registry: list
+    channel: object
+    path: str = "condensed"
+    values_dtype: str | None = None
+    tp: int = 1
+    profile: object = None
+    batch_size: int = 1
+    arch: str | None = None
+
+    generation: int = dataclasses.field(default=0, init=False)
+    last_info: dict = dataclasses.field(default_factory=dict, init=False)
+    _plan: object = dataclasses.field(default=None, init=False)
+    _params: object = dataclasses.field(default=None, init=False)
+    _masks: object = dataclasses.field(default=None, init=False)
+
+    def __post_init__(self):
+        if self.path not in PUBLISHABLE_PATHS:
+            raise ValueError(
+                f"publisher path must be one of {PUBLISHABLE_PATHS}; "
+                f"{self.path!r} leaves read live training weights at "
+                f"execution time and cannot be streamed")
+        if self.profile is None:
+            self.profile = PLAN.DEFAULT_PROFILE
+
+    # -- public API ---------------------------------------------------------
+
+    def publish(self, state=None, *, params=None, masks=None,
+                mask_versions=None) -> dict:
+        """Diff against the last published generation and send one record.
+
+        Accepts a ``TrainState`` or explicit ``params``/``masks``/
+        ``mask_versions``. Returns an info dict (kind, generation, byte
+        accounting) also stored as ``self.last_info``.
+        """
+        if state is not None:
+            params, masks = state.params, state.masks
+            mask_versions = state.mask_versions
+        if params is None or masks is None or mask_versions is None:
+            raise ValueError("publish needs a TrainState or explicit "
+                             "params/masks/mask_versions")
+        versions = PLAN._host_versions(mask_versions)
+        self._params, self._masks = params, masks
+
+        if self._plan is None:
+            self._plan = PLAN.build_plan(
+                self.cfg, self.registry, params, masks,
+                batch_size=self.batch_size, path=self.path,
+                mask_versions=versions, profile=self.profile,
+                values_dtype=self.values_dtype, tp=self.tp)
+            self.generation = 1
+            info = self._send_snapshot()
+        else:
+            changed = set(self._plan.refresh(params, masks, versions))
+            self.generation += 1
+            info = self._send_delta(changed, versions, params)
+        self.serve_resyncs()
+        self.last_info = info
+        return info
+
+    def serve_resyncs(self) -> int:
+        """Answer queued subscriber resync requests with a full Snapshot at
+        the CURRENT generation (idempotent: N requests -> one snapshot)."""
+        requests = self.channel.poll_requests()
+        if not requests or self._plan is None:
+            return 0
+        log.info("sync: resync requested by %s -> snapshot gen %d",
+                 [r.get("subscriber") for r in requests], self.generation)
+        self._send_snapshot()
+        return len(requests)
+
+    # -- record assembly ----------------------------------------------------
+
+    def _stack_leaves(self) -> dict:
+        return {s.name: REG.get_path(self._plan.serving_tree, s.path)
+                for s in self.registry}
+
+    def _versions_now(self) -> dict:
+        return {k: int(v) for k, v in self._plan.mask_versions.items()}
+
+    def _send_snapshot(self) -> dict:
+        # one fused host fetch of everything the record ships
+        host = jax.device_get({"leaves": self._stack_leaves(),
+                               "params": self._params,
+                               "masks": self._masks})
+        versions = self._versions_now()
+        stacks = [D.leaf_to_wire(name, versions[name], leaf)
+                  for name, leaf in host["leaves"].items()]
+        meta = {"path": self.path, "values_dtype": self.values_dtype,
+                "tp": self.tp}
+        if self.arch is not None:
+            meta["arch"] = self.arch
+        snap = D.Snapshot(generation=self.generation, meta=meta,
+                          mask_versions=versions, stacks=stacks,
+                          params=D.flatten_tree(host["params"]),
+                          masks=D.flatten_tree(host["masks"]))
+        blob = D.encode(snap)
+        self.channel.send(blob, kind="snapshot", generation=self.generation)
+        return {"kind": "snapshot", "generation": self.generation,
+                "bytes": len(blob),
+                "topology": sorted(versions), "values_only": [],
+                "topology_bytes": sum(_record_bytes(r) for r in stacks),
+                "values_bytes": 0,
+                "dense_bytes": sum(a.nbytes for a in
+                                   snap.params.values())}
+
+    def _send_delta(self, changed: set, versions: dict, params) -> dict:
+        stack_names = {s.name for s in self.registry}
+        dense_dev = {k: v for k, v in D.flatten_tree(params).items()
+                     if k not in stack_names}
+        host = jax.device_get({"leaves": self._stack_leaves(),
+                               "dense": dense_dev})
+        stacks, topo_b, val_b = [], 0, 0
+        for name, leaf in host["leaves"].items():
+            mode = "topology" if name in changed else "values"
+            rec = D.leaf_to_wire(name, versions[name], leaf, mode=mode)
+            stacks.append(rec)
+            if mode == "topology":
+                topo_b += _record_bytes(rec)
+            else:
+                val_b += _record_bytes(rec)
+        delta = D.Delta(generation=self.generation, stacks=stacks,
+                        dense=host["dense"])
+        blob = D.encode(delta)
+        self.channel.send(blob, kind="delta", generation=self.generation)
+        return {"kind": "delta", "generation": self.generation,
+                "bytes": len(blob),
+                "topology": sorted(changed),
+                "values_only": sorted(stack_names - changed),
+                "topology_bytes": topo_b, "values_bytes": val_b,
+                "dense_bytes": sum(a.nbytes for a in
+                                   host["dense"].values())}

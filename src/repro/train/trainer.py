@@ -193,6 +193,12 @@ class Trainer:
     keep_checkpoints: int = 3
     log_every: int = 50
     straggler_factor: float = 3.0   # step slower than 3x median -> flagged
+    # live train->serve sync (repro.sync.Publisher): publish right after
+    # every DST step (the moment mask_versions move — topology deltas), and
+    # additionally every ``publish_every`` steps so serving replicas track
+    # the weight VALUES between topology updates (values-only deltas).
+    publisher: Any = None
+    publish_every: int | None = None
 
     def __post_init__(self):
         self.registry = REG.build_registry(self.cfg)
@@ -226,8 +232,17 @@ class Trainer:
             t0 = time.perf_counter()
             try:
                 state, metrics = self._step_fn(state, batch)
-                if self._dst_fn is not None and bool(sched.is_update_step(i + 1)):
+                dst_ran = (self._dst_fn is not None
+                           and bool(sched.is_update_step(i + 1)))
+                if dst_ran:
                     state = self._dst_fn(state, batch)
+                if self.publisher is not None and (
+                        dst_ran or (self.publish_every
+                                    and (i + 1) % self.publish_every == 0)):
+                    # host-side hook, outside the jitted programs: DST just
+                    # stamped mask_versions, so this generation ships the
+                    # moved stacks as topology deltas
+                    self.publisher.publish(state)
             except Exception:
                 # fault tolerance: restore from the last checkpoint and rethrow
                 # if no checkpoint exists (caller decides whether to re-enter).

@@ -509,10 +509,11 @@ def test_refresh_donate_false_preserves_old_leaves(smoke_setup):
 
 
 def test_refresh_no_host_device_get_for_weight_data(smoke_setup, monkeypatch):
-    """The refresh host-transfer contract: values-only regather fetches ONE
-    payload (the version counters — no weight data, no stats); a changed-
-    stack refresh adds exactly one more (the fused per-stack scalar stats).
-    Nothing weight-sized ever crosses to the host."""
+    """The refresh host-transfer contract: host-int version counters are
+    used as-is (ZERO device_gets on a values-only regather — the no-op
+    fast path); a changed-stack refresh fetches exactly one payload (the
+    fused per-stack scalar stats). Nothing weight-sized ever crosses to
+    the host."""
     cfg, reg, params, masks, _ = smoke_setup
     plan = PLAN.build_plan(cfg, reg, params, masks, batch_size=1, path="auto",
                            mask_versions={s.name: 0 for s in reg})
@@ -527,16 +528,14 @@ def test_refresh_no_host_device_get_for_weight_data(smoke_setup, monkeypatch):
 
     monkeypatch.setattr(jax, "device_get", counting_device_get)
 
-    # values-only regather: one device_get (versions), a few bytes
+    # values-only regather: host-int versions short-circuit the fetch
     plan.refresh(params, masks, {s.name: 0 for s in reg})
-    assert len(fetched) == 1
-    assert fetched[0] < 1024
+    assert len(fetched) == 0
 
-    # changed-stack re-condense: versions + fused stats, still no weights
-    fetched.clear()
+    # changed-stack re-condense: one fused stats fetch, still no weights
     new_masks = _fresh_constant_fan_in_masks(reg, masks, seed=7)
     plan.refresh(params, new_masks, {s.name: 1 for s in reg})
-    assert len(fetched) == 2
+    assert len(fetched) == 1
     assert all(n < 1024 for n in fetched)
 
 
