@@ -35,6 +35,11 @@ import argparse
 import json
 import types
 
+# payload schema, picked up by benchmarks/run.py for the combined summary.
+# v1: first stamped version (tuned rows + crossover rows + profiles); the
+# unstamped payloads that predate it surface as schema_version null.
+SCHEMA_VERSION = 1
+
 import jax
 import jax.numpy as jnp
 
@@ -349,6 +354,7 @@ def main(argv=None):
 
     payload = {
         "benchmark": "kernel_autotune",
+        "schema_version": SCHEMA_VERSION,
         "backend": backend,
         "pallas_interpret": tuned[0]["interpret"] if tuned else None,
         "interpret_note": "interpret-mode (CPU) timings do not transfer to "

@@ -85,7 +85,14 @@ from repro.sparse import registry as REG
 # the p50/p99 per-decode-chunk latency of a subscribed engine with a
 # topology delta landing MID-STREAM vs an undisturbed baseline (the cost of
 # draining + donated adoption at a chunk boundary).
-SCHEMA_VERSION = 7
+# v8: kind="speculative" rows — self-draft speculative decoding over the
+# paged engine (the ablated subnetwork drafts, the full network verifies):
+# measured acceptance rate vs draft-ablation fraction, full-network
+# dispatches per token (< 1.0 whenever anything is accepted; 1/(gamma+1) at
+# perfect acceptance), us/tok vs the non-speculative baseline, and the
+# bitwise token-identity check. Acceptance and dispatches/token are the
+# hardware-transferable quantities here (CPU interpret-mode timings are not).
+SCHEMA_VERSION = 8
 
 BATCHES = (1, 32, 256)
 ABLATIONS = (0.0, 0.5)
@@ -297,6 +304,102 @@ def _quantized_rows(cfg, reg, params, masks, batches, *, profile, warmup,
                 "token_agreement_vs_f32": round(agreement, 4),
                 "stack_fan_ins": ks,
                 "profile": profile.name,
+            })
+    return rows
+
+
+# speculative sweep: draft-ablation fractions on top of the target plan.
+# 0.0 is the identity draft (acceptance is 1.0 by construction — the
+# dispatches/token floor 1/(gamma+1) and the bitwise plumbing check);
+# higher fractions trade acceptance for cheaper draft steps.
+SPEC_ABLATIONS = (0.0, 0.25, 0.5)
+SPEC_GAMMA = 3
+
+
+def run_speculative(arch: str = "qwen3-1.7b", *, req_batch: int = 2,
+                    gen_len: int = 24, gamma: int = SPEC_GAMMA,
+                    draft_ablations=SPEC_ABLATIONS, warmup: int = WARMUP,
+                    reps: int = REPS, seed: int = 0,
+                    results: list | None = None):
+    """Self-draft speculative decoding rows (schema v8).
+
+    For each draft-ablation fraction, a paged ``--path structured`` engine
+    decodes speculatively (``SpecConfig(gamma, fraction, force=True)`` —
+    the column-subset draft genuinely runs fewer weight columns) against a
+    non-speculative baseline engine on the same prompts. Records the
+    MEASURED acceptance rate (draft/target agreement per drafted token),
+    full-network dispatches per token (the quantity speculation exists to
+    shrink — 1.0 for plain decode), median us/tok for both engines, the
+    cost model's accept/decline pricing, and the bitwise token-identity
+    bit. Random-init smoke weights make acceptance at nonzero fractions
+    near-floor — the 0.0 row pins the protocol ceiling (acceptance 1.0,
+    dispatches/token ~ 1/(gamma+1)) and real checkpoints land in between.
+    """
+    from repro.launch.speculative import SpecConfig
+    cfg = configs.get_smoke_config(arch)
+    key = jax.random.PRNGKey(seed)
+    reg = REG.build_registry(cfg)
+    params = M.init_params(cfg, key, REG.k_fan_map(cfg, reg))
+    masks = REG.init_sparsity_state(cfg, key, reg)["masks"]
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (req_batch, PROMPT_LEN)).astype(np.int32)
+    rows = []
+
+    def run_pass(eng):
+        rid = eng.submit(prompts, gen_len)
+        eng.step()
+        [res] = eng.retire(rid)
+        return res
+
+    base_eng = ServingEngine(cfg, params, masks, reg, path="structured")
+    for _ in range(max(warmup, 1)):
+        run_pass(base_eng)
+    base_res = [run_pass(base_eng) for _ in range(max(reps, 1))]
+    base_tok_s = statistics.median(r.tok_s for r in base_res)
+    base_tokens = np.asarray(base_res[-1].tokens)
+
+    for frac in draft_ablations:
+        sc = SpecConfig(gamma=gamma, draft_ablation=frac, force=True)
+        eng = ServingEngine(cfg, params, masks, reg, path="structured",
+                            speculative=sc)
+        for _ in range(max(warmup, 1)):
+            run_pass(eng)
+        res = [run_pass(eng) for _ in range(max(reps, 1))]
+        tok_s = statistics.median(r.tok_s for r in res)
+        last = res[-1]
+        bitwise = bool(np.array_equal(np.asarray(last.tokens), base_tokens))
+        s = last.spec
+        est = eng.spec_estimate_for(last.plan_key)
+        rows.append((
+            f"serve_paths/speculative/abl{frac:g}_g{gamma}", 1e6 / tok_s,
+            f"acceptance={s['acceptance_rate']:.3f};"
+            f"dispatches_per_tok={s['full_dispatches_per_token']:.3f};"
+            f"bitwise={bitwise}"))
+        if results is not None:
+            results.append({
+                "arch": arch, "path": "structured", "kind": "speculative",
+                "req_batch": req_batch, "gen_len": gen_len,
+                "gamma": gamma, "draft_ablation": frac,
+                "acceptance_rate": round(s["acceptance_rate"], 4),
+                "full_dispatches_per_token":
+                    round(s["full_dispatches_per_token"], 4),
+                "rounds": s["rounds"],
+                "drafted": s["drafted"],
+                "matched": s["matched"],
+                "tok_s": round(tok_s, 2),
+                "us_per_tok": round(1e6 / tok_s, 2),
+                "baseline_tok_s": round(base_tok_s, 2),
+                "baseline_us_per_tok": round(1e6 / base_tok_s, 2),
+                "speedup_vs_baseline": round(tok_s / base_tok_s, 4),
+                # the cost model's accept/decline pricing for this key (at
+                # its ASSUMED acceptance, not the measured one above)
+                "priced_worthwhile": bool(est.worthwhile),
+                "priced_spec_us_per_tok": round(est.spec_s_per_token * 1e6,
+                                                2),
+                "priced_base_us_per_tok": round(est.base_s_per_token * 1e6,
+                                                2),
+                "bitwise_identical": bitwise,
             })
     return rows
 
@@ -627,6 +730,11 @@ def main(argv=None):
     rows += run_scheduler(arch=args.arch, n_requests=trace_n,
                           rate=args.trace_rate, gen_len=gen_len,
                           reps=args.reps, results=results)
+    rows += run_speculative(arch=args.arch, gen_len=gen_len,
+                            warmup=args.warmup, reps=args.reps,
+                            draft_ablations=(SPEC_ABLATIONS[:2] if args.smoke
+                                             else SPEC_ABLATIONS),
+                            results=results)
     rows += run_tp_crossover(arch=args.arch, tp=args.tp, profile=profile,
                              results=results)
     rows += run_sync(arch=args.arch, gen_len=gen_len, results=results)

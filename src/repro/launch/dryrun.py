@@ -233,6 +233,102 @@ def lower_serve_paged(cfg, shape, mesh):
                             table_sds, len_sds)
 
 
+def lower_zoo_engine(cfg, shape, mesh, reps: dict):
+    """The exact decode program a ``ServingEngine`` group dispatches for
+    this arch: paged decode where the arch supports it, legacy
+    contiguous-cache decode otherwise — in both cases with the PLANNED
+    abstract serving tree (format-object ShapeDtypeStruct leaves) in the
+    masks slot, exactly what the engine's runners execute."""
+    if not M.supports_paged(cfg):
+        return lower_serve_planned(cfg, shape, mesh, reps)
+    from repro.compat import NamedSharding
+    from repro.compat import PartitionSpec as P
+    from repro.models import paged as PG
+    from repro.sparse import plan as PLAN
+    rules = ShardingRules(cfg, mesh)
+    registry = REG.build_registry(cfg)
+    k_fan = REG.k_fan_map(cfg, registry)
+    params_sds = _abstract(lambda k: M.init_params(cfg, k, k_fan),
+                           jax.random.PRNGKey(0))
+    cond_sds = PLAN.abstract_serving_tree(cfg, registry, reps)
+    bsz = shape.global_batch
+    bs_blk = 16
+    nb = PG.pages_for(shape.seq_len + bs_blk, bs_blk)
+    pool_sds = _abstract(lambda: M.init_paged_pool(cfg, bsz * nb, bs_blk))
+    table_sds = jax.ShapeDtypeStruct((bsz, nb), jnp.int32)
+    len_sds = jax.ShapeDtypeStruct((bsz,), jnp.int32)
+    batch_sds = make_batch_spec(cfg, shape)
+    p_sh = rules.params(params_sds)
+    m_sh = rules.masks(cond_sds)
+    c_sh = rules.cache(pool_sds, global_batch=bsz)
+    b_sh = rules.batch(batch_sds, shape=shape)
+    bax = rules.batch_axes(bsz)
+    t_sh = NamedSharding(mesh, P(bax or None, None))
+    l_sh = NamedSharding(mesh, P(bax or None))
+
+    def serve_step(params, cond, batch, pool, table, lengths):
+        return M.paged_decode_step(cfg, params, cond, batch, pool, table,
+                                   lengths)
+
+    jitted = jax.jit(serve_step,
+                     in_shardings=(p_sh, m_sh, b_sh, c_sh, t_sh, l_sh),
+                     out_shardings=(None, c_sh), donate_argnums=(3,))
+    with compat.use_mesh(mesh):
+        return jitted.lower(params_sds, cond_sds, batch_sds, pool_sds,
+                            table_sds, len_sds)
+
+
+def run_zoo_cell(arch: str, smoke: bool = False, quiet: bool = False) -> dict:
+    """Config-zoo serving smoke (one arch): group a decode request under
+    the engine's abstract plan key, build the abstract serving tree, and
+    compile the group's decode program (paged where supported). Proves the
+    ``ServingEngine`` plan machinery lowers for EVERY ``configs/`` model —
+    MoE expert stacks, SSM/hybrid (legacy path), multimodal, musicgen —
+    before any of them is served for real. Encoder-only archs (ViT) stop
+    after key + abstract tree: there is no decode program to lower."""
+    import dataclasses as DC
+
+    from repro.launch import engine as ENG
+    from repro.sparse import plan as PLAN
+
+    cfg = configs.get_smoke_config(arch) if smoke else configs.get_config(arch)
+    registry = REG.build_registry(cfg)
+    shapes = configs.shapes_for(arch, cfg.family, cfg.causal)
+    decode = next((s for s in shapes if s.kind == "decode"), None)
+    batch = decode.global_batch if decode is not None else 8
+    key, reps = ENG.abstract_plan_key(cfg, registry, batch)
+    tree_sds = PLAN.abstract_serving_tree(cfg, registry, reps)
+    result = {
+        "arch": arch, "program": "serve_zoo", "smoke": smoke,
+        "family": cfg.family, "plan_key": key.describe(), "formats": reps,
+        "supports_paged": M.supports_paged(cfg),
+        "abstract_leaves": len(jax.tree.leaves(tree_sds)),
+        "decode_shape": decode.name if decode is not None else None,
+    }
+    if decode is None:
+        if not quiet:
+            print(f"[serve_zoo] {arch}: encoder-only — plan key "
+                  f"{key.describe()}, no decode program")
+        return result
+    shape = decode
+    if smoke:
+        shape = DC.replace(shape, seq_len=min(shape.seq_len, 256),
+                           global_batch=min(shape.global_batch, 8))
+    mesh = make_production_mesh(multi_pod=False)
+    t0 = time.time()
+    compiled = lower_zoo_engine(cfg, shape, mesh, reps).compile()
+    result["compile_s"] = round(time.time() - t0, 1)
+    mem = compiled.memory_analysis()
+    result["peak_bytes"] = (getattr(mem, "argument_size_in_bytes", 0)
+                            + getattr(mem, "temp_size_in_bytes", 0))
+    if not quiet:
+        paged = "paged" if result["supports_paged"] else "legacy"
+        print(f"[serve_zoo] {arch}: group {key.describe()} ({paged}) "
+              f"compiled in {result['compile_s']}s, peak "
+              f"{result['peak_bytes'] / 2**30:.2f} GB/device")
+    return result
+
+
 def lower_serve(cfg, shape, mesh):
     if shape.kind == "prefill":
         # larger attention chunks for long-prompt prefill: fewer unrolled
@@ -540,16 +636,33 @@ def main(argv=None):
     ap.add_argument("--program", default="auto",
                     help="program to lower (auto/train/serve/serve_cond/"
                          "serve_struct/serve_plan/serve_engine/serve_paged/"
-                         "serve_tp)")
+                         "serve_tp/serve_zoo)")
     ap.add_argument("--tp", type=int, default=4,
                     help="model-axis size for --program serve_tp")
     ap.add_argument("--smoke", action="store_true",
-                    help="serve_tp only: smoke config + tiny decode shape "
-                         "(CI-sized; invariants still blocking)")
+                    help="serve_tp/serve_zoo: smoke config + tiny decode "
+                         "shape (CI-sized; invariants still blocking)")
     args = ap.parse_args(argv)
 
     archs = list(configs.ALL_ARCHS) if args.arch == "all" else [args.arch]
     results, failures = [], []
+    if args.program == "serve_zoo":
+        # one cell per ARCH (the zoo picks its own decode shape); sweeps the
+        # whole configs/ zoo through the engine's plan machinery
+        for arch in archs:
+            try:
+                results.append(run_zoo_cell(arch, smoke=args.smoke))
+            except Exception as e:  # noqa: BLE001 — report, continue sweep
+                traceback.print_exc()
+                failures.append((arch, "serve_zoo", str(e)[:200]))
+        if args.out:
+            with open(args.out, "w") as f:
+                for r in results:
+                    f.write(json.dumps(r) + "\n")
+        print(f"\n{len(results)} zoo cells OK, {len(failures)} failed")
+        for f in failures:
+            print("FAILED:", f)
+        return 1 if failures else 0
     for arch in archs:
         cfg = configs.get_config(arch)
         cells = configs.shapes_for(arch, cfg.family, cfg.causal)

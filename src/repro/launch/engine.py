@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch import speculative as SP
 from repro.models import model as M
 from repro.models import paged as PG
 from repro.sparse import autotune as AT
@@ -255,6 +256,8 @@ class Result:
     tok_s: float            # decode throughput of the slab this request ran in
     cold: bool = False      # a dispatch this request rode compiled in-line
                             # (never with warm=True — SLA timings stay clean)
+    spec: dict | None = None    # speculative counters (SpecStats.summary)
+                                # when the request decoded speculatively
 
 
 @dataclasses.dataclass(frozen=True)
@@ -288,6 +291,9 @@ class _Active:
     cold: bool
     toks: list = dataclasses.field(default_factory=list)
     decode_s: float = 0.0
+    base_pages: int = 0     # admission page budget per row — the floor a
+                            # speculative rewind never releases below
+    spec: SP.SpecStats = dataclasses.field(default_factory=SP.SpecStats)
 
 
 class _PagedRunner:
@@ -357,21 +363,31 @@ class _PagedRunner:
         it never includes the XLA compile."""
         eng = self.eng
         sig = (kind, eng.cfg, eng.path, self.key, t_or_chunk,
-               self.nb, self.num_blocks, self.bs)
+               self.nb, self.num_blocks, self.bs,
+               eng.speculative if kind in ("draft", "verify") else None)
         if sig in _WARMED:
             return
         tree = eng.serving_tree_for(self.key)
         pool = M.init_paged_pool(eng.cfg, self.num_blocks, self.bs)
         table = jnp.zeros((self.bucket, self.nb), jnp.int32)
+        lens = jnp.zeros((self.bucket,), jnp.int32)
         if kind == "prefill":
             _paged_prefill_dispatch(
                 eng.cfg, eng.params, tree,
                 jnp.zeros((self.bucket, t_or_chunk), jnp.int32), pool, table,
-                jnp.zeros((self.bucket,), jnp.int32))
+                lens)
+        elif kind == "draft":
+            SP.draft_dispatch(
+                eng.cfg, eng.params, eng.draft_tree_for(self.key), pool,
+                table, lens, jnp.zeros((self.bucket, 1), jnp.int32),
+                t_or_chunk)
+        elif kind == "verify":
+            SP.verify_dispatch(
+                eng.cfg, eng.params, tree, pool, table, lens,
+                jnp.zeros((self.bucket, t_or_chunk + 1), jnp.int32))
         else:
             _paged_decode_dispatch(
-                eng.cfg, eng.params, tree, pool, table,
-                jnp.zeros((self.bucket,), jnp.int32),
+                eng.cfg, eng.params, tree, pool, table, lens,
                 jnp.zeros((self.bucket, 1), jnp.int32), t_or_chunk)
         _WARMED.add(sig)
 
@@ -406,8 +422,17 @@ class _PagedRunner:
         # the attention span (nb * bs) at the contiguous cache's size.
         per_row = {r.id: PG.pages_for(t_bucket + r.gen_len, self.bs)
                    for r in chosen}
+        # speculative mode: the table is WIDER than the page budget — the
+        # extra gamma slots map draft/verify overshoot to entries that are
+        # either best-effort page grants (rewound each round) or zero
+        # (clamping writes into the garbage page, commit capped to match)
+        nb_width = max(per_row.values())
+        if eng.speculative is not None:
+            nb_width = max(PG.pages_for(t_bucket + r.gen_len
+                                        + eng.speculative.gamma, self.bs)
+                           for r in chosen)
         self._ensure_capacity(
-            max(per_row.values()),
+            nb_width,
             sum(per_row[r.id] * r.prompts.shape[0] for r in chosen))
         if eng.warm:
             self._warm("prefill", t_bucket)
@@ -432,7 +457,7 @@ class _PagedRunner:
                     prompt_lens[row] = t
                 admitted.append(_Active(req=r, rows=rows, pages=pages_all,
                                         remaining=r.gen_len, prefill_s=0.0,
-                                        cold=False))
+                                        cold=False, base_pages=per_row[r.id]))
             tree = eng.serving_tree_for(self.key)
             logits, pool, dt, cold = _paged_prefill_dispatch(
                 eng.cfg, eng.params, tree, jnp.asarray(tokens), self.pool,
@@ -491,16 +516,116 @@ class _PagedRunner:
             if a.remaining == 0:
                 self._retire(a)
 
+    # -- speculative rounds -------------------------------------------------
+
+    def spec_round(self) -> None:
+        """One speculative round over the full bucket: ``gamma`` draft
+        steps (ablated subnetwork, shared weights), ONE batched
+        full-network verify over the ``gamma + 1`` positions, host-side
+        acceptance, and a paged rewind of everything the round wrote past
+        each stream's new committed length. Commits are LOCKSTEP within a
+        request (its rows share one remaining counter): every row commits
+        ``min`` over rows of (its accepted prefix + 1), further capped by
+        remaining and by held-page capacity — any cap below a row's own
+        acceptance stays bitwise correct, it just re-derives the dropped
+        suffix next round."""
+        if not self.active:
+            return
+        eng = self.eng
+        sc = eng.speculative
+        gamma = sc.gamma
+        draft_tree = eng.draft_tree_for(self.key)
+        live = np.zeros((self.bucket,), bool)
+        for a in self.active.values():
+            live[a.rows] = True
+        self.lengths[~live] = 0      # idle rows: writes pinned to page 0
+        # best-effort overshoot grants: pages covering slots up to
+        # L0 + gamma. A stream that gets none still makes progress — its
+        # overshoot writes clamp into the garbage page and its commit is
+        # capped at the capacity it does hold (>= 1: the admission budget
+        # always covers the next committed token).
+        for a in self.active.values():
+            for row in a.rows:
+                needed = PG.pages_for(int(self.lengths[row]) + gamma + 1,
+                                      self.bs)
+                held = int(np.count_nonzero(self.table[row]))
+                if needed > held:
+                    try:
+                        extra = self.alloc.alloc(needed - held)
+                    except RuntimeError:
+                        continue
+                    self.table[row, held:held + len(extra)] = extra
+                    a.pages.extend(extra)
+        if eng.warm:
+            self._warm("draft", gamma)
+            self._warm("verify", gamma)
+        tree = eng.serving_tree_for(self.key)
+        table_dev = jnp.asarray(self.table)
+        lengths_dev = jnp.asarray(self.lengths)
+        drafted, pool, dt_d, cold_d = SP.draft_dispatch(
+            eng.cfg, eng.params, draft_tree, self.pool, table_dev,
+            lengths_dev, jnp.asarray(self.cur), gamma)
+        feed = jnp.concatenate(
+            [jnp.asarray(self.cur), drafted], axis=1)       # (bucket, g+1)
+        targ, pool, dt_v, cold_v = SP.verify_dispatch(
+            eng.cfg, eng.params, tree, pool, table_dev, lengths_dev, feed)
+        self.pool = pool
+        feed_np = np.asarray(feed)
+        targ_np = np.asarray(targ)
+        drafted_np = np.asarray(drafted)
+        for a in list(self.active.values()):
+            commit, matched = a.remaining, 0
+            for row in a.rows:
+                m = 0
+                while (m < gamma
+                       and drafted_np[row, m] == targ_np[row, m]):
+                    m += 1
+                matched += m
+                # only positions whose verify K/V landed in HELD pages have
+                # correct logits (garbage-page overshoot attends junk)
+                held = int(np.count_nonzero(self.table[row]))
+                cap = held * self.bs - int(self.lengths[row])
+                commit = min(commit, m + 1, cap)
+            assert commit >= 1, "admission budget must cover the next token"
+            a.toks.append(feed_np[a.rows, :commit])
+            for row in a.rows:
+                self.cur[row, 0] = targ_np[row, commit - 1]
+                self.lengths[row] += commit
+            a.remaining -= commit
+            a.decode_s += dt_d + dt_v
+            a.cold = a.cold or cold_d or cold_v
+            a.spec.rounds += 1
+            a.spec.drafted += gamma * len(a.rows)
+            a.spec.matched += matched
+            a.spec.committed += commit * len(a.rows)
+            a.spec.draft_s += dt_d
+            a.spec.verify_s += dt_v
+            if a.remaining == 0:
+                self._retire(a)
+        # rewind: pages covering only rejected/overshoot slots go back to
+        # the pool (never below the admission budget — the floor that
+        # guarantees next round's commit capacity without re-allocating
+        # under contention)
+        for a in self.active.values():
+            for row in a.rows:
+                keep = max(int(self.lengths[row]), a.base_pages * self.bs)
+                PG.rewind_pages(self.table[row], self.alloc, keep, self.bs)
+            a.pages = [int(p) for row in a.rows
+                       for p in self.table[row] if p != 0]
+
     def _retire(self, a: _Active) -> None:
         req = a.req
         gen = np.concatenate(a.toks, axis=1)
         out = jnp.concatenate(
             [jnp.asarray(req.prompts, jnp.int32), jnp.asarray(gen)], axis=1)
         b = req.prompts.shape[0]
+        spec = (a.spec.summary(self.eng.speculative, b)
+                if a.spec.rounds else None)
         self.eng._done[req.id] = Result(
             id=req.id, tokens=out, plan_key=self.key, prefill_s=a.prefill_s,
             decode_s=a.decode_s,
-            tok_s=b * req.gen_len / max(a.decode_s, 1e-9), cold=a.cold)
+            tok_s=b * req.gen_len / max(a.decode_s, 1e-9), cold=a.cold,
+            spec=spec)
         self.alloc.release(a.pages)
         for row in a.rows:
             self.table[row, :] = 0
@@ -556,10 +681,22 @@ class ServingEngine:
                  gen_chunk: int = 16,
                  warm: bool = True,
                  values_dtype: str | None = None,
-                 mesh=None):
+                 mesh=None,
+                 speculative: SP.SpecConfig | None = None):
         if path not in PLAN.PATHS:
             raise ValueError(
                 f"unknown serving path {path!r}; expected one of {PLAN.PATHS}")
+        if speculative is not None:
+            if path == "masked":
+                raise ValueError(
+                    "speculative decoding needs a format-typed plan to "
+                    "derive the draft from; the all-masked fast path serves "
+                    "raw masks — pick any other path (or 'auto')")
+            if paged is False or not M.supports_paged(cfg):
+                raise ValueError(
+                    "speculative decoding runs on the paged scheduler "
+                    "(draft overshoot rollback is a page-table edit); this "
+                    "architecture/config only supports the legacy slab path")
         if paged is None:
             paged = M.supports_paged(cfg)
         elif paged and not M.supports_paged(cfg):
@@ -593,6 +730,13 @@ class ServingEngine:
         self._itemsize = jnp.dtype(cfg.param_dtype).itemsize
         self._stats: dict | None = None     # realized stats, computed once
         self._plans: dict[PlanKey, PLAN.Plan] = {}
+        # self-draft speculative decoding (repro.launch.speculative): draft
+        # trees are derived lazily per plan key and invalidated whenever the
+        # underlying plan's buffers move (refresh / sync adoption DONATE the
+        # old arrays the draft leaves alias)
+        self.speculative = speculative
+        self._draft_trees: dict[PlanKey, object] = {}
+        self._spec_estimates: dict[PlanKey, PLAN.SpecEstimate] = {}
         self._runners: dict[PlanKey, _PagedRunner] = {}
         self._pending: list[Request] = []
         self._done: dict[int, Result] = {}
@@ -653,6 +797,46 @@ class ServingEngine:
         if self.path == "masked":
             return self.masks
         return self.plan_for(key).serving_tree
+
+    def draft_tree_for(self, key: PlanKey):
+        """The (lazily derived, cached) DRAFT serving tree for ``key`` —
+        the target plan at ``speculative.draft_ablation`` extra neuron
+        ablation, sharing every value buffer with the target (asserted:
+        zero extra weight bytes). Returns None when speculation is off or
+        when ``path="auto"`` pricing declines it for this key (draft too
+        slow / assumed acceptance too low) and ``force`` is unset; a fixed
+        path runs what it was told. The cache is cleared whenever refresh
+        or sync adoption donates the target buffers the draft aliases."""
+        if self.speculative is None:
+            return None
+        if key in self._draft_trees:
+            return self._draft_trees[key]
+        sc = self.speculative
+        plan = self.plan_for(key)
+        tree, report = PLAN.derive_draft_tree(
+            self.registry, plan.serving_tree, self.params, self.masks,
+            sc.draft_ablation)
+        shared, extra = PLAN.draft_weight_overhead_bytes(
+            self.registry, plan.serving_tree, tree)
+        assert extra == 0, (
+            f"draft tree allocated {extra} value bytes; self-drafting "
+            f"must share the target's weight residency ({report})")
+        est = PLAN.price_speculation(
+            self.registry, plan.serving_tree, tree,
+            batch_size=key.batch_bucket, gamma=sc.gamma,
+            acceptance=sc.acceptance, profile=self.profile)
+        self._spec_estimates[key] = est
+        if self.path == "auto" and not sc.force and not est.worthwhile:
+            tree = None         # decline: the cost model says plain decode
+                                # is faster at this bucket
+        self._draft_trees[key] = tree
+        return tree
+
+    def spec_estimate_for(self, key: PlanKey) -> PLAN.SpecEstimate | None:
+        """The pricing behind ``draft_tree_for``'s accept/decline (None
+        until that key's draft has been derived)."""
+        self.draft_tree_for(key)
+        return self._spec_estimates.get(key)
 
     # -- request lifecycle --------------------------------------------------
 
@@ -756,7 +940,11 @@ class ServingEngine:
                                   f"{runner.bucket}")
                 if not runner.active:
                     break
-                runner.decode_chunk()
+                if (self.speculative is not None
+                        and self.draft_tree_for(key) is not None):
+                    runner.spec_round()
+                else:
+                    runner.decode_chunk()
                 chunks += 1
                 if max_chunks is not None and chunks >= max_chunks:
                     break
@@ -862,6 +1050,11 @@ class ServingEngine:
         self.params = params
         self.masks = masks or {}
         self._stats = None
+        # draft trees alias the plans' value buffers BY IDENTITY and the
+        # refresh donates those buffers — drop the drafts before any
+        # donation executes; they re-derive lazily from the fresh trees
+        self._draft_trees.clear()
+        self._spec_estimates.clear()
         versions = PLAN._host_versions(mask_versions)
         self._mask_versions = versions
         cache: dict = {}
@@ -922,6 +1115,10 @@ class ServingEngine:
         if sub.generation is None or sub.generation == self._sync_generation:
             return False
         self._check_sync_meta(sub.meta)
+        # sync adoption donates plan buffers the draft trees alias — drop
+        # the drafts first; they re-derive from the adopted generation
+        self._draft_trees.clear()
+        self._spec_estimates.clear()
         changes = sub.consume_changes()
         if changes["snapshot"]:
             self.masks = sub.masks_tree()

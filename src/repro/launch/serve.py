@@ -134,6 +134,23 @@ def main(argv=None):
     ap.add_argument("--no-paged", action="store_true",
                     help="force the legacy exact-shape slab path instead of "
                          "the paged continuous-batching scheduler")
+    ap.add_argument("--speculative", action="store_true",
+                    help="self-draft speculative decoding: the SAME weights "
+                         "at --draft-ablation extra neuron ablation draft "
+                         "--gamma tokens per round, one batched full-network "
+                         "dispatch verifies them (greedy output stays "
+                         "bitwise identical; Result reports the measured "
+                         "acceptance rate). Needs the paged scheduler and a "
+                         "format-typed path (anything but masked); with a "
+                         "fixed path speculation always runs, with --path "
+                         "auto the cost model may decline it")
+    ap.add_argument("--draft-ablation", type=float, default=0.5,
+                    help="extra neuron ablation fraction of the draft "
+                         "subnetwork (0.5 = draft keeps the most salient "
+                         "half of each stack's active neurons)")
+    ap.add_argument("--gamma", type=int, default=3,
+                    help="drafted tokens per speculative round (the verify "
+                         "dispatch scores gamma+1 positions)")
     ap.add_argument("--sync-dir", default=None,
                     help="subscribe to a live trainer's sync directory "
                          "(repro.sync DirChannel): bootstrap the engine "
@@ -187,6 +204,14 @@ def main(argv=None):
         mesh = compat.make_mesh((1, args.tp), ("data", "model"))
         print(f"[serve] mesh data=1 model={args.tp}: sparse stacks shard "
               "the neuron axis where the cost model prices it a win")
+    speculative = None
+    if args.speculative:
+        from repro.launch.speculative import SpecConfig
+        # a fixed path means the operator chose the representation — run
+        # speculation as asked; --path auto keeps the cost model in charge
+        speculative = SpecConfig(gamma=args.gamma,
+                                 draft_ablation=args.draft_ablation,
+                                 force=args.path != "auto")
     subscriber = None
     if args.sync_dir is not None:
         from repro.sync import DirChannel, Subscriber, engine_from_snapshot
@@ -206,14 +231,16 @@ def main(argv=None):
                   f"; serving that (not --path {args.path})")
         engine = engine_from_snapshot(
             cfg, subscriber, registry=reg, profile=profile,
-            paged=False if args.no_paged else None, mesh=mesh)
+            paged=False if args.no_paged else None, mesh=mesh,
+            speculative=speculative)
         print(f"[serve] bootstrapped at generation {subscriber.generation} "
               f"(path={engine.path}, values_dtype={engine.values_dtype})")
     else:
         engine = ServingEngine(cfg, params, masks, reg, path=args.path,
                                profile=profile,
                                paged=False if args.no_paged else None,
-                               values_dtype=args.values_dtype, mesh=mesh)
+                               values_dtype=args.values_dtype, mesh=mesh,
+                               speculative=speculative)
 
     if args.autotune and args.path == "masked":
         print("[serve] --autotune skipped: --path masked never dispatches "
@@ -248,6 +275,22 @@ def main(argv=None):
           f"decode {b}x{args.gen} in {res.decode_s:.3f}s "
           f"({res.tok_s:.1f} tok/s)")
     print("[serve] first stream:", res.tokens[0, -args.gen:].tolist())
+    if speculative is not None:
+        if res.spec is not None:
+            s = res.spec
+            print(f"[serve:spec] gamma={s['gamma']} draft_ablation="
+                  f"{s['draft_ablation']} | acceptance "
+                  f"{s['acceptance_rate']:.3f} ({s['matched']}/{s['drafted']}"
+                  f" drafts) | {s['full_dispatches_per_token']:.3f} "
+                  f"full-network dispatches/token | draft {s['draft_s']:.3f}s"
+                  f" + verify {s['verify_s']:.3f}s")
+        else:
+            est = engine.spec_estimate_for(res.plan_key)
+            why = (f"priced {est.spec_s_per_token * 1e6:.1f} vs plain "
+                   f"{est.base_s_per_token * 1e6:.1f} us/tok at assumed "
+                   f"acceptance {est.acceptance}" if est else "no estimate")
+            print(f"[serve:spec] declined by --path auto pricing ({why}); "
+                  f"pass a fixed path to force speculation")
     if subscriber is not None:
         c = subscriber.counters
         print(f"[serve:sync] generation {subscriber.generation} | applied "

@@ -1,0 +1,182 @@
+"""Self-draft speculative decoding: the ablated subnetwork drafts, the
+full network verifies.
+
+SRigL's neuron ablation means a served model already CONTAINS its own draft
+model: the same trained weights at a higher ablation fraction (see
+``plan.derive_draft_tree`` — per-stack, sharing every value buffer with the
+target plan, zero extra weight residency). The paged scheduler's decode
+chunk is replaced by speculative ROUNDS:
+
+1. ``gamma`` greedy decode steps through the DRAFT tree (one scanned
+   program — cheap steps, the draft's column subset is a fraction of the
+   weight stream),
+2. ONE batched full-network verification dispatch over the ``gamma + 1``
+   positions (``model.paged_verify_step`` — each position attends exactly
+   its own causal prefix, so position ``i``'s argmax is bitwise what a
+   sequential greedy decode would emit there),
+3. host-side acceptance: the longest drafted prefix the target agrees with
+   commits (plus the target's own next token); the first mismatch rolls
+   the paged KV state back (``paged.rewind_pages`` — overshoot pages
+   return to the pool, table entries zero).
+
+Greedy acceptance makes the emitted stream bitwise identical to
+non-speculative greedy decode while the FULL network runs once per
+committed prefix instead of once per token. Whether that is a win is
+priced, not assumed: ``plan.price_speculation`` folds the draft's real
+cost (sentinel drafts save nothing under the current kernels; column
+subsets do) and an assumed acceptance rate into expected seconds/token, so
+``--path auto`` can decline speculation.
+
+KV protocol per round (stream at committed length L0, next un-emitted
+token ``cur``): draft steps write draft-weight K/V at slots
+``L0 .. L0+gamma-1`` and emit guesses d_1..d_gamma; the verify dispatch
+feeds ``[cur, d_1..d_gamma]`` and REWRITES slots ``L0 .. L0+gamma`` with
+target-weight K/V before any position attends them — draft residue is
+never read by verification, and committed slots end the round holding
+exactly the bytes a sequential decode would have written.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Engine-level speculative decoding settings.
+
+    ``gamma`` — drafted tokens per round (the verify dispatch scores
+    ``gamma + 1`` positions). ``draft_ablation`` — the extra neuron
+    ablation fraction the draft tree applies on top of the target plan
+    (0.5 = draft keeps the most salient half of each stack's active
+    neurons). ``acceptance`` — the per-token acceptance probability the
+    cost model assumes BEFORE measurement (``Result.spec`` reports the
+    measured rate). ``force`` — run speculation even when the pricing
+    declines it (fixed paths always run; ``--path auto`` declines unless
+    forced).
+    """
+    gamma: int = 3
+    draft_ablation: float = 0.5
+    acceptance: float = 0.7
+    force: bool = False
+
+    def __post_init__(self):
+        if self.gamma < 1:
+            raise ValueError("gamma must be >= 1")
+        if not 0.0 <= self.draft_ablation < 1.0:
+            raise ValueError("draft_ablation must be in [0, 1)")
+        if not 0.0 <= self.acceptance <= 1.0:
+            raise ValueError("acceptance must be in [0, 1]")
+
+
+@dataclasses.dataclass
+class SpecStats:
+    """Per-request speculative counters (accumulated across rounds).
+
+    ``drafted``/``matched`` measure the draft's raw agreement with the
+    target (acceptance rate = matched / drafted — the quantity the
+    ablation-fraction sweep calibrates); ``committed`` counts tokens
+    actually emitted (lockstep/capacity caps can commit fewer than
+    matched); ``rounds`` counts full-network verify dispatches, so
+    rounds / tokens-per-stream is the full-network-dispatches-per-token
+    headline (1.0 for plain decode, < 1.0 whenever anything is accepted).
+    """
+    rounds: int = 0
+    drafted: int = 0
+    matched: int = 0
+    committed: int = 0
+    draft_s: float = 0.0
+    verify_s: float = 0.0
+
+    def summary(self, cfg: SpecConfig, streams: int) -> dict:
+        tokens_per_stream = self.committed / max(streams, 1)
+        return {
+            "gamma": cfg.gamma,
+            "draft_ablation": cfg.draft_ablation,
+            "rounds": self.rounds,
+            "drafted": self.drafted,
+            "matched": self.matched,
+            "committed": self.committed,
+            "acceptance_rate": self.matched / max(self.drafted, 1),
+            "full_dispatches_per_token":
+                self.rounds / max(tokens_per_stream, 1e-9),
+            "draft_s": self.draft_s,
+            "verify_s": self.verify_s,
+        }
+
+
+# ---------------------------------------------------------------------------
+# jitted round primitives
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "gamma"),
+                   donate_argnums=(3,))
+def _draft_chunk(cfg, params, draft_tree, pool, table, lengths, cur,
+                 gamma: int):
+    """``gamma`` greedy decode steps through the draft tree as one scanned
+    program (pool donated). ``cur`` (B, 1) is each stream's next un-emitted
+    token, sitting at slot ``lengths[b]``. Returns (drafted (B, gamma),
+    pool): ``drafted[:, i]`` is the draft's guess for the token the target
+    would emit ``i + 1`` steps from now. Draft K/V lands at slots
+    ``lengths .. lengths+gamma-1`` — transient bytes the verify dispatch
+    overwrites before reading."""
+    def body(carry, _):
+        cur, pool, lens = carry
+        logits, pool = M.paged_decode_step(cfg, params, draft_tree,
+                                           {"tokens": cur}, pool, table,
+                                           lens)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        return (nxt, pool, lens + 1), nxt[:, 0]
+
+    (_, pool, _), drafted = jax.lax.scan(body, (cur, pool, lengths), None,
+                                         length=gamma)
+    return drafted.T, pool
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(3,))
+def _verify_chunk(cfg, params, tree, pool, table, lengths, feed):
+    """ONE batched full-network dispatch over ``feed`` (B, gamma+1) — the
+    current token followed by the gamma draft guesses. Returns
+    (targ (B, gamma+1) int32, pool): ``targ[:, i]`` is the target's greedy
+    next token after consuming ``feed[:, :i+1]`` — bitwise what sequential
+    decode would emit at that position (``model.paged_verify_step``)."""
+    logits, pool = M.paged_verify_step(cfg, params, tree, {"tokens": feed},
+                                       pool, table, lengths)
+    return jnp.argmax(logits, -1).astype(jnp.int32), pool
+
+
+def _jit_entries(fn) -> int:
+    try:
+        return fn._cache_size()
+    except Exception:  # noqa: BLE001 — optional introspection only
+        return -1
+
+
+def draft_dispatch(cfg, params, draft_tree, pool, table, lengths, cur,
+                   gamma: int):
+    """Timed draft dispatch. Returns (drafted, pool, seconds, cold)."""
+    n0 = _jit_entries(_draft_chunk)
+    t0 = time.perf_counter()
+    drafted, pool = _draft_chunk(cfg, params, draft_tree, pool, table,
+                                 lengths, cur, gamma)
+    drafted.block_until_ready()
+    return (drafted, pool, time.perf_counter() - t0,
+            _jit_entries(_draft_chunk) != n0)
+
+
+def verify_dispatch(cfg, params, tree, pool, table, lengths, feed):
+    """Timed verify dispatch. Returns (targ, pool, seconds, cold)."""
+    n0 = _jit_entries(_verify_chunk)
+    t0 = time.perf_counter()
+    targ, pool = _verify_chunk(cfg, params, tree, pool, table, lengths,
+                               feed)
+    targ.block_until_ready()
+    return (targ, pool, time.perf_counter() - t0,
+            _jit_entries(_verify_chunk) != n0)

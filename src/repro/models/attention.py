@@ -223,6 +223,45 @@ def paged_decode_attention(
     return out[:, None]
 
 
+def paged_verify_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_table: jax.Array,
+    lengths: jax.Array,
+    *,
+    head_to_kv: tuple,
+) -> jax.Array:
+    """Multi-position attention against a paged KV pool (speculative verify).
+
+    q: (B, T, H, D) — T consecutive tokens per stream, token ``i`` sitting
+    at absolute slot ``lengths[b] + i`` (already written to the pool);
+    lengths: (B,) tokens committed per stream BEFORE this dispatch. Query
+    ``i`` attends slots ``< lengths[b] + i + 1`` — exactly the visibility a
+    sequential chain of ``paged_decode_attention`` calls would give it, so
+    one batched dispatch scores every drafted position. Masked slots hit
+    ``NEG_INF`` before the softmax (exact-zero weights), so results are
+    bitwise independent of garbage beyond each query's own prefix.
+    """
+    b, t, h, d = q.shape
+    nb = block_table.shape[1]
+    bs = k_pool.shape[1]
+    scale = d ** -0.5
+
+    k = k_pool[block_table].reshape(b, nb * bs, *k_pool.shape[2:])
+    v = v_pool[block_table].reshape(b, nb * bs, *v_pool.shape[2:])
+    k_exp = expand_kv(k, head_to_kv)
+    v_exp = expand_kv(v, head_to_kv)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q * scale, k_exp,
+                        preferred_element_type=jnp.float32)    # (B, H, T, S)
+
+    visible = lengths[:, None] + 1 + jnp.arange(t)[None]               # (B, T)
+    valid = jnp.arange(nb * bs)[None, None, :] < visible[:, :, None]   # (B, T, S)
+    scores = jnp.where(valid[:, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqs,bshd->bqhd", p.astype(v_exp.dtype), v_exp)
+
+
 def paged_cache_write(k_pool, v_pool, k_new, v_new, block_table, positions):
     """Scatter T new tokens per stream into a paged pool.
 

@@ -311,11 +311,23 @@ def attn_sublayer(cfg, p: dict, m: dict, x: jax.Array, *,
     if paged is not None:
         k_pool, v_pool, block_table, lengths = paged
         if decode:
-            k_pool, v_pool = A.paged_cache_write(
-                k_pool, v_pool, k, v, block_table, lengths[:, None])
-            attn = A.paged_decode_attention(q, k_pool, v_pool, block_table,
-                                            lengths + 1,
-                                            head_to_kv=cfg.head_to_kv)
+            t = k.shape[1]
+            if t == 1:
+                k_pool, v_pool = A.paged_cache_write(
+                    k_pool, v_pool, k, v, block_table, lengths[:, None])
+                attn = A.paged_decode_attention(q, k_pool, v_pool,
+                                                block_table, lengths + 1,
+                                                head_to_kv=cfg.head_to_kv)
+            else:
+                # speculative verify: T consecutive tokens per stream, token
+                # i written at slot lengths[b] + i, each query attending its
+                # own causal prefix (one batched dispatch instead of T)
+                pos = lengths[:, None] + jnp.arange(t)[None]
+                k_pool, v_pool = A.paged_cache_write(
+                    k_pool, v_pool, k, v, block_table, pos)
+                attn = A.paged_verify_attention(q, k_pool, v_pool,
+                                                block_table, lengths,
+                                                head_to_kv=cfg.head_to_kv)
         else:
             # prefill: attention over the in-flight k/v (chunked, causal —
             # right-padded rows' pads sit after every real token, so real
@@ -810,6 +822,27 @@ def paged_decode_step(cfg, params: Params, masks: Masks, batch: dict,
                                    lengths, positions, decode=True)
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     return _lm_logits(cfg, params, x[:, 0]), new_pool
+
+
+def paged_verify_step(cfg, params: Params, masks: Masks, batch: dict,
+                      pool: dict, block_table: jax.Array, lengths: jax.Array):
+    """Multi-position decode (speculative verification).
+
+    batch["tokens"]: (B, T) — token ``i`` is written at slot
+    ``lengths[b] + i`` and attends ``lengths[b] + i + 1`` slots, exactly
+    the visibility of T sequential ``paged_decode_step`` calls, collapsed
+    into ONE full-network dispatch. Returns (logits (B, T, V), pool);
+    ``argmax(logits[:, i])`` is the model's next token after consuming
+    ``batch["tokens"][:, :i + 1]`` — what a sequential greedy decode would
+    emit at that position.
+    """
+    masks = masks or {}
+    x, positions = embed_inputs(cfg, params, batch)
+    positions = positions + lengths[:, None]
+    x, new_pool = _paged_attn_scan(cfg, x, params, masks, pool, block_table,
+                                   lengths, positions, decode=True)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _lm_logits(cfg, params, x), new_pool
 
 
 def _decode_attn_scan(cfg, stack_p, stack_m, kc, vc, x, positions, window, cache_len):

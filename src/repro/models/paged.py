@@ -34,6 +34,27 @@ def pages_for(tokens: int, block_size: int) -> int:
     return -(-max(int(tokens), 0) // int(block_size))
 
 
+def rewind_pages(table_row, allocator, committed_tokens: int,
+                 block_size: int) -> int:
+    """Roll one stream's table back to ``committed_tokens`` slots.
+
+    Speculative decoding writes draft K/V past the committed length; when
+    the verifier rejects a suffix, the pages covering ONLY overshoot slots
+    must return to the pool and their table entries must zero (so later
+    writes clamp into the garbage page, never a stale grant). ``table_row``
+    is the stream's host int32 row, mutated in place. Pages holding at
+    least one committed token stay — their overshoot tail is dead data
+    masked by ``lengths`` at every read. Returns the number of pages freed.
+    """
+    keep = pages_for(committed_tokens, block_size)
+    held = [int(p) for p in table_row if p != 0]
+    overshoot = held[keep:]
+    if overshoot:
+        allocator.release(overshoot)
+        table_row[keep:] = 0
+    return len(overshoot)
+
+
 class BlockAllocator:
     """Host-side free list over a pool's page ids (page 0 reserved).
 

@@ -737,6 +737,275 @@ def tp_crossover_batch(stack, *, itemsize: int, stats: COND.ExportStats,
     return None
 
 
+# ---------------------------------------------------------------------------
+# self-draft speculative decoding: draft-tree derivation + pricing
+#
+# SRigL's neuron ablation means every served model already CONTAINS a cheaper
+# subnetwork: the draft model for speculative decoding is the SAME trained
+# weights at a higher neuron ablation fraction, so draft and target share one
+# weight residency and verification is one batched full-network call over the
+# gamma+1 drafted positions. Derivation is format-aware:
+#
+# * ``Condensed``      -> ``CondensedOverActive`` wrapping the target's
+#   values/indices/scales buffers VERBATIM (asserted shared), with an
+#   ``out_index`` that sentinels the dropped neurons — their rows are dropped
+#   at the in-kernel scatter, so the draft output has exact zeros there.
+# * ``CondensedOverActive`` -> the same leaf with MORE rows sentineled.
+# * ``StructuredFanIn`` (live-weight, tp=1) -> a genuine column SUBSET
+#   (shorter ``active_index``): the column-gathered kernel's bytes and FLOPs
+#   shrink with the draft fraction — this is where the draft's measured
+#   speedup comes from (PR 5: 0.21x step at 0.25 active). Quantized/TP
+#   instances keep their panel layout and sentinel dropped columns instead.
+# * ``MaskedDense`` on ablation-only stacks -> a ``StructuredFanIn`` subset
+#   reading the live weights; fine-sparse masked stacks draft at identity
+#   (no exact column subnetwork exists — the stack contributes no saving
+#   and no acceptance loss).
+#
+# Dropped neurons are chosen by SALIENCY (sum |values| per output neuron,
+# dequantized when scales exist; column L1 norm of the live weight for
+# live-weight formats) — the channel-importance heuristic Chase (PAPERS.md)
+# uses for channel-level subnetworks.
+# ---------------------------------------------------------------------------
+
+
+def _draft_keep(n: int, draft_ablation: float) -> int:
+    """Rows/columns the draft keeps out of ``n`` at ablation ``F``."""
+    f = min(max(float(draft_ablation), 0.0), 1.0)
+    return max(int(math.ceil(n * (1.0 - f))), 1)
+
+
+def _keep_top_rows(saliency, valid, keep: int):
+    """Bool mask keeping the top-``keep`` valid entries of the last axis per
+    lead replica (ties broken by position via top_k's stable order)."""
+    s = jnp.where(valid, saliency.astype(jnp.float32), -jnp.inf)
+    flat = s.reshape(-1, s.shape[-1])
+    idx = jax.lax.top_k(flat, min(keep, s.shape[-1]))[1]
+    km = jnp.zeros(flat.shape, bool)
+    km = km.at[jnp.arange(flat.shape[0])[:, None], idx].set(True)
+    return km.reshape(s.shape) & valid
+
+
+def _row_saliency(values, scales):
+    s = jnp.sum(jnp.abs(values.astype(jnp.float32)), axis=-1)
+    return s * scales if scales is not None else s
+
+
+def _is_ablation_only(mask) -> bool:
+    """Does every surviving column keep full fan-in? (one host sync; draft
+    derivation is host-driven like the exports)."""
+    act = jnp.any(mask, axis=-2)
+    full = jnp.all(mask == act[..., None, :])
+    return bool(jax.device_get(full))
+
+
+def _structured_subset(weight, neuron_active, keep: int, leaf_tpl):
+    """Live-weight column-subset StructuredFanIn draft (tp=1)."""
+    d_out = neuron_active.shape[-1]
+    sal = jnp.sum(jnp.abs(weight.astype(jnp.float32)), axis=-2)
+    km = _keep_top_rows(sal, neuron_active, keep)
+    a_pad = F.padded_active_count(min(keep, d_out), d_out)
+    ai = F.active_index_from_bools(km, a_pad)
+    return F.StructuredFanIn(neuron_active=km, active_index=ai,
+                             d_in=int(weight.shape[-2]),
+                             weight_itemsize=leaf_tpl.weight_itemsize)
+
+
+def derive_draft_leaf(leaf, weight, mask,
+                      draft_ablation: float) -> tuple[F.SparseFormat, str]:
+    """One stack's draft leaf from its target serving leaf.
+
+    Returns (draft_leaf, kind): ``"subset"`` drafts genuinely execute fewer
+    columns, ``"sentinel"`` drafts share the target's buffers and drop rows
+    at scatter (exact-zero outputs, no compute saving under the current
+    kernels — priced honestly), ``"identity"`` stacks draft as themselves.
+    Value-bearing arrays are NEVER copied: sentinel drafts alias the
+    target's buffers by object identity, subset/identity drafts read the
+    live weights the target already reads.
+    """
+    if isinstance(leaf, F.Condensed):
+        d_out = leaf.values.shape[-2]
+        wloc = d_out // leaf.tp
+        sal = _row_saliency(leaf.values, leaf.scales)
+        km = _keep_top_rows(sal, jnp.ones(sal.shape, bool),
+                            _draft_keep(d_out, draft_ablation))
+        local = jnp.arange(d_out, dtype=jnp.int32) % wloc
+        oi = jnp.where(km, jnp.broadcast_to(local, sal.shape),
+                       wloc).astype(jnp.int32)
+        return F.CondensedOverActive(
+            values=leaf.values, indices=leaf.indices, out_index=oi,
+            d_in=leaf.d_in, d_out=d_out, scales=leaf.scales,
+            values_dtype=leaf.values_dtype, tp=leaf.tp), "sentinel"
+    if isinstance(leaf, F.CondensedOverActive):
+        bound = leaf.d_out // leaf.tp
+        valid = leaf.out_index < bound
+        sal = _row_saliency(leaf.values, leaf.scales)
+        km = _keep_top_rows(sal, valid,
+                            _draft_keep(leaf.values.shape[-2], draft_ablation))
+        oi = jnp.where(km, leaf.out_index,
+                       bound).astype(leaf.out_index.dtype)
+        return dataclasses.replace(leaf, out_index=oi), "sentinel"
+    if isinstance(leaf, F.StructuredFanIn):
+        d_out = leaf.neuron_active.shape[-1]
+        if leaf.values is not None and leaf.active_index is not None:
+            # quantized: the stored panel is POSITION-indexed by
+            # active_index, so the layout must stay — sentinel the dropped
+            # columns (active_index is scatter-only on the gathered path)
+            bound = d_out // leaf.tp
+            valid = leaf.active_index < bound
+            sal = jnp.sum(jnp.abs(leaf.values.astype(jnp.float32)), axis=-2)
+            if leaf.scales is not None:
+                sal = sal * leaf.scales
+            km = _keep_top_rows(
+                sal, valid,
+                _draft_keep(leaf.active_index.shape[-1], draft_ablation))
+            ai = jnp.where(km, leaf.active_index,
+                           bound).astype(leaf.active_index.dtype)
+            return dataclasses.replace(leaf, active_index=ai), "sentinel"
+        if leaf.tp > 1 or leaf.active_index is None:
+            # per-block subsets would need equal padded widths per shard;
+            # not worth the layout machinery for a draft heuristic
+            return leaf, "identity"
+        keep = _draft_keep(leaf.active_index.shape[-1], draft_ablation)
+        return _structured_subset(weight, leaf.neuron_active, keep,
+                                  leaf), "subset"
+    if isinstance(leaf, F.MaskedDense):
+        if not _is_ablation_only(mask):
+            return leaf, "identity"
+        act = jnp.any(mask, axis=-2)
+        a = max(int(jax.device_get(
+            jnp.max(jnp.sum(act.astype(jnp.int32), axis=-1)))), 1)
+        tpl = F.StructuredFanIn(neuron_active=act, active_index=None,
+                                weight_itemsize=leaf.weight_itemsize)
+        return _structured_subset(weight, act,
+                                  _draft_keep(a, draft_ablation), tpl), "subset"
+    raise ValueError(f"cannot derive a draft from {type(leaf).__name__}")
+
+
+def derive_draft_tree(registry, serving_tree, params, masks,
+                      draft_ablation: float) -> tuple[dict, dict[str, str]]:
+    """Draft serving pytree for a target plan's ``serving_tree``.
+
+    Returns (draft_tree, per-stack kind report). The draft tree plugs into
+    the same masks slot of the paged decode step; non-stack params
+    (embeddings, norms, attention projections outside the registry) are the
+    model's own and shared by construction.
+    """
+    tree: dict = {}
+    report: dict[str, str] = {}
+    for s in registry:
+        leaf = REG.get_path(serving_tree, s.path)
+        if not isinstance(leaf, F.SparseFormat):
+            raise ValueError(
+                f"stack {s.name!r} serves a raw mask leaf "
+                f"({type(leaf).__name__}); speculative drafting needs a "
+                f"format-typed plan (any engine path except 'masked')")
+        draft, kind = derive_draft_leaf(
+            leaf, REG.get_path(params, s.path), REG.get_path(masks, s.path),
+            draft_ablation)
+        REG.set_path(tree, s.path, draft)
+        report[s.name] = kind
+    return tree, report
+
+
+def draft_weight_overhead_bytes(registry, target_tree,
+                                draft_tree) -> tuple[int, int]:
+    """(shared_bytes, extra_bytes) of VALUE storage in a draft tree.
+
+    ``shared`` counts draft value/scale buffers that are the target's own
+    device arrays (object identity — the zero-weight-residency contract);
+    ``extra`` counts freshly allocated value storage, which the engine
+    asserts to be ZERO. Index/bool metadata (active_index, out_index,
+    neuron_active) is excluded: it is not weight data and is O(d_out) int32
+    per stack against O(d_out * k) values.
+    """
+    shared = extra = 0
+    for s in registry:
+        t = REG.get_path(target_tree, s.path)
+        d = REG.get_path(draft_tree, s.path)
+        target_ids = {id(getattr(t, f)) for f in t._array_fields
+                      if getattr(t, f, None) is not None}
+        for f in ("values", "scales"):
+            arr = getattr(d, f, None)
+            if arr is None:
+                continue
+            nbytes = int(arr.size) * jnp.dtype(arr.dtype).itemsize
+            if id(arr) in target_ids:
+                shared += nbytes
+            else:
+                extra += nbytes
+    return shared, extra
+
+
+def expected_tokens_per_dispatch(acceptance: float, gamma: int) -> float:
+    """E[committed tokens per verify dispatch] under per-token acceptance
+    probability ``acceptance``: 1 + a + a^2 + ... + a^gamma — the standard
+    speculative-decoding expectation (the verify step always commits at
+    least the current token, plus every accepted draft prefix token)."""
+    a = min(max(float(acceptance), 0.0), 1.0)
+    g = max(int(gamma), 0)
+    if a >= 1.0:
+        return float(g + 1)
+    return (1.0 - a ** (g + 1)) / (1.0 - a)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecEstimate:
+    """Priced speculation decision for one plan key.
+
+    All costs are the sparse-stack sums the plan's own decisions are priced
+    with (attention/dense layers cost the same under draft and target and
+    cancel in the comparison; the verify dispatch prices the full network
+    at ``batch * (gamma + 1)`` rows, which upper-bounds its extra cost).
+    """
+    gamma: int
+    acceptance: float            # assumed per-token acceptance (pre-measure)
+    expected_tokens: float       # committed tokens per verify dispatch
+    target_step_s: float         # full-network step at the bucket batch
+    draft_step_s: float          # draft-tree step at the bucket batch
+    verify_s: float              # one (gamma+1)-position verify dispatch
+    @property
+    def spec_s_per_token(self) -> float:
+        return ((self.gamma * self.draft_step_s + self.verify_s)
+                / max(self.expected_tokens, 1e-9))
+    @property
+    def base_s_per_token(self) -> float:
+        return self.target_step_s
+    @property
+    def worthwhile(self) -> bool:
+        return self.spec_s_per_token < self.base_s_per_token
+
+
+def _tree_step_cost(registry, tree, batch: int,
+                    profile: HardwareProfile) -> float:
+    total = 0.0
+    for s in registry:
+        leaf = REG.get_path(tree, s.path)
+        cls, spec = type(leaf), leaf.spec()
+        tp = getattr(leaf, "tp", 1)
+        total += (cls.estimate_cost_sharded(spec, batch, profile, tp)
+                  if tp > 1 else cls.estimate_cost(spec, batch, profile))
+    return total
+
+
+def price_speculation(registry, target_tree, draft_tree, *, batch_size: int,
+                      gamma: int, acceptance: float = 0.7,
+                      profile: HardwareProfile = DEFAULT_PROFILE,
+                      ) -> SpecEstimate:
+    """Expected tokens/dispatch = f(acceptance, gamma) against the cost of
+    gamma draft steps + one batched verify — the pricing ``--path auto``
+    uses to DECLINE speculation when the draft is too slow (sentinel drafts
+    save no compute under the current kernels) or acceptance is assumed too
+    low for the dispatch amortization to win."""
+    b = max(int(batch_size), 1)
+    return SpecEstimate(
+        gamma=int(gamma), acceptance=float(acceptance),
+        expected_tokens=expected_tokens_per_dispatch(acceptance, gamma),
+        target_step_s=_tree_step_cost(registry, target_tree, b, profile),
+        draft_step_s=_tree_step_cost(registry, draft_tree, b, profile),
+        verify_s=_tree_step_cost(registry, target_tree, b * (int(gamma) + 1),
+                                 profile))
+
+
 def abstract_serving_tree(cfg, registry, reps: dict[str, str],
                           param_dtype=None, tp: int = 1) -> dict:
     """ShapeDtypeStruct serving pytree for ``reps`` (no allocation).

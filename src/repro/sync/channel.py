@@ -49,9 +49,11 @@ class _QueueSubscription:
         self._cursor = len(log)
         return new
 
-    def request_resync(self, reason: str = "") -> None:
+    def request_resync(self, reason: str = "",
+                       needed_generation: int | None = None) -> None:
         self._channel._requests.append(
-            {"subscriber": self._name, "reason": reason})
+            {"subscriber": self._name, "reason": reason,
+             "needed_generation": needed_generation})
 
 
 class QueueChannel:
@@ -109,8 +111,10 @@ class _DirSubscription:
                 continue
         return blobs
 
-    def request_resync(self, reason: str = "") -> None:
-        payload = json.dumps({"subscriber": self._name, "reason": reason})
+    def request_resync(self, reason: str = "",
+                       needed_generation: int | None = None) -> None:
+        payload = json.dumps({"subscriber": self._name, "reason": reason,
+                              "needed_generation": needed_generation})
         fname = f"request-{self._name}-{uuid.uuid4().hex}{_REQUEST_SUFFIX}"
         _atomic_write(self._channel.dirpath, fname, payload.encode("utf-8"))
 

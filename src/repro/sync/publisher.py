@@ -58,9 +58,15 @@ class Publisher:
 
     generation: int = dataclasses.field(default=0, init=False)
     last_info: dict = dataclasses.field(default_factory=dict, init=False)
+    counters: dict = dataclasses.field(
+        default_factory=lambda: {"resync_requests": 0,
+                                 "resync_snapshots": 0,
+                                 "resync_coalesced": 0}, init=False)
     _plan: object = dataclasses.field(default=None, init=False)
     _params: object = dataclasses.field(default=None, init=False)
     _masks: object = dataclasses.field(default=None, init=False)
+    _resync_snapshot_gen: int | None = dataclasses.field(default=None,
+                                                         init=False)
 
     def __post_init__(self):
         if self.path not in PUBLISHABLE_PATHS:
@@ -108,13 +114,35 @@ class Publisher:
 
     def serve_resyncs(self) -> int:
         """Answer queued subscriber resync requests with a full Snapshot at
-        the CURRENT generation (idempotent: N requests -> one snapshot)."""
+        the CURRENT generation, coalescing the storm: N requests drained in
+        one poll share ONE snapshot publish, and a request whose missing
+        generation is already covered by a snapshot previously published at
+        the current generation triggers NO publish at all (the record is
+        still on the channel -- ``DirChannel`` pruning always retains the
+        newest snapshot, so a late requester tails it like everyone else).
+        A requester that gaps AGAIN after pruning comes back with a higher
+        ``needed_generation`` and gets a fresh snapshot then. Counters:
+        ``resync_requests`` (drained), ``resync_snapshots`` (published),
+        ``resync_coalesced`` (requests answered without a fresh publish)."""
         requests = self.channel.poll_requests()
         if not requests or self._plan is None:
             return 0
+        self.counters["resync_requests"] += len(requests)
+        covered = self._resync_snapshot_gen
+        if covered is not None and all(
+                r.get("needed_generation") is not None
+                and r["needed_generation"] <= covered
+                for r in requests):
+            self.counters["resync_coalesced"] += len(requests)
+            log.info("sync: resync storm from %s coalesced onto snapshot "
+                     "gen %d already on channel",
+                     [r.get("subscriber") for r in requests], covered)
+            return len(requests)
         log.info("sync: resync requested by %s -> snapshot gen %d",
                  [r.get("subscriber") for r in requests], self.generation)
         self._send_snapshot()
+        self.counters["resync_snapshots"] += 1
+        self.counters["resync_coalesced"] += len(requests) - 1
         return len(requests)
 
     # -- record assembly ----------------------------------------------------
@@ -144,6 +172,7 @@ class Publisher:
                           masks=D.flatten_tree(host["masks"]))
         blob = D.encode(snap)
         self.channel.send(blob, kind="snapshot", generation=self.generation)
+        self._resync_snapshot_gen = self.generation
         return {"kind": "snapshot", "generation": self.generation,
                 "bytes": len(blob),
                 "topology": sorted(versions), "values_only": [],

@@ -146,7 +146,8 @@ class Subscriber:
         self._resync_requested_for.add(needed_gen)
         self.counters["resyncs"] += 1
         self.subscription.request_resync(
-            f"{reason} (subscriber={self.name})")
+            f"{reason} (subscriber={self.name})",
+            needed_generation=needed_gen)
 
     # -- application (all-or-nothing) ---------------------------------------
 

@@ -1,0 +1,293 @@
+"""Self-draft speculative decoding: bitwise token identity with the
+non-speculative greedy engine, under every rollback edge case the paged
+rewind can hit.
+
+The acceptance criteria made executable:
+
+* speculative greedy output is BITWISE identical to plain greedy decode on
+  every format-typed path (the protocol guarantee: verify rewrites every
+  drafted slot with target-weight K/V before attending, commits only the
+  agreed prefix plus the target's own next token);
+* identity survives the rewind edge cases — a draft that is ALWAYS wrong
+  (every round rejects all gamma guesses and commits exactly one token), a
+  pool too starved to grant any overshoot page (draft/verify writes clamp
+  into the garbage page; commits are capped at held-page capacity, i.e.
+  rejection at a page boundary), and mid-generation admission interleaved
+  with speculative rollback rounds;
+* the zero-extra-weight-residency contract: every value buffer of the
+  draft tree IS (by identity) a buffer of the target serving tree;
+* a live-sync weight update adopted between speculative rounds invalidates
+  the cached draft trees and the post-update stream is bitwise identical
+  to a non-speculative engine refreshed at the same committed length.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch import engine as ENG
+from repro.launch import speculative as SP
+from repro.models import model as M
+from repro.models import paged as PG
+from repro.sparse import plan as PLAN
+from repro.sparse import registry as REG
+from repro.sync import DirChannel, Publisher, Subscriber, engine_from_snapshot
+
+
+@pytest.fixture(scope="module")
+def smoke_setup():
+    cfg = configs.get_smoke_config("qwen3-1.7b")
+    key = jax.random.PRNGKey(0)
+    reg = REG.build_registry(cfg)
+    params = M.init_params(cfg, key, REG.k_fan_map(cfg, reg))
+    masks = REG.init_sparsity_state(cfg, key, reg)["masks"]
+    return cfg, reg, params, masks
+
+
+def _prompts(b, t, seed=1, vocab=512):
+    return jax.random.randint(jax.random.PRNGKey(seed), (b, t), 0, vocab)
+
+
+def _serve_one(eng, prompts, gen_len):
+    rid = eng.submit(prompts, gen_len)
+    eng.step()
+    [res] = eng.retire(rid)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# bitwise identity on plain runs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("path", ["condensed", "structured"])
+def test_spec_tokens_bitwise_identical(smoke_setup, path):
+    """Speculative greedy == non-speculative greedy, token for token, and
+    the spec stats land in ``Result.spec`` (fixed path: pricing may not
+    favour the draft at smoke dims, ``force`` runs it anyway)."""
+    cfg, reg, params, masks = smoke_setup
+    prompts = _prompts(2, 8, seed=3, vocab=cfg.vocab_size)
+    base = ENG.ServingEngine(cfg, params, masks, reg, path=path)
+    ref = _serve_one(base, prompts, 10)
+    assert ref.spec is None
+
+    spec = ENG.ServingEngine(
+        cfg, params, masks, reg, path=path,
+        speculative=SP.SpecConfig(gamma=3, draft_ablation=0.5, force=True))
+    res = _serve_one(spec, prompts, 10)
+    assert np.array_equal(np.asarray(res.tokens), np.asarray(ref.tokens))
+    assert res.spec is not None
+    assert res.spec["committed"] == 2 * 10
+    assert res.spec["rounds"] >= 1
+    # every round verifies ONCE for >= 1 committed token per stream
+    assert res.spec["full_dispatches_per_token"] <= 1.0
+
+
+def test_draft_tree_shares_every_value_buffer(smoke_setup):
+    """Zero extra weight residency: the draft plan's value/scale buffers
+    are the target plan's buffers BY IDENTITY, for every stack."""
+    cfg, reg, params, masks = smoke_setup
+    eng = ENG.ServingEngine(
+        cfg, params, masks, reg, path="condensed",
+        speculative=SP.SpecConfig(gamma=2, draft_ablation=0.5, force=True))
+    key = eng.plan_key(2)
+    draft = eng.draft_tree_for(key)
+    assert draft is not None
+    target = eng.serving_tree_for(key)
+    shared, extra = PLAN.draft_weight_overhead_bytes(reg, target, draft)
+    assert extra == 0
+    assert shared > 0
+
+
+# ---------------------------------------------------------------------------
+# rewind edge cases
+# ---------------------------------------------------------------------------
+
+def test_all_gamma_drafts_rejected_every_round(smoke_setup, monkeypatch):
+    """A pathologically wrong draft (its guesses are corrupted after the
+    dispatch) forces the all-reject path: nearly every round commits
+    exactly ONE token (the target's own), the drafted KV is rewound every
+    round, and the output is STILL bitwise identical — speculation must
+    never be able to corrupt the stream, only fail to accelerate it."""
+    cfg, reg, params, masks = smoke_setup
+    prompts = _prompts(2, 8, seed=5, vocab=cfg.vocab_size)
+    base = ENG.ServingEngine(cfg, params, masks, reg, path="condensed")
+    ref = _serve_one(base, prompts, 8)
+
+    real = SP.draft_dispatch
+
+    def bad_draft(cfg_, params_, tree, pool, table, lengths, cur, gamma):
+        drafted, pool, dt, cold = real(cfg_, params_, tree, pool, table,
+                                       lengths, cur, gamma)
+        return (drafted + 1) % cfg_.vocab_size, pool, dt, cold
+
+    monkeypatch.setattr(ENG.SP, "draft_dispatch", bad_draft)
+    spec = ENG.ServingEngine(
+        cfg, params, masks, reg, path="condensed",
+        speculative=SP.SpecConfig(gamma=3, draft_ablation=0.5, force=True))
+    res = _serve_one(spec, prompts, 8)
+    assert np.array_equal(np.asarray(res.tokens), np.asarray(ref.tokens))
+    # the corrupted draft tokens (x+1 mod V) almost never coincide with the
+    # target's argmax: acceptance collapses and rounds approach one-per-token
+    assert res.spec["acceptance_rate"] < 0.2
+    assert res.spec["rounds"] >= 8 - 1
+
+
+def test_overshoot_into_garbage_page_and_boundary_rejection(smoke_setup,
+                                                            monkeypatch):
+    """Starve the allocator after admission so NO overshoot page is ever
+    granted: with block_size=2 the gamma+1 verify window is guaranteed to
+    overrun the held pages in the final rounds — writes clamp into the
+    garbage page, the commit is capped at held capacity (a rejection
+    pinned exactly at the page boundary, down to the commit-one floor),
+    and the stream must still finish bitwise identical."""
+    cfg, reg, params, masks = smoke_setup
+    prompts = _prompts(2, 8, seed=7, vocab=cfg.vocab_size)
+    base = ENG.ServingEngine(cfg, params, masks, reg, path="condensed",
+                             block_size=2)
+    ref = _serve_one(base, prompts, 6)
+
+    real_alloc = PG.BlockAllocator.alloc
+    admissions = {"left": 2}            # one alloc call per admitted row
+
+    def starved(self, n):
+        if admissions["left"] <= 0:
+            raise RuntimeError("paged KV pool exhausted (test starvation)")
+        admissions["left"] -= 1
+        return real_alloc(self, n)
+
+    monkeypatch.setattr(PG.BlockAllocator, "alloc", starved)
+    spec = ENG.ServingEngine(
+        cfg, params, masks, reg, path="condensed", block_size=2,
+        speculative=SP.SpecConfig(gamma=3, draft_ablation=0.5, force=True))
+    res = _serve_one(spec, prompts, 6)
+    assert np.array_equal(np.asarray(res.tokens), np.asarray(ref.tokens))
+    # capacity capping costs extra rounds but never correctness
+    assert res.spec["committed"] == 2 * 6
+
+
+def test_mid_generation_admission_interleaves_with_rollback(smoke_setup):
+    """A second request is admitted BETWEEN speculative rounds of the
+    first (continuous batching: ``max_chunks=1`` hands control back after
+    every round). Admission must not disturb in-flight rollback state and
+    both streams finish bitwise identical to the plain engine."""
+    cfg, reg, params, masks = smoke_setup
+    pa = _prompts(1, 8, seed=11, vocab=cfg.vocab_size)
+    pb = _prompts(1, 8, seed=13, vocab=cfg.vocab_size)
+
+    base = ENG.ServingEngine(cfg, params, masks, reg, path="condensed")
+    ra = _serve_one(base, pa, 10)
+    rb = _serve_one(base, pb, 6)
+
+    spec = ENG.ServingEngine(
+        cfg, params, masks, reg, path="condensed",
+        speculative=SP.SpecConfig(gamma=3, draft_ablation=0.5, force=True))
+    rid_a = spec.submit(pa, 10)
+    spec.step(max_chunks=2)             # a mid-generation, rollbacks live
+    rid_b = spec.submit(pb, 6)          # joins at the next round boundary
+    for _ in range(32):
+        spec.step(max_chunks=1)
+        if len(spec._done) == 2:
+            break
+    [res_a] = spec.retire(rid_a)
+    [res_b] = spec.retire(rid_b)
+    assert np.array_equal(np.asarray(res_a.tokens), np.asarray(ra.tokens))
+    assert np.array_equal(np.asarray(res_b.tokens), np.asarray(rb.tokens))
+
+
+# ---------------------------------------------------------------------------
+# live-sync interleaving
+# ---------------------------------------------------------------------------
+
+def test_sync_update_between_spec_rounds_stays_bitwise(smoke_setup,
+                                                       tmp_path):
+    """A published weight update adopted between speculative rounds: the
+    cached draft trees are invalidated BEFORE the donation runs, the draft
+    re-derives from the new serving tree, and the full stream is bitwise
+    identical to a NON-speculative engine refreshed with the same weights
+    at the same committed length."""
+    cfg, reg, params, masks = smoke_setup
+    versions = {s.name: 0 for s in reg}
+    prompts = _prompts(2, 8, seed=17, vocab=cfg.vocab_size)
+    ch = DirChannel(str(tmp_path))
+    pub = Publisher(cfg, reg, ch, path="condensed", batch_size=2)
+    pub.publish(params=params, masks=masks, mask_versions=versions)
+
+    sub = Subscriber(ch.subscribe("r0"))
+    eng = engine_from_snapshot(
+        cfg, sub, registry=reg,
+        speculative=SP.SpecConfig(gamma=3, draft_ablation=0.5, force=True))
+    rid = eng.submit(prompts, 16)
+    eng.step(max_chunks=2)              # two spec rounds on gen-1 weights
+    key = eng.plan_key(prompts.shape[0])
+    runner = eng._runners[key]
+    committed = int(runner.lengths[runner.active[rid].rows[0]]) - 8
+    assert 2 <= committed <= 8
+    old_draft = eng.draft_tree_for(key)
+    assert old_draft is not None
+
+    # publish a topology + values update; the engine adopts it at the next
+    # round boundary inside step()
+    s0 = reg[0]
+    masks2 = jax.tree_util.tree_map(lambda x: x, masks)
+    REG.set_path(masks2, s0.path,
+                 jnp.roll(REG.get_path(masks2, s0.path), 1, axis=-2))
+    params2 = jax.tree_util.tree_map(
+        lambda x: x * 1.01 if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params)
+    versions2 = dict(versions)
+    versions2[s0.name] += 1
+    pub.publish(params=params2, masks=masks2, mask_versions=versions2)
+    eng.step()
+    [res] = eng.retire(rid)
+    assert eng._sync_generation == 2
+    assert eng.draft_tree_for(key) is not old_draft   # re-derived post-sync
+    assert res.spec["committed"] == 2 * 16
+
+    # reference: NON-speculative engine, gen_chunk=1 so the refresh lands
+    # at exactly the same committed length
+    eng2 = ENG.ServingEngine(cfg, params, masks, reg, path="condensed",
+                             mask_versions=dict(versions), gen_chunk=1)
+    rid2 = eng2.submit(prompts, 16)
+    eng2.step(max_chunks=committed)
+    eng2.refresh(params2, masks2, versions2, donate=False)
+    eng2.step()
+    [res2] = eng2.retire(rid2)
+    assert res2.spec is None
+    assert np.array_equal(np.asarray(res.tokens), np.asarray(res2.tokens))
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+
+def test_speculative_rejects_masked_and_unpaged(smoke_setup):
+    cfg, reg, params, masks = smoke_setup
+    sc = SP.SpecConfig(gamma=2, draft_ablation=0.5)
+    with pytest.raises(ValueError, match="masked"):
+        ENG.ServingEngine(cfg, params, masks, reg, path="masked",
+                          speculative=sc)
+    with pytest.raises(ValueError, match="paged"):
+        ENG.ServingEngine(cfg, params, masks, reg, path="condensed",
+                          paged=False, speculative=sc)
+
+
+def test_auto_path_can_decline_speculation(smoke_setup):
+    """``--path auto`` without force: the cost model prices the draft
+    against the target (at smoke dims lane padding makes the draft no
+    cheaper), declines, and the engine serves plain decode — with the
+    estimate still inspectable."""
+    cfg, reg, params, masks = smoke_setup
+    eng = ENG.ServingEngine(
+        cfg, params, masks, reg, path="auto",
+        speculative=SP.SpecConfig(gamma=3, draft_ablation=0.5, force=False))
+    prompts = _prompts(2, 8, seed=19, vocab=cfg.vocab_size)
+    res = _serve_one(eng, prompts, 6)
+    est = eng.spec_estimate_for(res.plan_key)
+    assert est is not None
+    if eng.draft_tree_for(res.plan_key) is None:
+        assert not est.worthwhile
+        assert res.spec is None
+    else:
+        assert res.spec is not None

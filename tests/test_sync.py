@@ -198,7 +198,7 @@ def test_corrupt_and_truncated_blobs_rejected():
         def recv_new(self):
             out, self._b = self._b, []
             return out
-        def request_resync(self, reason): pass
+        def request_resync(self, reason, needed_generation=None): pass
     sub = Subscriber(_Feed([bytes(bad), blob]))
     sub.poll()
     assert sub.counters["corrupt"] == 1
@@ -219,7 +219,8 @@ class _ScriptedFeed:
         out, self.queue = self.queue, []
         return out
 
-    def request_resync(self, reason: str = ""):
+    def request_resync(self, reason: str = "",
+                       needed_generation: int | None = None):
         self.resyncs.append(reason)
 
 
@@ -401,6 +402,62 @@ def test_dir_channel_pubsub_and_pruned_gap_resync(tmp_path):
     sub.poll()
     assert sub.generation == pub.generation
     assert _leaves_bitwise_equal(sub, pub, reg)
+
+
+def test_resync_storm_coalesces_to_one_snapshot():
+    """A fleet-wide resync storm (N replicas missing the same generation)
+    costs ONE snapshot publish; stragglers asking for an already-covered
+    generation cost ZERO. The publisher counters prove the accounting and a
+    late subscriber still converges bitwise off the coalesced snapshot."""
+    rng = np.random.default_rng(7)
+    reg = _tiny_registry()
+    params = _random_params(reg, rng)
+    masks = _random_masks(reg, rng)
+    versions = {s.name: 0 for s in reg}
+    ch = QueueChannel()
+    pub = Publisher(_Cfg(), reg, ch, path="condensed")
+    pub.publish(params=params, masks=masks, mask_versions=versions)
+    params, masks, changed = _evolve(reg, params, masks, rng)
+    for name in changed:
+        versions[name] += 1
+    pub.publish(params=params, masks=masks, mask_versions=versions)
+    assert pub.generation == 2
+
+    # storm: 8 replicas all gap on generation 2 at once
+    sends0 = len(ch._log)
+    for i in range(8):
+        ch.subscribe(f"r{i}").request_resync(
+            "gap at generation 2", needed_generation=2)
+    assert pub.serve_resyncs() == 8
+    assert pub.counters == {"resync_requests": 8, "resync_snapshots": 1,
+                            "resync_coalesced": 7}
+    assert len(ch._log) == sends0 + 1      # exactly one record hit the wire
+
+    # stragglers for the SAME missing generation arrive after the publish:
+    # the snapshot already on the channel covers them -> no new publish
+    for i in range(8, 12):
+        ch.subscribe(f"r{i}").request_resync(
+            "gap at generation 2", needed_generation=2)
+    assert pub.serve_resyncs() == 4
+    assert pub.counters["resync_snapshots"] == 1
+    assert pub.counters["resync_coalesced"] == 11
+    assert len(ch._log) == sends0 + 1
+
+    # a gap at a NEWER generation is NOT covered -> fresh snapshot
+    params, masks, changed = _evolve(reg, params, masks, rng)
+    for name in changed:
+        versions[name] += 1
+    pub.publish(params=params, masks=masks, mask_versions=versions)
+    ch.subscribe("r0").request_resync(
+        "gap at generation 3", needed_generation=3)
+    assert pub.serve_resyncs() == 1
+    assert pub.counters["resync_snapshots"] == 2
+
+    # convergence off the coalesced stream
+    late = Subscriber(ch.subscribe("late"), name="late")
+    late.poll()
+    assert late.generation == pub.generation
+    assert _leaves_bitwise_equal(late, pub, reg)
 
 
 # ---------------------------------------------------------------------------
